@@ -1,0 +1,73 @@
+"""Shared benchmark utilities: datasets, timed OBP runs, result records.
+
+The container is offline (no MNIST/UCI), so the paper's tables are
+reproduced on synthetic datasets spanning the same regimes: clustered
+(gaussian mixture), imbalanced heavy-tail, and higher-dimensional blobs.
+Scales are CPU-budgeted; the qualitative claims under test are listed in
+EXPERIMENTS.md §Paper-claims.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, sampling, solver
+from repro.data.embeddings import gaussian_mixture, heavy_tail
+
+SMALL_DATASETS = {
+    "blobs3k": lambda seed: gaussian_mixture(3000, 16, centers=25, seed=seed),
+    "heavy3k": lambda seed: heavy_tail(3000, 32, seed=seed),
+    "wide2k": lambda seed: gaussian_mixture(2000, 64, centers=15, seed=seed),
+}
+LARGE_DATASETS = {
+    "blobs30k": lambda seed: gaussian_mixture(30_000, 16, centers=40,
+                                              seed=seed),
+    "heavy20k": lambda seed: heavy_tail(20_000, 24, seed=seed),
+}
+
+
+@dataclasses.dataclass
+class Run:
+    method: str
+    dataset: str
+    k: int
+    seconds: float
+    objective: float
+    n_dissim: int
+
+
+def run_obp(x: np.ndarray, k: int, variant: str, seed: int,
+            m: int | None = None, strategy: str = "batched") -> Run:
+    xj = jnp.asarray(x)
+    n = x.shape[0]
+    m = m or min(sampling.default_batch_size(n, k), n // 2)
+    key = jax.random.PRNGKey(seed)
+
+    def go():
+        res, _ = solver.one_batch_pam(key, xj, k, m=m, variant=variant,
+                                      strategy=strategy, backend="ref")
+        return res.medoid_idx.block_until_ready()
+
+    go()  # compile
+    t0 = time.perf_counter()
+    med = go()
+    dt = time.perf_counter() - t0
+    obj = float(solver.objective(xj, med, backend="ref"))
+    return Run(f"obp-{variant}" + ("" if strategy == "batched" else
+                                   f"-{strategy}"),
+               "", k, dt, obj, n * m)
+
+
+def run_baseline(name: str, x: np.ndarray, k: int, seed: int, **kw) -> Run:
+    oracle = baselines.Oracle(x, metric="l1")
+    fn = baselines.ALL_BASELINES[name]
+    res = fn(np.random.default_rng(seed), oracle, k, **kw)
+    return Run(name, "", k, res.seconds, res.objective, res.n_dissim)
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,37 @@
+"""Paper Figure 1: runtime/objective evolution vs n (k fixed) and vs k
+(n fixed) for the five headline competitors."""
+from __future__ import annotations
+
+from benchmarks.common import csv_line, run_baseline, run_obp
+from repro.data.embeddings import gaussian_mixture
+
+
+def run() -> list[str]:
+    lines = []
+    # left panel: vs n at k=10
+    for n in (1000, 2000, 4000, 8000):
+        x = gaussian_mixture(n, 16, centers=20, seed=0)
+        rows = {
+            "kmeans_pp": run_baseline("kmeans_pp", x, 10, 0),
+            "clara-5": run_baseline("clara", x, 10, 0, repeats=5),
+            "obp-nniw": run_obp(x, 10, "nniw", 0),
+        }
+        if n <= 4000:  # FasterPAM infeasible past this scale on CPU here
+            rows["fasterpam"] = run_baseline("fasterpam", x, 10, 0)
+            rows["banditpam_lite"] = run_baseline("banditpam_lite", x, 10, 0)
+        for name, r in rows.items():
+            lines.append(csv_line(f"fig1/vs_n/{name}/n{n}", r.seconds * 1e6,
+                                  f"obj={r.objective:.4f}"))
+    # right panel: vs k at n=3000
+    x = gaussian_mixture(3000, 16, centers=40, seed=0)
+    for k in (5, 10, 25, 50):
+        rows = {
+            "kmeans_pp": run_baseline("kmeans_pp", x, k, 0),
+            "clara-5": run_baseline("clara", x, k, 0, repeats=5),
+            "obp-nniw": run_obp(x, k, "nniw", 0),
+            "fasterpam": run_baseline("fasterpam", x, k, 0),
+        }
+        for name, r in rows.items():
+            lines.append(csv_line(f"fig1/vs_k/{name}/k{k}", r.seconds * 1e6,
+                                  f"obj={r.objective:.4f}"))
+    return lines

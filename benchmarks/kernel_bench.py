@@ -1,0 +1,55 @@
+"""Kernel-layer microbenchmarks (ours): the n x m distance block and the
+fused swap-gain sweep. On this CPU container we time the jnp reference
+paths (naive vs tiled) and report the arithmetic quantities the Pallas
+kernels are tiled around; TPU wall-time comes from the roofline analysis."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_line
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> list[str]:
+    lines = []
+    key = jax.random.PRNGKey(0)
+    n, m, p, k = 32_768, 512, 64, 64
+    x = jax.random.normal(key, (n, p))
+    b = x[:m]
+
+    naive = jax.jit(ref.pairwise_l1)
+    tiled = jax.jit(lambda a, c: ref.pairwise_l1_chunked(a, c))
+    t_naive = _time(naive, x, b)
+    t_tiled = _time(tiled, x, b)
+    flops = 3 * n * m * p
+    lines.append(csv_line("kernel/pairwise_l1/naive", t_naive * 1e6,
+                          f"gflops={flops/t_naive/1e9:.2f}"))
+    lines.append(csv_line("kernel/pairwise_l1/tiled", t_tiled * 1e6,
+                          f"gflops={flops/t_tiled/1e9:.2f}"))
+
+    d = naive(x, b)
+    d1 = d.min(axis=0) + 0.1
+    d2 = d1 + 0.5
+    nh = jax.nn.one_hot(jnp.zeros(m, jnp.int32), k)
+    sg = jax.jit(lambda *a: ref.swap_gain(*a))
+    t_sg = _time(sg, d, d1, d2, nh)
+    bytes_touched = d.size * 4 * 2 + n * k * 4
+    lines.append(csv_line("kernel/swap_gain/sweep", t_sg * 1e6,
+                          f"gbps={bytes_touched/t_sg/1e9:.2f}"))
+
+    t_l2 = _time(jax.jit(lambda a, c: ref.pairwise_l2(a, c)), x, b)
+    lines.append(csv_line("kernel/pairwise_l2/mxu_form", t_l2 * 1e6,
+                          f"gflops={2*n*m*p/t_l2/1e9:.2f}"))
+    return lines

@@ -1,0 +1,39 @@
+"""Paper Appendix D: time/objective Pareto fronts. Reports which methods
+are Pareto-optimal per dataset (paper: k-means++, FasterCLARA-5,
+OBP-nniw, FasterPAM on small scale)."""
+from __future__ import annotations
+
+from benchmarks.common import SMALL_DATASETS, csv_line, run_baseline, run_obp
+
+
+def _pareto(points: dict) -> set:
+    opt = set()
+    for a, (ta, oa) in points.items():
+        dominated = any(tb <= ta and ob <= oa and (tb < ta or ob < oa)
+                        for b, (tb, ob) in points.items() if b != a)
+        if not dominated:
+            opt.add(a)
+    return opt
+
+
+def run() -> list[str]:
+    lines = []
+    for ds, make in SMALL_DATASETS.items():
+        x = make(seed=0)
+        k = 10
+        runs = {
+            "fasterpam": run_baseline("fasterpam", x, k, 0),
+            "clara-5": run_baseline("clara", x, k, 0, repeats=5),
+            "kmeans_pp": run_baseline("kmeans_pp", x, k, 0),
+            "obp-nniw": run_obp(x, k, "nniw", 0),
+            "random": run_baseline("random", x, k, 0),
+        }
+        points = {m: (r.seconds, r.objective) for m, r in runs.items()}
+        front = _pareto(points)
+        for m, r in runs.items():
+            lines.append(csv_line(
+                f"pareto/{ds}/{m}", r.seconds * 1e6,
+                f"obj={r.objective:.4f};on_front={m in front}"))
+        lines.append(csv_line(f"pareto/{ds}/front", 0.0,
+                              "front=" + "|".join(sorted(front))))
+    return lines

@@ -1,0 +1,38 @@
+"""Roofline summary from the dry-run artifacts (launch/dryrun.py must have
+been run; EXPERIMENTS.md §Roofline is generated from the same JSONs)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv_line
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                         "dryrun")
+
+
+def run() -> list[str]:
+    lines = []
+    files = sorted(glob.glob(os.path.join(ARTIFACTS, "*.json")))
+    files = [f for f in files if not f.endswith("skips.json")]
+    if not files:
+        return [csv_line("roofline/missing", 0.0,
+                         "run `python -m repro.launch.dryrun --all` first")]
+    for f in files:
+        d = json.load(open(f))
+        rl = d["roofline"]
+        mem = d["memory"]
+        name = f'{d["arch"]}/{d["shape"]}/{d["mesh"]}'
+        hbm_gb = ((mem["argument_bytes"] or 0) + (mem["temp_bytes"] or 0)) / 2**30
+        lines.append(csv_line(
+            f"roofline/{name}", rl["step_s"] * 1e6,
+            f"bottleneck={rl['bottleneck']};mfu={rl['mfu']:.4f};"
+            f"useful={rl['useful_ratio']:.3f};hbm_gb={hbm_gb:.2f}"))
+    skips = os.path.join(ARTIFACTS, "skips.json")
+    if os.path.exists(skips):
+        for s in json.load(open(skips)):
+            lines.append(csv_line(
+                f"roofline/{s['arch']}/{s['shape']}/{s['mesh']}", 0.0,
+                "SKIP=" + s["skip"].replace(",", ";")))
+    return lines

@@ -1,0 +1,45 @@
+"""Benchmark driver: one module per paper table/figure (+ ours).
+Prints ``name,us_per_call,derived`` CSV. Select with --only."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,table3,fig1,pareto,kernel,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import (fig1_scaling, kernel_bench, pareto,
+                            roofline_report, table1_complexity,
+                            table3_quality, theorem1)
+    suites = {
+        "table1": table1_complexity.run,
+        "table3": table3_quality.run,
+        "fig1": fig1_scaling.run,
+        "pareto": pareto.run,
+        "theorem1": theorem1.run,
+        "kernel": kernel_bench.run,
+        "roofline": roofline_report.run,
+    }
+    selected = (args.only.split(",") if args.only else list(suites))
+    print("name,us_per_call,derived")
+    failed = False
+    for name in selected:
+        t0 = time.perf_counter()
+        try:
+            for line in suites[name]():
+                print(line)
+        except AssertionError as e:  # claim-check failures are visible
+            print(f"{name}/ASSERTION,0.0,failed={e}")
+            failed = True
+        print(f"{name}/total,{(time.perf_counter() - t0) * 1e6:.0f},done")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Paper Table 1: dissimilarity-computation counts vs theory.
+
+Measures the number of pairwise dissimilarity evaluations each algorithm
+performs (the quantity Table 1 bounds) and the empirical scaling exponent
+in n, confirming: FasterPAM ~ n^2, OneBatchPAM ~ n log n, k-means++ ~ kn,
+FasterCLARA ~ I(m^2 + kn), banditpam-lite ~ T n log n.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from benchmarks.common import csv_line, run_baseline, run_obp
+from repro.data.embeddings import gaussian_mixture
+
+NS = (1000, 2000, 4000)
+K = 10
+
+
+def run() -> list[str]:
+    lines = []
+    counts: dict = {}
+    for n in NS:
+        x = gaussian_mixture(n, 16, centers=20, seed=0)
+        rows = {
+            "fasterpam": run_baseline("fasterpam", x, K, 0),
+            "clara": run_baseline("clara", x, K, 0),
+            "kmeans_pp": run_baseline("kmeans_pp", x, K, 0),
+            "banditpam_lite": run_baseline("banditpam_lite", x, K, 0),
+            "obp-nniw": run_obp(x, K, "nniw", 0),
+        }
+        for name, r in rows.items():
+            counts.setdefault(name, []).append(r.n_dissim)
+            lines.append(csv_line(
+                f"table1/{name}/n{n}", r.seconds * 1e6,
+                f"dissim={r.n_dissim};obj={r.objective:.4f}"))
+    # empirical scaling exponent between first and last n
+    for name, c in counts.items():
+        slope = math.log(c[-1] / c[0]) / math.log(NS[-1] / NS[0])
+        lines.append(csv_line(f"table1/{name}/exponent", 0.0,
+                              f"n_scaling_exp={slope:.2f}"))
+    # theory checks (paper sets m = 100*log(k*n) => counts ~ 100 n log(kn))
+    n = NS[-1]
+    assert counts["fasterpam"][-1] >= n * n, "fasterpam must be O(n^2)"
+    bound = 110 * n * math.log(K * n)
+    assert counts["obp-nniw"][-1] <= bound, \
+        f"obp {counts['obp-nniw'][-1]} > {bound:.0f}"
+    assert counts["kmeans_pp"][-1] <= 2 * K * n, "kmeans++ must be O(kn)"
+    return lines

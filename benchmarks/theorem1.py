@@ -1,0 +1,68 @@
+"""Theorem 1, empirically: P(OneBatchPAM returns FasterPAM's medoids)
+as a function of the batch size m — the paper's central guarantee says
+m = O(log n) suffices for agreement with high probability, reaching
+certainty at m = n (the estimate becomes exact).
+
+Protocol: same dataset, same random init, same candidate order for both
+solvers (eager/first-improvement); OBP uses an unweighted uniform batch.
+Also reports the m-sensitivity of the objective around the paper's
+m = 100*log(k*n) heuristic (n = 4000)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_line
+from repro.core import baselines, solver
+from repro.data.embeddings import gaussian_mixture
+from repro.kernels import ops
+
+
+def run() -> list[str]:
+    lines = []
+
+    # --- agreement probability vs m (small n: exact FasterPAM feasible)
+    n, k, p, seeds = 240, 4, 6, 10
+    for m in (8, 16, 32, 64, 128, n):
+        matches, dro = 0, []
+        for s in range(seeds):
+            rng = np.random.default_rng(s)
+            x = jnp.asarray(gaussian_mixture(n, p, centers=k, seed=s))
+            d_full = ops.pairwise_distance(x, x, metric="l1", backend="ref")
+            init = rng.choice(n, size=k, replace=False)
+            ref = baselines._eager_pam(np.asarray(d_full), init)
+
+            bidx = rng.choice(n, size=m, replace=False)
+            d_b = np.asarray(d_full)[:, bidx]
+            res = solver.solve_eager(jnp.asarray(d_b), jnp.asarray(init))
+            got = np.sort(np.asarray(res.medoid_idx))
+            matches += int(np.array_equal(got, np.sort(ref)))
+
+            obj_got = float(np.asarray(d_full)[got].min(0).mean())
+            obj_ref = float(np.asarray(d_full)[np.sort(ref)].min(0).mean())
+            dro.append(obj_got / obj_ref - 1)
+        lines.append(csv_line(
+            f"theorem1/agree/m{m}", 0.0,
+            f"p_match={matches/seeds:.2f};mean_dRO={np.mean(dro)*100:.2f}%"))
+    # the limit case must be exact (same swaps, Theorem 1 with m = n)
+    assert "p_match=1.00" in lines[-1], lines[-1]
+
+    # --- m-sensitivity of the objective at n = 4000 (batched solver)
+    n2, k2 = 4000, 10
+    x2 = jnp.asarray(gaussian_mixture(n2, 16, centers=20, seed=0))
+    m_paper = int(100 * math.log(k2 * n2))
+    for m in (50, 100, 200, 400, 800, m_paper):
+        objs = []
+        for s in range(3):
+            res, _ = solver.one_batch_pam(
+                __import__("jax").random.PRNGKey(s), x2, k2, m=m,
+                variant="nniw", backend="ref")
+            objs.append(float(solver.objective(x2, res.medoid_idx,
+                                               backend="ref")))
+        tag = " (paper heuristic)" if m == m_paper else ""
+        lines.append(csv_line(
+            f"theorem1/m_sens/m{m}", 0.0,
+            f"obj={np.mean(objs):.4f};std={np.std(objs):.4f}{tag}"))
+    return lines

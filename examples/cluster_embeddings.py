@@ -1,0 +1,67 @@
+"""Large-scale OneBatchPAM: the paper's workload at 200k points, all four
+batch variants, plus the distributed (shard_map) solver on host devices.
+
+    PYTHONPATH=src python examples/cluster_embeddings.py
+    # distributed path (8 forced host devices):
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/cluster_embeddings.py --distributed
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MedoidSelector, sampling, solver
+from repro.data import heavy_tail
+
+N, P, K = 200_000, 24, 64
+
+
+def single_process():
+    x = heavy_tail(N, P, seed=0)
+    print(f"== OneBatchPAM variants on {N} x {P} (k={K}) ==")
+    m = sampling.default_batch_size(N, K)
+    print(f"batch size m = 100*log(k*n) = {m}  "
+          f"({N * m:,} distance evals vs n^2 = {N * N:,})")
+    for variant in sampling.VARIANTS:
+        t0 = time.perf_counter()
+        sel = MedoidSelector(k=K, variant=variant, seed=0).fit(x)
+        dt = time.perf_counter() - t0
+        print(f"{variant:7s}: obj={sel.objective(x):.4f} time={dt:5.1f}s "
+              f"swaps={sel.n_swaps_}")
+
+
+def distributed():
+    from jax.sharding import NamedSharding, PartitionSpec as P_
+    from repro.core.distributed import make_distributed_obp
+
+    n_dev = jax.device_count()
+    assert n_dev >= 4, "run with XLA_FLAGS=--xla_force_host_platform_device_count=8"
+    mesh = jax.make_mesh((n_dev // 2, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    x = heavy_tail(N, P + 8, seed=0)  # p=32, divisible by model axis
+    rng = np.random.default_rng(0)
+    m = sampling.default_batch_size(N, K)
+    batch_idx = jnp.asarray(rng.choice(N, m, replace=False))
+    weights = jnp.ones((m,), jnp.float32)
+    init = jnp.asarray(rng.choice(N, K, replace=False))
+
+    run = make_distributed_obp(mesh, k=K, metric="l1")
+    xs = jax.device_put(jnp.asarray(x),
+                        NamedSharding(mesh, P_(("data",), "model")))
+    t0 = time.perf_counter()
+    res = run(xs, batch_idx, weights, init)
+    jax.block_until_ready(res)
+    dt = time.perf_counter() - t0
+    obj = float(solver.objective(jnp.asarray(x), res.medoid_idx))
+    print(f"distributed OBP on {n_dev} devices: obj={obj:.4f} "
+          f"time={dt:.1f}s swaps={int(res.n_swaps)}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--distributed", action="store_true")
+    args = ap.parse_args()
+    distributed() if args.distributed else single_process()

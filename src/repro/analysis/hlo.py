@@ -1,0 +1,397 @@
+"""Loop-aware cost model over optimized (post-SPMD) HLO text.
+
+Why: ``compiled.cost_analysis()`` visits each instruction once — a 94-layer
+model expressed as ``lax.scan`` reports 1/47th of its real FLOPs, and
+collectives inside the scan body (FSDP all-gathers!) vanish from any naive
+sum. This parser rebuilds per-device costs with while-loop bodies expanded
+by their trip counts (read from XLA's ``known_trip_count`` backend config,
+with a fallback to the loop-condition constant).
+
+Costs are PER DEVICE (the compiled module is the partitioned one):
+  flops            — 2*M*N*K for dots (batch dims included); elementwise
+                     ops contribute #result elements (noise next to dots).
+  hbm_bytes        — operand+result bytes at fusion boundaries (inner
+                     fused instructions stay in registers/VMEM).
+  collectives      — per class: operand bytes (the spec's definition) and
+                     modeled ring wire bytes/device; DCN-crossing groups
+                     (multi-pod) are flagged when group membership is
+                     explicit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_INST_RE = re.compile(
+    r"^\s*(ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\((.*)$")
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute", "collective-broadcast")
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _first_shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    result_type: str
+    op: str
+    rest: str          # operand list + attributes (raw tail of the line)
+    is_root: bool = False
+
+    def operand_refs(self):
+        return _OPERAND_RE.findall(self.rest.split("), ")[0])
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_operand_bytes: float = 0.0
+    coll_wire_bytes: float = 0.0
+    dcn_wire_bytes: float = 0.0
+    coll_by_op: dict = dataclasses.field(default_factory=dict)
+    warnings: list = dataclasses.field(default_factory=list)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.coll_operand_bytes += other.coll_operand_bytes * mult
+        self.coll_wire_bytes += other.coll_wire_bytes * mult
+        self.dcn_wire_bytes += other.dcn_wire_bytes * mult
+        for k, v in other.coll_by_op.items():
+            cur = self.coll_by_op.get(k, [0.0, 0.0, 0])
+            self.coll_by_op[k] = [cur[0] + v[0] * mult,
+                                  cur[1] + v[1] * mult,
+                                  cur[2] + int(v[2] * mult)]
+        self.warnings.extend(w for w in other.warnings
+                             if w not in self.warnings)
+
+
+def parse_computations(hlo_text: str):
+    """-> (computations: name -> [Instruction], entry_name)."""
+    comps: dict = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                name = m.group(2)
+                comps[name] = []
+                cur = name
+                if m.group(1):
+                    entry = name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INST_RE.match(line)
+        if m:
+            comps[cur].append(Instruction(m.group(2), m.group(3),
+                                          m.group(4), m.group(5),
+                                          is_root=bool(m.group(1))))
+    return comps, entry
+
+
+def _group_info(rest: str, num_pods_boundary: int | None):
+    """-> (group_size, crosses_dcn or None-if-unknown)."""
+    m = _GROUPS_RE.search(rest)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",") if x]
+        crosses = None
+        if num_pods_boundary:
+            pods = {i // num_pods_boundary for i in ids}
+            crosses = len(pods) > 1
+        return max(len(ids), 1), crosses
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        # iota form [num_groups, group_size]<=[total]...
+        return max(int(m.group(2)), 1), None
+    return 1, None
+
+
+def _wire_bytes(op: str, operand_bytes: float, result_bytes: float,
+                n: int) -> float:
+    if op.startswith("collective-permute"):
+        return operand_bytes          # point-to-point: group size n/a
+    if n <= 1:
+        return 0.0
+    if op.startswith("all-reduce"):
+        return 2.0 * operand_bytes * (n - 1) / n
+    if op.startswith("all-gather"):
+        return result_bytes * (n - 1) / n
+    if op.startswith("reduce-scatter"):
+        return operand_bytes * (n - 1) / n
+    if op.startswith("all-to-all"):
+        return operand_bytes * (n - 1) / n
+    if op.startswith("collective-permute"):
+        return operand_bytes
+    return operand_bytes
+
+
+class HloCost:
+    def __init__(self, hlo_text: str, *, pod_size: int | None = None):
+        self.comps, self.entry = parse_computations(hlo_text)
+        self.pod_size = pod_size
+        self._symtab = {
+            name: {i.name: i.result_type for i in insts}
+            for name, insts in self.comps.items()
+        }
+        self._memo: dict = {}
+
+    def _operand_types(self, comp: str, inst: Instruction):
+        tab = self._symtab[comp]
+        head = inst.rest.split("), ")[0]
+        return [tab.get(ref) for ref in _OPERAND_RE.findall(head)
+                if tab.get(ref)]
+
+    def cost(self, comp: str | None = None, *, _in_fusion=False) -> Cost:
+        comp = comp or self.entry
+        key = (comp, _in_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost()
+        for inst in self.comps.get(comp, []):
+            total.add(self._inst_cost(comp, inst, _in_fusion))
+        self._memo[key] = total
+        return total
+
+    def _inst_cost(self, comp: str, inst: Instruction,
+                   in_fusion: bool) -> Cost:
+        c = Cost()
+        op = inst.op
+        res_bytes = shape_bytes(inst.result_type)
+        res_elems = shape_elems(inst.result_type)
+
+        if op == "while":
+            m = _TRIP_RE.search(inst.rest)
+            trip = int(m.group(1)) if m else None
+            body = _BODY_RE.search(inst.rest)
+            cond = _COND_RE.search(inst.rest)
+            if trip is None and cond:
+                trip = self._trip_from_cond(cond.group(1))
+            if trip is None:
+                trip = 1
+                c.warnings.append(f"while {inst.name}: unknown trip count")
+            if body:
+                c.add(self.cost(body.group(1)), trip)
+            if cond:
+                c.add(self.cost(cond.group(1)), trip)
+            return c
+
+        if op in ("call", "conditional"):
+            m = _TO_APPLY_RE.search(inst.rest)
+            if m:
+                c.add(self.cost(m.group(1)))
+            return c
+
+        if op == "fusion":
+            m = _CALLS_RE.search(inst.rest)
+            called = m.group(1) if m else None
+            if called:
+                inner = self.cost(called, _in_fusion=True)
+                c.flops += inner.flops
+                c.add(Cost(coll_operand_bytes=inner.coll_operand_bytes,
+                           coll_wire_bytes=inner.coll_wire_bytes,
+                           dcn_wire_bytes=inner.dcn_wire_bytes,
+                           coll_by_op=inner.coll_by_op))
+                c.hbm_bytes += self._fusion_io_bytes(comp, inst, called,
+                                                     res_bytes)
+            else:
+                op_bytes = sum(shape_bytes(t)
+                               for t in self._operand_types(comp, inst))
+                c.hbm_bytes += res_bytes + op_bytes
+            return c
+
+        if op == "dynamic-slice":
+            # reads only the slice (+ writes it)
+            c.hbm_bytes += 2 * res_bytes
+            c.flops += res_elems
+            return c
+
+        if op == "dynamic-update-slice":
+            # in-place: reads + writes the update slice only
+            refs = inst.operand_refs()
+            upd = (self._symtab[comp].get(refs[1])
+                   if len(refs) > 1 else None)
+            ub = shape_bytes(upd) if upd else res_bytes
+            c.hbm_bytes += 2 * ub
+            return c
+
+        if any(op.startswith(p) for p in COLLECTIVE_OPS):
+            if op.endswith("-done"):
+                return c
+            op_bytes = sum(shape_bytes(t)
+                           for t in self._operand_types(comp, inst))
+            n, crosses = _group_info(inst.rest, self.pod_size)
+            wire = _wire_bytes(op, op_bytes, res_bytes, n)
+            c.coll_operand_bytes += op_bytes
+            c.coll_wire_bytes += wire
+            if crosses:
+                c.dcn_wire_bytes += wire
+            base = op.replace("-start", "")
+            cur = c.coll_by_op.get(base, [0.0, 0.0, 0])
+            c.coll_by_op[base] = [cur[0] + op_bytes, cur[1] + wire,
+                                  cur[2] + 1]
+            c.hbm_bytes += res_bytes + op_bytes
+            return c
+
+        if op == "dot":
+            lhs_types = self._operand_types(comp, inst)
+            m = _LHS_CONTRACT_RE.search(inst.rest)
+            contract = 1
+            if m and lhs_types:
+                dims = _first_shape_dims(lhs_types[0])
+                for idx in (int(x) for x in m.group(1).split(",") if x):
+                    if idx < len(dims):
+                        contract *= dims[idx]
+            c.flops += 2.0 * res_elems * contract
+            if not in_fusion:
+                op_bytes = sum(shape_bytes(t)
+                               for t in self._operand_types(comp, inst))
+                c.hbm_bytes += res_bytes + op_bytes
+            return c
+
+        if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                  "bitcast", "after-all"):
+            return c
+
+        if op == "convolution":
+            # depthwise convs (mamba) only: approximate 2 * out * K
+            c.flops += 2.0 * res_elems * 8
+            if not in_fusion:
+                c.hbm_bytes += res_bytes * 2
+            return c
+
+        # generic elementwise-ish op
+        c.flops += res_elems
+        if not in_fusion:
+            op_bytes = sum(shape_bytes(t)
+                           for t in self._operand_types(comp, inst))
+            c.hbm_bytes += res_bytes + op_bytes
+        return c
+
+    def _fusion_io_bytes(self, comp, inst, called, res_bytes) -> float:
+        """Fusion-boundary bytes with slice-aware accounting: a fused
+        dynamic-slice reads only its slice; a fusion rooted in a
+        dynamic-update-slice writes only the update (XLA aliases the
+        buffer in place). Without this, scan bodies appear to stream the
+        whole sequence buffer every timestep (1000x overcounts)."""
+        insts = self.comps.get(called, [])
+        if not insts:
+            return res_bytes
+        symtab = self._symtab[called]
+        params = {}
+        for i2 in insts:
+            if i2.op == "parameter":
+                m = _PARAM_IDX_RE.search("parameter(" + i2.rest)
+                if m:
+                    params[i2.name] = int(m.group(1))
+        root = next((i2 for i2 in insts if i2.is_root), insts[-1])
+        # uses of each parameter
+        reads = 0.0
+        for pname in params:
+            ptype = symtab.get(pname, "")
+            uses = []
+            for i2 in insts:
+                if i2.op == "parameter":
+                    continue
+                refs = i2.operand_refs()
+                if pname in refs:
+                    uses.append((i2, refs.index(pname)))
+            if not uses:
+                continue
+            sliced = all(i2.op == "dynamic-slice" and pos == 0
+                         for i2, pos in uses)
+            dus_root = all(i2.op == "dynamic-update-slice" and pos == 0
+                           and i2.is_root for i2, pos in uses)
+            if sliced:
+                reads += sum(shape_bytes(i2.result_type) for i2, _ in uses)
+            elif dus_root:
+                pass  # aliased in-place output; written below
+            else:
+                reads += shape_bytes(ptype)
+        if root.op == "dynamic-update-slice":
+            refs = root.operand_refs()
+            upd = symtab.get(refs[1]) if len(refs) > 1 else None
+            written = shape_bytes(upd) if upd else res_bytes
+        else:
+            written = res_bytes
+        return reads + written
+
+    def _trip_from_cond(self, cond_comp: str):
+        for inst in self.comps.get(cond_comp, []):
+            if inst.op == "constant":
+                m = re.search(r"constant\((\d+)\)", "constant(" + inst.rest)
+                if m:
+                    return int(m.group(1))
+        return None
+
+
+def analyze(hlo_text: str, *, pod_size: int | None = None) -> dict:
+    """Top-level: per-device cost dict for a compiled module's HLO text."""
+    hc = HloCost(hlo_text, pod_size=pod_size)
+    c = hc.cost()
+    return {
+        "flops": c.flops,
+        "hbm_bytes": c.hbm_bytes,
+        "coll_operand_bytes": c.coll_operand_bytes,
+        "coll_wire_bytes": c.coll_wire_bytes,
+        "dcn_wire_bytes": c.dcn_wire_bytes,
+        "coll_by_op": {k: {"operand_bytes": v[0], "wire_bytes": v[1],
+                           "count": v[2]}
+                       for k, v in c.coll_by_op.items()},
+        "warnings": c.warnings,
+    }

@@ -1,0 +1,70 @@
+"""Three-term roofline model for TPU v5e (the TARGET hardware; this
+container is CPU-only so terms are derived from the compiled dry-run
+artifact, not measured).
+
+  compute    = flops_per_device / PEAK_FLOPS
+  memory     = hbm_bytes_per_device / HBM_BW
+  collective = coll_wire_bytes_per_device / ICI_BW
+
+Hardware constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (3D-torus links are modeled as one aggregate per-chip
+pipe at link speed, matching the task spec); DCN (inter-pod) modeled at
+12.5 GB/s/chip for the multi-pod detail rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 12.5e9
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dcn_s: float
+    bottleneck: str
+    step_s: float              # max of terms (perfect-overlap lower bound)
+    model_flops: float         # 6*N*D (or 6*N_active*D)
+    useful_ratio: float        # model_flops / hlo_flops (per step, global)
+    mfu: float                 # model_flops / (step_s * chips * peak)
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def compute(costs: dict, *, chips: int, model_flops_global: float) -> Roofline:
+    """costs: per-device dict from analysis.hlo.analyze()."""
+    c = costs["flops"] / PEAK_FLOPS
+    m = costs["hbm_bytes"] / HBM_BW
+    ici = max(costs["coll_wire_bytes"] - costs["dcn_wire_bytes"], 0.0) / ICI_BW
+    dcn = costs["dcn_wire_bytes"] / DCN_BW
+    coll = ici + dcn
+    terms = {"compute": c, "memory": m, "collective": coll}
+    bottleneck = max(terms, key=terms.get)
+    step = max(terms.values())
+    hlo_flops_global = costs["flops"] * chips
+    useful = (model_flops_global / hlo_flops_global
+              if hlo_flops_global else 0.0)
+    mfu = (model_flops_global / (step * chips * PEAK_FLOPS)
+           if step > 0 else 0.0)
+    return Roofline(c, m, coll, dcn, bottleneck, step,
+                    model_flops_global, useful, mfu)
+
+
+def model_flops(cfg, shape, *, backward: bool = True) -> float:
+    """MODEL_FLOPS = 6*N*D for training (fwd 2ND + bwd 4ND), 2*N*D for
+    inference, with N = active params (MoE) and D = tokens processed."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n_active * shape.global_batch

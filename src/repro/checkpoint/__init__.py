@@ -1,0 +1,1 @@
+from .checkpoint import all_steps, latest_step, restore, save  # noqa: F401

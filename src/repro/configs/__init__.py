@@ -1,0 +1,2 @@
+from .base import ModelConfig, SHAPES, ShapeConfig, reduced  # noqa: F401
+from .registry import ARCH_IDS, cells, get, get_shape  # noqa: F401

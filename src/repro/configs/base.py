@@ -1,0 +1,196 @@
+"""Config system: model architecture, input shapes, and run settings.
+
+Every assigned architecture is a ``ModelConfig`` in its own module under
+``repro/configs/`` and is selectable by ``--arch <id>`` through
+``registry.get()``. ``reduced()`` produces the CPU smoke-test variant of any
+config (same family/topology, tiny dims).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+
+    # attention details
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    logit_softcap: Optional[float] = None    # gemma2 final-logit softcap
+    attn_softcap: Optional[float] = None     # gemma2 attention softcap
+    sliding_window: Optional[int] = None     # window for "attn_local" layers
+
+    # layer program: the periodic pattern of mixer types; num_layers must be
+    # a multiple of len(layer_pattern). Entries: attn | attn_local | mamba |
+    # mlstm | slstm.
+    layer_pattern: tuple = ("attn",)
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_period: int = 1            # apply MoE FFN on layers where
+    moe_offset: int = 0            # (layer_idx % moe_period) == moe_offset
+    capacity_factor: float = 1.25
+
+    # FFN
+    ffn_type: str = "swiglu"       # swiglu | gelu | none
+
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 0           # frame positions from the (stub) frontend
+    cross_attention: bool = False
+
+    # SSM dims (mamba)
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+
+    # norms / embeddings
+    post_norm: bool = False        # gemma2-style extra post-norms
+    tie_embeddings: bool = False
+    scale_embed: bool = False      # gemma-style sqrt(d) embedding scale
+
+    # numerics
+    compute_dtype: str = "bfloat16"
+    param_dtype: str = "float32"   # master copy dtype
+    moment_dtype: str = "float32"  # Adam m/v dtype (bf16 for the giants)
+
+    # notes for DESIGN/EXPERIMENTS
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def period(self) -> int:
+        return len(self.layer_pattern)
+
+    @property
+    def n_periods(self) -> int:
+        assert self.num_layers % self.period == 0, \
+            f"{self.name}: {self.num_layers} layers not divisible by " \
+            f"pattern period {self.period}"
+        return self.num_layers // self.period
+
+    def is_moe_layer(self, pos_in_period: int) -> bool:
+        if self.num_experts == 0:
+            return False
+        return (pos_in_period % self.moe_period) == self.moe_offset
+
+    def mixer(self, pos_in_period: int) -> str:
+        return self.layer_pattern[pos_in_period]
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if no layer does global full attention (long_500k eligible)."""
+        return all(m in ("mamba", "mlstm", "slstm", "attn_local")
+                   for m in self.layer_pattern) or self.family in ("ssm",)
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs decode (whisper via its decoder)
+
+    def param_count(self) -> int:
+        """Approximate parameter count (for roofline MODEL_FLOPS)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        total = self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            total += d * self.vocab_size
+        for pos in range(self.period):
+            mixer = self.mixer(pos)
+            if mixer in ("attn", "attn_local"):
+                p = d * hd * (self.num_heads + 2 * self.num_kv_heads) \
+                    + self.num_heads * hd * d
+            elif mixer == "mamba":
+                di = self.ssm_expand * d
+                p = d * 2 * di + di * self.ssm_conv \
+                    + di * (2 * self.ssm_state + di // 16 + 1) + di * d
+            elif mixer in ("mlstm",):
+                di = 2 * d
+                hd = di // max(self.num_heads, 1)
+                p = d * 2 * di + 3 * di * hd + di * d  # block-diag qkv
+            elif mixer == "slstm":
+                p = 8 * d * d
+            else:
+                p = 0
+            if mixer in ("attn", "attn_local", "mamba"):
+                if self.is_moe_layer(pos):
+                    mult = 3 if self.ffn_type == "swiglu" else 2
+                    p += self.num_experts * mult * d * self.d_ff \
+                        + d * self.num_experts
+                elif self.ffn_type != "none" and self.d_ff:
+                    mult = 3 if self.ffn_type == "swiglu" else 2
+                    p += mult * d * self.d_ff
+            total += p * self.n_periods
+        if self.encoder_layers:
+            enc = self.encoder_layers * (
+                4 * d * d + 2 * d * self.d_ff)
+            dec_cross = self.num_layers * 4 * d * d
+            total += enc + dec_cross
+        return total
+
+    def active_param_count(self) -> int:
+        """Params active per token (MoE: top-k experts only)."""
+        if self.num_experts == 0:
+            return self.param_count()
+        full = self.param_count()
+        mult = 3 if self.ffn_type == "swiglu" else 2
+        moe_layers = sum(self.is_moe_layer(p) for p in range(self.period)) \
+            * self.n_periods
+        expert_params = moe_layers * self.num_experts * mult * self.d_model * self.d_ff
+        active_experts = moe_layers * self.experts_per_token * mult \
+            * self.d_model * self.d_ff
+        return full - expert_params + active_experts
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Tiny same-family variant for CPU smoke tests: keeps the layer
+    pattern, MoE topology, GQA ratio, enc-dec structure; shrinks dims."""
+    ratio = max(cfg.num_heads // max(cfg.num_kv_heads, 1), 1)
+    heads = 4 if ratio <= 4 else ratio
+    kv = max(heads // ratio, 1)
+    return dataclasses.replace(
+        cfg,
+        num_layers=cfg.period * min(cfg.n_periods, 2),
+        d_model=64,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=512,
+        num_experts=min(cfg.num_experts, 8),
+        experts_per_token=min(cfg.experts_per_token, 2),
+        encoder_layers=min(cfg.encoder_layers, 2),
+        encoder_seq=min(cfg.encoder_seq, 16),
+        sliding_window=min(cfg.sliding_window, 8) if cfg.sliding_window else None,
+        ssm_state=8,
+        compute_dtype="float32",
+        moment_dtype="float32",
+    )

@@ -1,0 +1,17 @@
+"""Chameleon-34B early-fusion VLM. VQ image tokens are ordinary ids in the
+unified 65536 vocab; the VQ tokenizer frontend is a STUB (input_specs()
+provide token ids directly). [arXiv:2405.09818; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    num_layers=48,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=22_016,
+    vocab_size=65_536,
+    ffn_type="swiglu",
+    source="arXiv:2405.09818; unverified",
+)

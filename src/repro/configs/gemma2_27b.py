@@ -1,0 +1,24 @@
+"""Gemma2 27B: alternating local/global attention, logit softcaps,
+pre+post norms. [arXiv:2408.00118; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-27b",
+    family="dense",
+    num_layers=46,
+    d_model=4608,
+    num_heads=32,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=36_864,
+    vocab_size=256_000,
+    layer_pattern=("attn_local", "attn"),
+    sliding_window=4096,
+    attn_softcap=50.0,
+    logit_softcap=30.0,
+    post_norm=True,
+    scale_embed=True,
+    tie_embeddings=True,
+    ffn_type="swiglu",         # gemma2 gated gelu ~ swiglu w/ gelu act
+    source="arXiv:2408.00118; hf",
+)

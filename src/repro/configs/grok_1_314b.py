@@ -1,0 +1,19 @@
+"""Grok-1 314B. [hf:xai-org/grok-1; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    num_layers=64,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=32_768,
+    vocab_size=131_072,
+    num_experts=8,
+    experts_per_token=2,
+    ffn_type="swiglu",         # grok experts are gated (3 mats: w, v, proj)
+    moment_dtype="bfloat16",   # 314B: see DESIGN.md §7 memory budget
+    source="hf:xai-org/grok-1; unverified",
+)

@@ -1,0 +1,26 @@
+"""Jamba v0.1 52B: Mamba + attention at 1:7, MoE (16e top-2) on every
+second layer. Only 4 of 32 layers are full attention => long_500k decode
+is feasible (sub-quadratic per token, cache bounded).
+[arXiv:2403.19887; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14_336,
+    vocab_size=65_536,
+    # period 8: attention at position 4 (jamba places attn mid-block)
+    layer_pattern=("mamba", "mamba", "mamba", "mamba",
+                   "attn", "mamba", "mamba", "mamba"),
+    num_experts=16,
+    experts_per_token=2,
+    moe_period=2,
+    moe_offset=1,              # MoE on odd layers
+    ssm_state=16,
+    ffn_type="swiglu",
+    source="arXiv:2403.19887; hf",
+)

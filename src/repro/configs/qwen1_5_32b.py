@@ -1,0 +1,16 @@
+"""Qwen1.5 32B (QKV bias). [hf:Qwen/Qwen1.5-0.5B family config; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=40,
+    d_ff=27_392,
+    vocab_size=152_064,
+    qkv_bias=True,
+    ffn_type="swiglu",
+    source="hf:Qwen/Qwen1.5-0.5B; hf",
+)

@@ -1,0 +1,20 @@
+"""Qwen3-MoE 235B-A22B. [hf:Qwen/Qwen3-30B-A3B; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    num_layers=94,
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,                 # per-expert intermediate
+    vocab_size=151_936,
+    num_experts=128,
+    experts_per_token=8,
+    rope_theta=1_000_000.0,
+    ffn_type="swiglu",
+    moment_dtype="bfloat16",   # 235B: f32 moments do not fit one v5e pod
+    source="hf:Qwen/Qwen3-30B-A3B (scaled family config); hf",
+)

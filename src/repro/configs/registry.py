@@ -1,0 +1,51 @@
+"""--arch registry: id -> ModelConfig (the 10 assigned archs + the paper's
+own config for the OBP data-selection pipeline)."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig, reduced  # noqa: F401
+
+_ARCH_MODULES = {
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "grok-1-314b": "grok_1_314b",
+    "whisper-base": "whisper_base",
+    "chameleon-34b": "chameleon_34b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "gemma2-27b": "gemma2_27b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get(arch_id: str) -> ModelConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; options: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cells():
+    """All (arch, shape) dry-run cells with their skip status.
+
+    long_500k requires sub-quadratic attention: runs only for ssm/hybrid
+    archs (xlstm, jamba); skipped (and recorded) for pure full-attention
+    archs — see DESIGN.md §Arch-applicability.
+    """
+    out = []
+    for arch_id in ARCH_IDS:
+        cfg = get(arch_id)
+        for shape in SHAPES.values():
+            skip = None
+            if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+                skip = "full-attention arch: 500k decode needs sub-quadratic attention"
+            out.append((arch_id, shape.name, skip))
+    return out

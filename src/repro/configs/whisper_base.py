@@ -1,0 +1,21 @@
+"""Whisper-base encoder-decoder. Conv/audio frontend is a STUB: the
+dry-run input_specs() provide precomputed frame embeddings (B, 1500, 512).
+[arXiv:2212.04356; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    num_layers=6,              # decoder layers
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51_865,
+    encoder_layers=6,
+    encoder_seq=1500,
+    cross_attention=True,
+    ffn_type="gelu",
+    rope_theta=0.0,            # whisper uses learned/sinusoidal positions
+    source="arXiv:2212.04356; unverified",
+)

@@ -1,0 +1,18 @@
+"""xLSTM 1.3B: mLSTM + sLSTM blocks at 7:1 (xLSTM[7:1]), 48 blocks.
+Recurrent state is O(head_dim^2) per head — no KV cache, long_500k
+eligible. [arXiv:2405.04517; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,                    # blocks embed their own projections
+    vocab_size=50_304,
+    layer_pattern=("mlstm",) * 7 + ("slstm",),
+    ffn_type="none",
+    source="arXiv:2405.04517; unverified",
+)

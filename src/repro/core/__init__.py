@@ -1,0 +1,19 @@
+"""OneBatchPAM — the paper's primary contribution, as a composable module.
+
+Public API:
+  one_batch_pam / fasterpam / objective   (solver.py)
+  build_batch, Batch, VARIANTS            (sampling.py)
+  MedoidSelector                          (selector.py)
+  make_distributed_obp                    (distributed.py)
+  baselines.ALL_BASELINES                 (paper competitors, counted)
+"""
+from .sampling import Batch, VARIANTS, build_batch, default_batch_size  # noqa: F401
+from .selector import MedoidSelector  # noqa: F401
+from .solver import (  # noqa: F401
+    SolveResult,
+    fasterpam,
+    objective,
+    one_batch_pam,
+    solve_batched,
+    solve_eager,
+)

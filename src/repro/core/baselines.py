@@ -1,0 +1,298 @@
+"""Competitor k-medoids algorithms (paper's Experiments section).
+
+These are faithful reference implementations in numpy with an explicit
+dissimilarity-computation counter — they exist to reproduce the paper's
+comparisons (Tables 1/3, Figure 1), where the quantities of interest are
+(a) the k-medoids objective and (b) the number of pairwise dissimilarity
+evaluations / wall time. The production-grade, distributed implementation
+of the paper's own method lives in solver.py / distributed.py.
+
+Implemented: Random, FasterPAM (full-matrix eager PAM), CLARA/FasterCLARA,
+Alternate (Park & Jun 2009), k-means++, kmc2 (Bachem et al. 2016),
+LS-k-means++ (Lattanzi & Sohler 2019), and ``banditpam_lite`` — a
+simplified BanditPAM++ stand-in (per-swap re-sampled batch estimation;
+the official C++ implementation is unavailable offline, see DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Oracle:
+    """Dataset + metric wrapper counting pairwise dissimilarity evaluations."""
+    x: np.ndarray
+    metric: str = "l1"
+    count: int = 0
+
+    def __post_init__(self):
+        self.x = np.asarray(self.x, np.float32)
+
+    @property
+    def n(self) -> int:
+        return self.x.shape[0]
+
+    def block(self, rows: np.ndarray, cols: np.ndarray) -> np.ndarray:
+        """(len(rows), len(cols)) distance block; counts len(rows)*len(cols)."""
+        a, b = self.x[rows], self.x[cols]
+        self.count += a.shape[0] * b.shape[0]
+        if self.metric == "l1":
+            return np.abs(a[:, None, :] - b[None, :, :]).sum(-1)
+        if self.metric in ("l2", "sqeuclidean"):
+            sq = (a * a).sum(1)[:, None] + (b * b).sum(1)[None, :] - 2 * a @ b.T
+            sq = np.maximum(sq, 0.0)
+            return sq if self.metric == "sqeuclidean" else np.sqrt(sq)
+        raise ValueError(self.metric)
+
+    def to_all(self, cols: np.ndarray) -> np.ndarray:
+        return self.block(np.arange(self.n), cols)
+
+
+@dataclasses.dataclass
+class BaselineResult:
+    medoids: np.ndarray
+    objective: float
+    n_dissim: int
+    seconds: float
+    name: str
+
+
+def _objective(oracle: Oracle, medoids: np.ndarray, counted: bool = False) -> float:
+    """Mean distance to nearest medoid (final reporting is not counted)."""
+    saved = oracle.count
+    obj = float(oracle.to_all(np.asarray(medoids)).min(1).mean())
+    if not counted:
+        oracle.count = saved
+    return obj
+
+
+def _timed(fn):
+    def wrapper(rng, oracle, k, **kw):
+        start_count = oracle.count
+        t0 = time.perf_counter()
+        medoids = fn(rng, oracle, k, **kw)
+        dt = time.perf_counter() - t0
+        used = oracle.count - start_count
+        return BaselineResult(np.asarray(medoids), _objective(oracle, medoids),
+                              used, dt, fn.__name__)
+    wrapper.__name__ = fn.__name__
+    return wrapper
+
+
+def _top2_from(dm: np.ndarray):
+    """d1, d2, near from a (k, n) medoid-to-points matrix."""
+    near = dm.argmin(0)
+    d1 = dm[near, np.arange(dm.shape[1])]
+    tmp = dm.copy()
+    tmp[near, np.arange(dm.shape[1])] = np.inf
+    d2 = tmp.min(0)
+    return d1, d2, near
+
+
+def _eager_pam(d: np.ndarray, init: np.ndarray, max_passes: int = 8,
+               sample_cols: np.ndarray | None = None) -> np.ndarray:
+    """FasterPAM eager swap loop on a precomputed (n_cand, n_ref) matrix.
+
+    d[i, j] = dissim(candidate i, reference j); medoids are candidate
+    indices. With n_cand == n_ref == n this is exact FasterPAM.
+    """
+    n = d.shape[0]
+    med = np.array(init, np.int64).copy()
+    k = len(med)
+    d1, d2, near = _top2_from(d[med])
+    for _ in range(max_passes):
+        swapped = False
+        for i in range(n):
+            if (med == i).any():
+                continue
+            row = d[i]
+            g = np.maximum(d1 - row, 0.0).sum()
+            r = d1 - np.minimum(np.maximum(row, d1), d2)
+            big_r = np.zeros(k)
+            np.add.at(big_r, near, r)
+            l = int(big_r.argmax())
+            if g + big_r[l] > 1e-9:
+                med[l] = i
+                d1, d2, near = _top2_from(d[med])
+                swapped = True
+        if not swapped:
+            break
+    return med
+
+
+@_timed
+def random_select(rng: np.random.Generator, oracle: Oracle, k: int):
+    return rng.choice(oracle.n, size=k, replace=False)
+
+
+@_timed
+def fasterpam(rng: np.random.Generator, oracle: Oracle, k: int,
+              max_passes: int = 8):
+    n = oracle.n
+    d = oracle.block(np.arange(n), np.arange(n))      # O(n^2), the bottleneck
+    init = rng.choice(n, size=k, replace=False)
+    return _eager_pam(d, init, max_passes)
+
+
+@_timed
+def clara(rng: np.random.Generator, oracle: Oracle, k: int,
+          repeats: int = 5, sub_size: int | None = None):
+    """FasterCLARA: FasterPAM on subsamples, best-of over full evaluation.
+
+    sub_size defaults to the paper's FasterCLARA setting m = 80 + 4k.
+    """
+    n = oracle.n
+    m = min(sub_size or (80 + 4 * k), n)
+    best, best_obj = None, np.inf
+    for _ in range(repeats):
+        sub = rng.choice(n, size=m, replace=False)
+        d = oracle.block(sub, sub)                    # O(m^2)
+        med_local = _eager_pam(d, rng.choice(m, size=k, replace=False))
+        med = sub[med_local]
+        obj = oracle.to_all(med).min(1).mean()        # O(nk) evaluation
+        if obj < best_obj:
+            best, best_obj = med, obj
+    return best
+
+
+@_timed
+def alternate(rng: np.random.Generator, oracle: Oracle, k: int,
+              max_iters: int = 20):
+    """Park & Jun (2009): alternate assignment / per-cluster medoid update."""
+    n = oracle.n
+    med = rng.choice(n, size=k, replace=False)
+    for _ in range(max_iters):
+        assign = oracle.to_all(med).argmin(1)         # O(nk)
+        new_med = med.copy()
+        for c in range(k):
+            members = np.where(assign == c)[0]
+            if len(members) == 0:
+                continue
+            dm = oracle.block(members, members)       # O(n_c^2)
+            new_med[c] = members[dm.sum(1).argmin()]
+        if (new_med == med).all():
+            break
+        med = new_med
+    return med
+
+
+def _dist_power(oracle: Oracle) -> float:
+    # k-means++ samples proportional to d^p for an l_p metric.
+    return 1.0 if oracle.metric == "l1" else 2.0
+
+
+@_timed
+def kmeans_pp(rng: np.random.Generator, oracle: Oracle, k: int):
+    n = oracle.n
+    first = int(rng.integers(n))
+    centers = [first]
+    dmin = oracle.to_all(np.array([first]))[:, 0]
+    p = _dist_power(oracle)
+    for _ in range(k - 1):
+        probs = dmin**p
+        s = probs.sum()
+        probs = np.full(n, 1.0 / n) if s <= 0 else probs / s
+        nxt = int(rng.choice(n, p=probs))
+        centers.append(nxt)
+        dmin = np.minimum(dmin, oracle.to_all(np.array([nxt]))[:, 0])
+    return np.array(centers)
+
+
+@_timed
+def kmc2(rng: np.random.Generator, oracle: Oracle, k: int, chain: int = 20):
+    """MCMC approximation of k-means++ (Bachem et al. 2016), O(L k^2) dists."""
+    n = oracle.n
+    centers = [int(rng.integers(n))]
+    p = _dist_power(oracle)
+    for _ in range(k - 1):
+        cur = int(rng.integers(n))
+        d_cur = oracle.block(np.array([cur]), np.array(centers)).min() ** p
+        for _ in range(chain - 1):
+            cand = int(rng.integers(n))
+            d_cand = oracle.block(np.array([cand]), np.array(centers)).min() ** p
+            if d_cur <= 0 or rng.random() < min(1.0, d_cand / d_cur):
+                cur, d_cur = cand, d_cand
+        centers.append(cur)
+    return np.array(centers)
+
+
+@_timed
+def ls_kmeans_pp(rng: np.random.Generator, oracle: Oracle, k: int,
+                 local_steps: int = 5):
+    """k-means++ seeding + Lattanzi-Sohler single-swap local search."""
+    n = oracle.n
+    first = int(rng.integers(n))
+    centers = [first]
+    dmin = oracle.to_all(np.array([first]))[:, 0]
+    p = _dist_power(oracle)
+    for _ in range(k - 1):
+        probs = dmin**p
+        probs = probs / probs.sum() if probs.sum() > 0 else np.full(n, 1.0 / n)
+        nxt = int(rng.choice(n, p=probs))
+        centers.append(nxt)
+        dmin = np.minimum(dmin, oracle.to_all(np.array([nxt]))[:, 0])
+    med = np.array(centers)
+    dm = oracle.to_all(med)                            # (n, k)
+    d1, d2, near = _top2_from(dm.T)
+    for _ in range(local_steps):
+        probs = d1**p
+        probs = probs / probs.sum() if probs.sum() > 0 else np.full(n, 1.0 / n)
+        y = int(rng.choice(n, p=probs))
+        dy = oracle.to_all(np.array([y]))[:, 0]        # O(n)
+        # cost of swapping each center c for y
+        base = np.minimum(d1, dy)
+        costs = np.empty(k)
+        for c in range(k):
+            alt = np.where(near == c, np.minimum(d2, dy), base)
+            costs[c] = alt.sum()
+        c = int(costs.argmin())
+        if costs[c] < d1.sum() - 1e-9:
+            med[c] = y
+            dm[:, c] = dy
+            d1, d2, near = _top2_from(dm.T)
+    return med
+
+
+@_timed
+def banditpam_lite(rng: np.random.Generator, oracle: Oracle, k: int,
+                   swap_rounds: int = 10, batch: int | None = None):
+    """Simplified BanditPAM++: each swap round re-samples a fresh reference
+    batch of size O(log n) and picks the best estimated swap — capturing the
+    O(T n log n) 'new dissimilarities every swap' cost profile that the
+    paper contrasts with OneBatchPAM's single fixed batch."""
+    n = oracle.n
+    b = batch or max(int(np.ceil(40 * np.log(max(n, 2)))), 2 * k)
+    b = min(b, n)
+    med = rng.choice(n, size=k, replace=False)
+    for _ in range(swap_rounds):
+        ref = rng.choice(n, size=b, replace=False)
+        d = oracle.to_all(ref)                         # O(n b) fresh each round
+        d1, d2, near = _top2_from(d[med])
+        g = np.maximum(d1[None, :] - d, 0.0).sum(1)
+        r = d1[None, :] - np.minimum(np.maximum(d, d1[None, :]), d2[None, :])
+        big_r = np.zeros((n, k))
+        for c in range(k):
+            big_r[:, c] = r[:, near == c].sum(1)
+        gain = g[:, None] + big_r
+        gain[med] = -np.inf
+        i, l = np.unravel_index(gain.argmax(), gain.shape)
+        if gain[i, l] <= 1e-9:
+            break
+        med = med.copy()
+        med[l] = i
+    return med
+
+
+ALL_BASELINES = {
+    "random": random_select,
+    "fasterpam": fasterpam,
+    "clara": clara,
+    "alternate": alternate,
+    "kmeans_pp": kmeans_pp,
+    "kmc2": kmc2,
+    "ls_kmeans_pp": ls_kmeans_pp,
+    "banditpam_lite": banditpam_lite,
+}

@@ -1,0 +1,63 @@
+"""High-level data-selection API: OneBatchPAM as a framework feature.
+
+This is the interface the rest of the framework consumes (data curation,
+active-learning batch picking, prompt clustering in serving). sklearn-like:
+
+    sel = MedoidSelector(k=64, variant="nniw")
+    sel = sel.fit(embeddings)          # embeddings: (n, p) array
+    sel.medoid_indices_                # (k,) indices into the input
+    labels = sel.predict(embeddings)   # nearest-medoid assignment
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import solver
+from repro.kernels import ops
+
+
+@dataclasses.dataclass
+class MedoidSelector:
+    k: int
+    m: int | None = None
+    variant: str = "nniw"
+    metric: str = "l1"
+    strategy: str = "batched"
+    max_swaps: int = 500
+    seed: int = 0
+    backend: str = "auto"
+
+    medoid_indices_: np.ndarray | None = None
+    medoids_: np.ndarray | None = None
+    est_objective_: float | None = None
+    n_swaps_: int | None = None
+
+    def fit(self, x) -> "MedoidSelector":
+        x = jnp.asarray(x)
+        res, _ = solver.one_batch_pam(
+            jax.random.PRNGKey(self.seed), x, self.k, m=self.m,
+            variant=self.variant, metric=self.metric, strategy=self.strategy,
+            max_swaps=self.max_swaps, backend=self.backend)
+        self.medoid_indices_ = np.asarray(res.medoid_idx)
+        self.medoids_ = np.asarray(x[res.medoid_idx])
+        self.est_objective_ = float(res.est_objective)
+        self.n_swaps_ = int(res.n_swaps)
+        return self
+
+    def predict(self, x) -> np.ndarray:
+        if self.medoids_ is None:
+            raise RuntimeError("call fit() first")
+        d = ops.pairwise_distance(jnp.asarray(x), jnp.asarray(self.medoids_),
+                                  metric=self.metric, backend=self.backend)
+        return np.asarray(jnp.argmin(d, axis=1))
+
+    def objective(self, x) -> float:
+        if self.medoid_indices_ is None:
+            raise RuntimeError("call fit() first")
+        return float(solver.objective(jnp.asarray(x),
+                                      jnp.asarray(self.medoid_indices_),
+                                      metric=self.metric, backend=self.backend))

@@ -1,0 +1,2 @@
+from .tokens import TokenIterator, TokenStore, build_synthetic  # noqa: F401
+from .embeddings import embedding_stream, gaussian_mixture, heavy_tail  # noqa: F401

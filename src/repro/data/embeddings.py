@@ -1,0 +1,39 @@
+"""Synthetic embedding streams for the OneBatchPAM pipelines and the
+paper-reproduction benchmarks (the container is offline: no MNIST/UCI).
+
+``gaussian_mixture`` mimics the clustered geometry of embedding spaces;
+``heavy_tail`` adds the imbalanced far-out points the paper's
+"Overfitting for highly imbalanced datasets" section discusses.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def gaussian_mixture(n: int, p: int, centers: int = 20, spread: float = 0.25,
+                     seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    c = rng.normal(size=(centers, p)).astype(np.float32) * 3.0
+    weights = rng.dirichlet(np.ones(centers) * 2.0)
+    assign = rng.choice(centers, size=n, p=weights)
+    x = c[assign] + rng.normal(size=(n, p)).astype(np.float32) * spread
+    return x.astype(np.float32)
+
+
+def heavy_tail(n: int, p: int, seed: int = 0, outlier_frac: float = 0.01
+               ) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    x = gaussian_mixture(n, p, seed=seed)
+    n_out = max(int(n * outlier_frac), 1)
+    idx = rng.choice(n, size=n_out, replace=False)
+    x[idx] = rng.normal(size=(n_out, p)).astype(np.float32) * 25.0
+    return x
+
+
+def embedding_stream(total: int, chunk: int, p: int, seed: int = 0):
+    """Yields (chunk, p) blocks — the shape of a curation pipeline input."""
+    done = 0
+    while done < total:
+        size = min(chunk, total - done)
+        yield gaussian_mixture(size, p, seed=seed + done)
+        done += size

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for OneBatchPAM's compute hot spots.
+
+Layout (per repo convention):
+  pairwise.py / swap_gain.py — pl.pallas_call kernels with explicit
+      BlockSpec VMEM tiling (TPU target; interpret=True on CPU).
+  ops.py — jit'd, padding, backend-dispatching public wrappers.
+  ref.py — pure-jnp oracles (ground truth for tests).
+"""
+from .ops import pairwise_distance, swap_gain  # noqa: F401
+from .ref import LARGE  # noqa: F401

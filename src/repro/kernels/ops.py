@@ -1,0 +1,104 @@
+"""Public, shape-agnostic entry points for the Pallas kernels.
+
+Dispatch policy (``backend=`` argument, default "auto"):
+  * "pallas"    — compiled Pallas kernel (TPU target).
+  * "interpret" — Pallas kernel body executed in interpret mode (CPU
+                  correctness path; used by the test suite).
+  * "ref"       — pure-jnp oracle from ref.py.
+  * "auto"      — pallas on TPU, ref elsewhere (interpret mode is far too
+                  slow for real CPU workloads).
+
+These wrappers pad inputs to the kernels' tile multiples and slice the
+result back, so callers never see alignment constraints.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import pairwise, ref, swap_gain as swap_gain_mod
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return backend
+
+
+def _pad_to(a: jnp.ndarray, axis: int, mult: int, value: float = 0.0) -> jnp.ndarray:
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def pairwise_distance(
+    x: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    metric: str = "l1",
+    backend: str = "auto",
+) -> jnp.ndarray:
+    """Distance block between rows of x (n, p) and b (m, p) -> (n, m) f32."""
+    backend = _resolve(backend)
+    n, m = x.shape[0], b.shape[0]
+    if backend == "ref":
+        if metric == "l1":
+            # bound the (n, m, p) broadcast: tile like the Pallas kernel
+            if x.shape[0] * b.shape[0] * x.shape[1] > (1 << 28):
+                return ref.pairwise_l1_chunked(x, b)
+            return ref.pairwise_l1(x, b)
+        if metric in ("l2", "sqeuclidean"):
+            return ref.pairwise_l2(x, b, squared=(metric == "sqeuclidean"))
+        raise ValueError(f"unknown metric {metric!r}")
+
+    interpret = backend == "interpret"
+    if metric == "l1":
+        tn, tm, tp = pairwise.L1_TN, pairwise.L1_TM, pairwise.L1_TP
+        xp = _pad_to(_pad_to(x, 0, tn), 1, tp)
+        bp = _pad_to(_pad_to(b, 0, tm), 1, tp)
+        out = pairwise.l1_distance(xp, bp, interpret=interpret)
+    elif metric in ("l2", "sqeuclidean"):
+        tn, tm, tp = pairwise.L2_TN, pairwise.L2_TM, pairwise.L2_TP
+        xp = _pad_to(_pad_to(x, 0, tn), 1, tp)
+        bp = _pad_to(_pad_to(b, 0, tm), 1, tp)
+        out = pairwise.l2_distance(xp, bp, interpret=interpret)
+        if metric == "l2":
+            out = jnp.sqrt(out)
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    return out[:n, :m]
+
+
+def swap_gain(
+    d: jnp.ndarray,
+    d1: jnp.ndarray,
+    d2: jnp.ndarray,
+    near_onehot: jnp.ndarray,
+    *,
+    backend: str = "auto",
+) -> jnp.ndarray:
+    """Swap-gain matrix (n, k); see swap_gain.py / ref.swap_gain."""
+    backend = _resolve(backend)
+    if backend == "ref":
+        return ref.swap_gain(d, d1, d2, near_onehot)
+
+    interpret = backend == "interpret"
+    n, m = d.shape
+    k = near_onehot.shape[1]
+    tn, tm = swap_gain_mod.SG_TN, swap_gain_mod.SG_TM
+    dp = _pad_to(_pad_to(d, 0, tn), 1, tm)
+    # Padded batch columns have d1 = d2 = 0 and D = 0 => relu term 0 and
+    # r = 0, so they contribute nothing; padded k columns are sliced off.
+    d1p = _pad_to(d1, 0, tm)
+    d2p = _pad_to(d2, 0, tm)
+    nhp = _pad_to(_pad_to(near_onehot, 0, tm), 1, 128)
+    out = swap_gain_mod.swap_gain(dp, d1p, d2p, nhp, interpret=interpret)
+    return out[:n, :k]

@@ -1,0 +1,117 @@
+"""Pallas TPU kernels for the n x m pairwise-dissimilarity block.
+
+This is OneBatchPAM's dominant compute: O(n * m * p) FLOPs producing the
+(n, m) block that the whole local search then re-reads. Two kernels:
+
+  * ``l1_distance`` — the paper's metric. |x - b| has no matmul form, so it
+    is a VPU kernel: blocked abs-diff-accumulate with an (TN, TM) f32
+    accumulator resident in VMEM across the p-grid.
+  * ``l2_distance`` — MXU formulation: ||x||^2 + ||b||^2 - 2 x b^T with the
+    cross term as a (TN, TP) @ (TP, TM) dot per grid step.
+
+Tiling: grid = (n/TN, m/TM, p/TP). The output BlockSpec ignores the p index,
+so the same VMEM tile is revisited across the p sweep and accumulated
+in-place (initialised at p-step 0). Tile sizes keep the MXU/VPU shapes
+128-aligned and the working set << 16 MB VMEM:
+
+  l1: X tile (128, 512) + B tile (128, 512) + out (128, 128) + the
+      (128, 128, 8) broadcast slab ~ 1.5 MB.
+  l2: X (256, 256) + B^T view (256, 256) + out (256, 256) f32 ~ 1 MB.
+
+Inputs of any f32/bf16 dtype; accumulation always f32. Callers must pad
+shapes to tile multiples (ops.py does this).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# L1 tiles: p is blocked twice — TP per grid step, and an inner unrolled
+# TP_INNER loop keeping the (TN, TM, TP_INNER) broadcast slab small.
+L1_TN, L1_TM, L1_TP, L1_TP_INNER = 128, 128, 512, 8
+L2_TN, L2_TM, L2_TP = 256, 256, 256
+
+
+def _l1_kernel(x_ref, b_ref, o_ref):
+    """One (TN, TM) output tile; accumulates |x - b| sums over the p grid."""
+    pk = pl.program_id(2)
+
+    @pl.when(pk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (TN, TP)
+    b = b_ref[...].astype(jnp.float32)          # (TM, TP)
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    # Unrolled inner loop over TP in TP_INNER chunks: bounds the broadcast
+    # intermediate to (TN, TM, TP_INNER) f32 (= 512 KB) in VREG/VMEM.
+    for s in range(L1_TP // L1_TP_INNER):
+        xs = x[:, s * L1_TP_INNER:(s + 1) * L1_TP_INNER]
+        bs = b[:, s * L1_TP_INNER:(s + 1) * L1_TP_INNER]
+        acc += jnp.abs(xs[:, None, :] - bs[None, :, :]).sum(-1)
+    o_ref[...] += acc
+
+
+def _l2_kernel(x_ref, b_ref, o_ref):
+    """One (TN, TM) tile of ||x||^2 + ||b||^2 - 2 x.b^T, p-accumulated."""
+    pk = pl.program_id(2)
+
+    @pl.when(pk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (TN, TP)
+    b = b_ref[...].astype(jnp.float32)          # (TM, TP)
+    # Partial sums over this p chunk all add linearly across the grid.
+    xsq = jnp.sum(x * x, axis=1)                # (TN,)
+    bsq = jnp.sum(b * b, axis=1)                # (TM,)
+    cross = jax.lax.dot_general(
+        x, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (TN, TM) on the MXU
+    o_ref[...] += xsq[:, None] + bsq[None, :] - 2.0 * cross
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def l1_distance(x: jnp.ndarray, b: jnp.ndarray, *, interpret: bool = False) -> jnp.ndarray:
+    """Blocked L1 distance matrix. x (n, p), b (m, p) -> (n, m) f32.
+
+    Shapes must be multiples of (L1_TN, L1_TM, L1_TP); see ops.pairwise for
+    the padded public entry point.
+    """
+    n, p = x.shape
+    m, _ = b.shape
+    grid = (n // L1_TN, m // L1_TM, p // L1_TP)
+    return pl.pallas_call(
+        _l1_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((L1_TN, L1_TP), lambda i, j, pk: (i, pk)),
+            pl.BlockSpec((L1_TM, L1_TP), lambda i, j, pk: (j, pk)),
+        ],
+        out_specs=pl.BlockSpec((L1_TN, L1_TM), lambda i, j, pk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=interpret,
+    )(x, b)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def l2_distance(x: jnp.ndarray, b: jnp.ndarray, *, interpret: bool = False) -> jnp.ndarray:
+    """Blocked squared-L2 distance matrix. x (n, p), b (m, p) -> (n, m) f32."""
+    n, p = x.shape
+    m, _ = b.shape
+    grid = (n // L2_TN, m // L2_TM, p // L2_TP)
+    out = pl.pallas_call(
+        _l2_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((L2_TN, L2_TP), lambda i, j, pk: (i, pk)),
+            pl.BlockSpec((L2_TM, L2_TP), lambda i, j, pk: (j, pk)),
+        ],
+        out_specs=pl.BlockSpec((L2_TN, L2_TM), lambda i, j, pk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=interpret,
+    )(x, b)
+    return jnp.maximum(out, 0.0)

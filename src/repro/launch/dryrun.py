@@ -1,0 +1,337 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The two lines above MUST run before any other import (jax locks the host
+# device count on first init). Everything below is ordinary code.
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import subprocess    # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.analysis import hlo as hlo_analysis  # noqa: E402
+from repro.analysis import roofline  # noqa: E402
+from repro.configs import SHAPES, cells, get, registry  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import transformer  # noqa: E402
+from repro.models.sharding import MeshPlan, specs_for_tree  # noqa: E402
+from repro.serving import make_prefill, make_serve_step  # noqa: E402
+from repro.training import OptConfig, make_train_step  # noqa: E402
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+# Cache sharding preferences (see models/sharding.py for the mechanics).
+_CACHE_RULES = {
+    "k":    [(1, "batch"), (3, "model"), (4, "model"), (2, "batch")],
+    "v":    [(1, "batch"), (3, "model"), (4, "model"), (2, "batch")],
+    "conv": [(1, "batch"), (3, "model")],
+    "h":    [(1, "batch"), (2, "model")],
+    "c":    [(1, "batch"), (3, "model")],
+    "n":    [(1, "batch"), (3, "model")],
+    "m":    [(1, "batch")],
+    "enc_out": [(0, "batch")],
+}
+
+
+def _cache_specs(cache_shapes, plan):
+    from repro.models import sharding as sh
+    old = sh._RULES
+    try:
+        sh._RULES = {**old, **_CACHE_RULES}
+        # cache leaves are NOT stacked-shifted: dims in rules already
+        # include the leading period dim, so disable the shift.
+        return sh.specs_for_tree(cache_shapes, plan, stacked_root="\x00none")
+    finally:
+        sh._RULES = old
+
+
+def pick_grad_accum(cfg, shape, plan, target_tokens=8192):
+    dp = plan.size(plan.batch_axes)
+    per_dev_seqs = max(shape.global_batch // dp, 1)
+    per_dev_tokens = per_dev_seqs * shape.seq_len
+    return max(1, min(per_dev_tokens // target_tokens, per_dev_seqs))
+
+
+def _shard_tree(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def _maybe_batch(plan, size):
+    axes = plan.batch_axes
+    return P(axes) if size % plan.size(axes) == 0 and size >= plan.size(axes) \
+        else P()
+
+
+def _whisper_frames(cfg, batch):
+    return jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model),
+                                jnp.float32)
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of a cell
+    (weak-type-correct, shardable, no device allocation)."""
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        spec = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.encoder_layers:
+            spec["frames"] = _whisper_frames(cfg, B)
+        return spec
+    if shape.kind == "prefill":
+        spec = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.encoder_layers:
+            spec["frames"] = _whisper_frames(cfg, B)
+        return spec
+    # decode: one new token against a seq_len cache
+    return {"token": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "t": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def build_cell(arch: str, shape_name: str, mesh, plan):
+    """-> (fn, arg_shapes tuple, in_shardings tuple, meta dict)."""
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    meta = {"params": cfg.param_count(),
+            "active_params": cfg.active_param_count()}
+
+    if shape.kind == "train":
+        oc = OptConfig(moment_dtype=cfg.moment_dtype)
+        accum = pick_grad_accum(cfg, shape, plan)
+        meta["grad_accum"] = accum
+        # 100B+ models: bf16 accumulation buffer (same tradeoff as their
+        # bf16 Adam moments; DESIGN.md §7)
+        accum_dtype = ("bfloat16" if cfg.param_count() > 1e11 and accum > 1
+                       else "float32")
+        meta["accum_dtype"] = accum_dtype
+        step = make_train_step(cfg, oc, grad_accum=accum,
+                               accum_dtype=accum_dtype)
+        from repro.training import init_train_state
+        state_shapes = jax.eval_shape(
+            lambda: init_train_state(jax.random.PRNGKey(0), cfg, oc))
+        state_specs = specs_for_tree(state_shapes, plan)
+        batch_shapes = input_specs(arch, shape_name)
+        batch_specs = {"tokens": P(plan.batch_axes, None)}
+        if "frames" in batch_shapes:
+            batch_specs["frames"] = P(plan.batch_axes, None, None)
+        return (step, (state_shapes, batch_shapes),
+                (_shard_tree(mesh, state_specs),
+                 _shard_tree(mesh, batch_specs)), meta)
+
+    # serving cells store params in the compute dtype (deployment layout)
+    serve_cfg = dataclasses.replace(cfg, param_dtype=cfg.compute_dtype)
+    params_shapes = jax.eval_shape(
+        lambda: transformer.init_lm(jax.random.PRNGKey(0), serve_cfg))
+    params_specs = specs_for_tree(params_shapes, plan)
+
+    if shape.kind == "prefill":
+        fn = make_prefill(serve_cfg, max_len=S)
+        batch_shapes = input_specs(arch, shape_name)
+        args = (params_shapes, batch_shapes["tokens"])
+        shards = (_shard_tree(mesh, params_specs),
+                  NamedSharding(mesh, _maybe_batch(plan, B)))
+        if "frames" in batch_shapes:
+            args = args + (batch_shapes["frames"],)
+            shards = shards + (NamedSharding(
+                mesh, P(plan.batch_axes, None, None)
+                if B % plan.size(plan.batch_axes) == 0 else P()),)
+        return fn, args, shards, meta
+
+    # decode
+    fn = make_serve_step(serve_cfg)
+    cache_shapes = jax.eval_shape(
+        lambda: transformer.init_cache(serve_cfg, B, S))
+    cache_specs = _cache_specs(cache_shapes, plan)
+    io = input_specs(arch, shape_name)
+    args = (params_shapes, cache_shapes, io["token"], io["t"])
+    shards = (_shard_tree(mesh, params_specs),
+              _shard_tree(mesh, cache_specs),
+              NamedSharding(mesh, _maybe_batch(plan, B)),
+              NamedSharding(mesh, P()))
+    return fn, args, shards, meta
+
+
+def build_obp_cell(mesh, plan, *, n=1 << 22, p=4096, m=1024, k=256):
+    """The paper-technique cell: distributed OneBatchPAM solve on the mesh
+    (embedding-scale curation workload)."""
+    from repro.core.distributed import make_distributed_obp
+    run = make_distributed_obp(mesh, k=k, metric="l1", max_swaps=64)
+    x = jax.ShapeDtypeStruct((n, p), jnp.float32)
+    bi = jax.ShapeDtypeStruct((m,), jnp.int32)
+    w = jax.ShapeDtypeStruct((m,), jnp.float32)
+    init = jax.ShapeDtypeStruct((k,), jnp.int32)
+    meta = {"params": 0, "active_params": 0, "n": n, "p": p, "m": m, "k": k}
+    return run, (x, bi, w, init), None, meta
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: str = ARTIFACT_DIR, save_hlo: bool = False) -> dict:
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    plan = MeshPlan.from_mesh(mesh)
+    chips = mesh.devices.size
+
+    if arch == "obp-selection":
+        fn, args, shards, meta = build_obp_cell(mesh, plan)
+        shape_kind = "obp"
+        mf = 0.0
+    else:
+        fn, args, shards, meta = build_cell(arch, shape_name, mesh, plan)
+        shape_kind = SHAPES[shape_name].kind
+        mf = roofline.model_flops(get(arch), SHAPES[shape_name])
+
+    t0 = time.perf_counter()
+    with jax.sharding.set_mesh(mesh):
+        jfn = jax.jit(fn, in_shardings=shards) if shards is not None \
+            else fn  # obp cell is already jitted with shard_map specs
+        lowered = jfn.lower(*args)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    pod_size = 256 if multi else None
+    costs = hlo_analysis.analyze(hlo_text, pod_size=pod_size)
+    rl = roofline.compute(costs, chips=chips, model_flops_global=mf)
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "kind": shape_kind, "chips": chips, "meta": meta,
+        "times": {"lower_s": t_lower, "compile_s": t_compile},
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        },
+        "xla_cost_analysis": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+        },
+        "hlo_per_device": costs,
+        "roofline": rl.as_dict(),
+        "hlo_chars": len(hlo_text),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{arch}__{shape_name}__{mesh_kind}"
+    with open(os.path.join(out_dir, name + ".json"), "w") as f:
+        json.dump(result, f, indent=1)
+    if save_hlo:
+        with open(os.path.join(out_dir, name + ".hlo.txt"), "w") as f:
+            f.write(hlo_text)
+    return result
+
+
+def _cell_list(mesh_kinds):
+    out = []
+    for arch, shape_name, skip in cells():
+        for mk in mesh_kinds:
+            out.append((arch, shape_name, mk, skip))
+    for mk in mesh_kinds:
+        out.append(("obp-selection", "selection", mk, None))
+    return out
+
+
+def run_all(mesh_kinds, jobs: int, out_dir: str, force: bool) -> None:
+    todo = []
+    skipped = []
+    for arch, shape_name, mk, skip in _cell_list(mesh_kinds):
+        name = f"{arch}__{shape_name}__{mk}"
+        path = os.path.join(out_dir, name + ".json")
+        if skip:
+            skipped.append({"arch": arch, "shape": shape_name, "mesh": mk,
+                            "skip": skip})
+            continue
+        if not force and os.path.exists(path):
+            print(f"[cached] {name}")
+            continue
+        todo.append((arch, shape_name, mk, name))
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "skips.json"), "w") as f:
+        json.dump(skipped, f, indent=1)
+
+    procs: list = []
+    results = {"ok": 0, "fail": []}
+
+    def reap(block=False):
+        for pr, name, logf in procs[:]:
+            if pr.poll() is None and not block:
+                continue
+            pr.wait()
+            procs.remove((pr, name, logf))
+            if pr.returncode == 0:
+                results["ok"] += 1
+                print(f"[ok] {name}")
+            else:
+                results["fail"].append(name)
+                print(f"[FAIL] {name} (log: {logf})")
+
+    for arch, shape_name, mk, name in todo:
+        while len(procs) >= jobs:
+            reap()
+            time.sleep(2)
+        logf = os.path.join(out_dir, name + ".log")
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape_name, "--mesh", mk, "--out", out_dir]
+        env = dict(os.environ)
+        with open(logf, "w") as lf:
+            pr = subprocess.Popen(cmd, stdout=lf, stderr=lf, env=env)
+        procs.append((pr, name, logf))
+        print(f"[start] {name}")
+    while procs:
+        reap(block=True)
+        time.sleep(1)
+    print(f"done: {results['ok']} ok, {len(results['fail'])} failed, "
+          f"{len(skipped)} skipped")
+    if results["fail"]:
+        print("failed:", results["fail"])
+        sys.exit(1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=registry.ARCH_IDS + ("obp-selection",))
+    ap.add_argument("--shape", default="train_4k",
+                    choices=tuple(SHAPES) + ("selection",))
+    ap.add_argument("--mesh", default="single", choices=("single", "multi",
+                                                         "both"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=3)
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    kinds = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    if args.all:
+        run_all(kinds, args.jobs, args.out, args.force)
+        return
+    for mk in kinds:
+        res = run_cell(args.arch, args.shape, mk, args.out, args.save_hlo)
+        mem = res["memory"]
+        rl = res["roofline"]
+        print(json.dumps({
+            "cell": f'{args.arch}/{args.shape}/{mk}',
+            "compile_s": round(res["times"]["compile_s"], 1),
+            "arg_gb": round((mem["argument_bytes"] or 0) / 2**30, 3),
+            "temp_gb": round((mem["temp_bytes"] or 0) / 2**30, 3),
+            "bottleneck": rl["bottleneck"],
+            "mfu": round(rl["mfu"], 4),
+        }))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (smoke tests see 1 CPU device; only dryrun.py sets
+the 512-device XLA flag).
+
+Topology (v5e): one pod = 256 chips as (data=16, model=16); multi-pod adds
+a leading DCN-connected "pod" axis — (pod=2, data=16, model=16) for the
+2-pod dry-run. The same function scales the pod axis for larger fleets
+(elastic: the checkpoint layer is topology-independent).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(axes):
+    return (jax.sharding.AxisType.Auto,) * len(axes)
+
+
+def make_production_mesh(*, multi_pod: bool = False, num_pods: int = 2):
+    if multi_pod:
+        shape = (num_pods, 16, 16)
+        axes = ("pod", "data", "model")
+    else:
+        shape = (16, 16)
+        axes = ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(axes))
+
+
+def make_host_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over forced host devices (tests / examples)."""
+    return jax.make_mesh(shape, axes, axis_types=_auto(axes))

@@ -1,0 +1,139 @@
+"""Training driver: checkpointed, preemption-safe, straggler-aware.
+
+CPU-scale usage (end-to-end example driver):
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --reduced --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/run1 \
+      --resume auto
+
+On a real fleet the same entry point runs per host under
+launch/scripts/tpu_pod.sh (jax.distributed initialises from the
+coordinator env), with the production mesh from launch/mesh.py.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import signal
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs import get, reduced as make_reduced
+from repro.data import TokenIterator, TokenStore, build_synthetic
+from repro.monitoring import CSVLogger, StepTimer
+from repro.training import OptConfig, init_train_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale reduced config of the same family")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--data", default="synthetic")
+    ap.add_argument("--data-tokens", type=int, default=2_000_000)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", default="no", choices=("no", "auto"))
+    ap.add_argument("--log", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get(args.arch)
+    if args.reduced:
+        cfg = make_reduced(cfg)
+    oc = OptConfig(lr=args.lr, warmup_steps=args.warmup,
+                   total_steps=args.steps, moment_dtype=cfg.moment_dtype)
+    step_fn = jax.jit(make_train_step(cfg, oc, grad_accum=args.grad_accum))
+
+    if args.data == "synthetic":
+        path = os.path.join(args.ckpt_dir or "/tmp", f"{args.arch}.tokens.bin")
+        if not os.path.exists(path):
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            build_synthetic(path, args.data_tokens, cfg.vocab_size,
+                            seed=args.seed)
+        store = TokenStore(path, cfg.vocab_size)
+    else:
+        store = TokenStore(args.data, cfg.vocab_size)
+
+    host_id = jax.process_index() if jax.process_count() > 1 else 0
+    it = TokenIterator(store, args.batch, args.seq, seed=args.seed,
+                       shard_id=host_id, num_shards=max(jax.process_count(), 1))
+
+    state = init_train_state(jax.random.PRNGKey(args.seed), cfg, oc)
+    start_step = 0
+    if args.resume == "auto" and args.ckpt_dir \
+            and ckpt.latest_step(args.ckpt_dir) is not None:
+        target = jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype), state)
+        state, extra = ckpt.restore(args.ckpt_dir, target)
+        it.restore(extra["data"])
+        start_step = int(extra.get("step", 0))
+        print(f"[resume] from step {start_step}")
+
+    logger = CSVLogger(args.log, ["step", "loss", "grad_norm", "lr",
+                                  "sec_per_step", "straggler"]) \
+        if args.log else None
+    timer = StepTimer()
+
+    stop = {"now": False}
+
+    def on_term(signum, frame):
+        print("[signal] SIGTERM: checkpointing and exiting")
+        stop["now"] = True
+
+    signal.signal(signal.SIGTERM, on_term)
+
+    def save(step):
+        if args.ckpt_dir:
+            ckpt.save(args.ckpt_dir, step, state,
+                      extra={"data": it.state(), "step": step})
+
+    frames = None
+    if cfg.encoder_layers:
+        frames = jnp.zeros((args.batch, cfg.encoder_seq, cfg.d_model),
+                           jnp.float32)
+
+    loss = float("nan")
+    for step in range(start_step, args.steps):
+        batch = it.__next__()
+        feed = {"tokens": jnp.asarray(batch["tokens"])}
+        if frames is not None:
+            feed["frames"] = frames
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, feed)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        flagged = timer.record(dt)
+        if flagged:
+            print(f"[straggler] step {step}: {dt:.2f}s vs ema "
+                  f"{timer.ema:.2f}s")
+        if logger:
+            logger.log(step=step, loss=loss,
+                       grad_norm=float(metrics["grad_norm"]),
+                       lr=float(metrics["lr"]),
+                       sec_per_step=round(dt, 4), straggler=int(flagged))
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} {dt:.2f}s")
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            save(step + 1)
+        if stop["now"]:
+            save(step + 1)
+            sys.exit(0)
+    save(args.steps)
+    print(f"done: final loss {loss:.4f}, stragglers {timer.stragglers}")
+    return loss
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Model zoo: composable blocks + periodic LayerProgram assembly."""
+from .transformer import (  # noqa: F401
+    decode_step,
+    forward,
+    init_cache,
+    init_lm,
+    prefill,
+)
+from .sharding import MeshPlan, constrain, specs_for_tree  # noqa: F401

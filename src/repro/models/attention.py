@@ -1,0 +1,242 @@
+"""GQA attention: causal / sliding-window / bidirectional / cross, with
+optional attention-logit softcap (gemma2) and QKV bias (qwen1.5), plus the
+KV-cache decode path.
+
+GQA is computed in grouped form — queries reshaped to (B, S, KV, G, hd) so
+K/V are never materialised H/KV times. The (pod, data) axes shard batch;
+the model axis shards heads (or head_dim for small archs, per
+sharding._RULES).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.sharding import constrain
+
+NEG_INF = jnp.float32(-1e30)
+BATCH = ("pod", "data")
+
+
+def init_attention(key, cfg, *, d_in=None, heads=None, kv_heads=None,
+                   dtype=jnp.float32):
+    d = d_in or cfg.d_model
+    H = heads or cfg.num_heads
+    KV = kv_heads or cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(ks[0], (d, H, hd), fan_in=d, dtype=dtype),
+        "wk": layers.dense_init(ks[1], (d, KV, hd), fan_in=d, dtype=dtype),
+        "wv": layers.dense_init(ks[2], (d, KV, hd), fan_in=d, dtype=dtype),
+        "wo": layers.dense_init(ks[3], (H, hd, d), fan_in=H * hd, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((KV, hd), dtype)
+        p["bv"] = jnp.zeros((KV, hd), dtype)
+    return p
+
+
+def _project_qkv(params, x, kv_x):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return q, k, v
+
+
+def _attend(q, k, v, mask, attn_softcap):
+    """q: (B,S,KV,G,hd); k,v: (B,T,KV,hd); mask: broadcastable (B,1,1,S,T)."""
+    hd = q.shape[-1]
+    logits = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(jnp.float32(hd))
+    logits = layers.softcap(logits, attn_softcap)
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgst,btkh->bskgh", probs, v)
+
+
+# ------------------------------------------------------- flash attention --
+
+FLASH_Q_CHUNK = 512
+FLASH_KV_CHUNK = 1024
+
+
+def _flash_q_chunk(q_c, k, v, q_start, *, causal, window, attn_softcap,
+                   kv_chunk):
+    """Online-softmax over kv chunks for one query chunk.
+    q_c: (B, qc, KV, G, hd); k/v: (B, T, KV, hd). Static kv range: causal
+    chunks above the diagonal are never visited (triangular schedule)."""
+    B, qc, KV, G, hd = q_c.shape
+    T = k.shape[1]
+    q_end = q_start + qc
+    kv_hi = min(T, q_end) if causal else T
+    kv_lo = 0
+    if window is not None:
+        kv_lo = max(0, q_start - window + 1)
+        kv_lo = (kv_lo // kv_chunk) * kv_chunk
+    n_kv = -(-(kv_hi - kv_lo) // kv_chunk)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    row_idx = q_start + jnp.arange(qc)
+
+    def step(carry, i):
+        m, l, acc = carry
+        start = kv_lo + i * kv_chunk
+        k_blk = jax.lax.dynamic_slice(k, (0, start, 0, 0),
+                                      (B, kv_chunk, KV, hd))
+        v_blk = jax.lax.dynamic_slice(v, (0, start, 0, 0),
+                                      (B, kv_chunk, KV, hd))
+        logits = jnp.einsum("bskgh,btkh->bkgst", q_c, k_blk
+                            ).astype(jnp.float32) * scale
+        logits = layers.softcap(logits, attn_softcap)
+        col_idx = start + jnp.arange(kv_chunk)
+        mask = col_idx[None, :] < T  # guard the ragged tail chunk
+        if causal:
+            mask &= col_idx[None, :] <= row_idx[:, None]
+        if window is not None:
+            mask &= (row_idx[:, None] - col_idx[None, :]) < window
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        pv = jnp.einsum("bkgst,btkh->bkgsh", p.astype(v.dtype), v_blk)
+        acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, qc), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+    acc0 = jnp.zeros((B, KV, G, qc, hd), q_c.dtype)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), jnp.arange(n_kv))
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    return out.transpose(0, 3, 1, 2, 4)  # (B, qc, KV, G, hd)
+
+
+def _attend_flash(q, k, v, *, causal, window, attn_softcap,
+                  q_chunk=FLASH_Q_CHUNK, kv_chunk=FLASH_KV_CHUNK):
+    """Chunked attention with O(q_chunk * kv_chunk) live logits. The python
+    loop over query chunks is static, so causal scheduling skips all blocks
+    above the diagonal (no masked-flops waste beyond the diagonal chunk)."""
+    B, S, KV, G, hd = q.shape
+    q_chunk = min(q_chunk, S)
+    while S % q_chunk:
+        q_chunk -= 1
+    chunk_fn = jax.checkpoint(
+        functools.partial(_flash_q_chunk, causal=causal, window=window,
+                          attn_softcap=attn_softcap, kv_chunk=kv_chunk),
+        static_argnums=(3,))
+    outs = []
+    for qi in range(S // q_chunk):
+        q_c = jax.lax.slice_in_dim(q, qi * q_chunk, (qi + 1) * q_chunk, axis=1)
+        outs.append(chunk_fn(q_c, k, v, qi * q_chunk))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _use_flash(S, T, kv_chunk=FLASH_KV_CHUNK):
+    return S >= 2 * FLASH_Q_CHUNK and T >= 4 * kv_chunk
+
+
+def _train_mask(S, T, *, causal, window, offset=0):
+    if not causal and window is None:
+        return None
+    s_idx = jnp.arange(S)[:, None] + offset
+    t_idx = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= t_idx <= s_idx
+    if window is not None:
+        mask &= (s_idx - t_idx) < window
+    return mask[None, None, None, :, :]
+
+
+def attention(params, cfg, x, *, kv_x=None, causal=True, window=None,
+              rope=True, positions=None, attn_softcap=None):
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    B, S, _ = x.shape
+    kv_x = x if kv_x is None else kv_x
+    T = kv_x.shape[1]
+    q, k, v = _project_qkv(params, x, kv_x)
+    # Megatron layout inside attention: gather the sequence dim, shard
+    # heads over the model axis (constrain() drops the axis when heads do
+    # not divide — small archs fall back to GSPMD's choice).
+    q = constrain(q, P(BATCH, None, "model", None))
+    k = constrain(k, P(BATCH, None, "model", None))
+    v = constrain(v, P(BATCH, None, "model", None))
+    H, hd = q.shape[2], q.shape[3]
+    KV = k.shape[2]
+    if rope and cfg.rope_theta:
+        pos = positions if positions is not None else jnp.arange(S)
+        cos, sin = layers.rope_angles(pos, hd, cfg.rope_theta)
+        q = layers.apply_rope(q, cos, sin)
+        k = layers.apply_rope(k, cos, sin)
+    qg = q.reshape(B, S, KV, H // KV, hd)
+    qg = constrain(qg, P(BATCH, None, "model", None, None))
+    if _use_flash(S, T):
+        out = _attend_flash(qg, k, v, causal=causal, window=window,
+                            attn_softcap=attn_softcap)
+    else:
+        mask = _train_mask(S, T, causal=causal, window=window)
+        out = _attend(qg, k, v, mask, attn_softcap)
+    out = out.reshape(B, S, H, hd)
+    out = constrain(out, P(BATCH, None, "model", None))
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+# ---------------------------------------------------------------- decode --
+
+def init_kv_cache(cfg, batch, max_len, dtype, *, heads=None):
+    KV = heads or cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, KV, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(params, cfg, x, cache, pos, *, window=None,
+                     attn_softcap=None):
+    """One-token decode: x (B, 1, D), cache k/v (B, L, KV, hd), pos:
+    scalar int32 — position being written.
+
+    Local-attention layers use a RING buffer of length L = min(window,
+    max_len): token t lives at slot t % L, so the cache never grows past
+    the window (gemma2 decode_32k: 4096 slots instead of 32768). The slot
+    validity mask `slot_token >= 0` with slot_token = pos - ((pos - i) %
+    L) degenerates to the plain causal mask when L = max_len, so one code
+    path serves both."""
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(params, x, x)
+    H, hd = q.shape[2], q.shape[3]
+    KV = k_new.shape[2]
+    if cfg.rope_theta:
+        posv = jnp.full((1,), pos)
+        cos, sin = layers.rope_angles(posv, hd, cfg.rope_theta)
+        q = layers.apply_rope(q, cos, sin)
+        k_new = layers.apply_rope(k_new, cos, sin)
+    L = cache["k"].shape[1]
+    ring = window is not None
+    write_pos = (pos % L) if ring else pos
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, write_pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, write_pos, 0, 0))
+    slot = jnp.arange(L)
+    if ring:
+        slot_token = pos - ((pos - slot) % L)
+        mask = (slot_token >= 0)[None, None, None, None, :]
+        if window < L:  # pragma: no cover - L == min(window, max_len)
+            mask &= ((pos - slot_token) < window)[None, None, None, None, :]
+    else:
+        mask = (slot <= pos)[None, None, None, None, :]
+    qg = q.reshape(B, 1, KV, H // KV, hd)
+    out = _attend(qg, k, v, mask, attn_softcap)
+    out = out.reshape(B, 1, H, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"k": k, "v": v}

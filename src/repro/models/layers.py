@@ -1,0 +1,96 @@
+"""Shared building blocks: norms, RoPE, dense FFNs, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape, jnp.float32)
+            / jnp.sqrt(jnp.float32(max(fan_in, 1)))).astype(dtype)
+
+
+def rmsnorm_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def softcap(x, cap):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ------------------------------------------------------------------ RoPE --
+
+def rope_angles(positions, head_dim, theta):
+    """cos/sin tables for `positions` (any shape) -> (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, hd); cos/sin: (S, hd/2) or (B, S, hd/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch & heads
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:              # (B, S, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    xf = x.astype(jnp.float32)
+    x1f, x2f = xf[..., :half], xf[..., half:]
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq, d, dtype=jnp.float32):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+# ------------------------------------------------------------------- FFN --
+
+def init_mlp(key, d, f, ffn_type, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    params = {"wi": dense_init(ks[0], (d, f), dtype=dtype),
+              "wd": dense_init(ks[1], (f, d), dtype=dtype)}
+    if ffn_type == "swiglu":
+        params["wg"] = dense_init(ks[2], (d, f), dtype=dtype)
+    return params
+
+
+def mlp(params, x, ffn_type):
+    h = x @ params["wi"]
+    if ffn_type == "swiglu":
+        h = jax.nn.silu(x @ params["wg"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ params["wd"]
+
+
+# ------------------------------------------------------------- embedding --
+
+def init_embed(key, vocab, d, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def embed(params, tokens, *, scale=False):
+    h = params["table"][tokens]
+    if scale:
+        h = h * jnp.sqrt(jnp.float32(params["table"].shape[1])).astype(h.dtype)
+    return h

@@ -1,0 +1,126 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based, capacity-bounded
+dispatch (static shapes, SPMD-friendly).
+
+Dispatch pipeline (per MoE layer):
+  1. router scores (T, E) in f32, top-k per token;
+  2. flatten the T*k assignments, stable-sort by expert id;
+  3. position-within-expert via searchsorted; tokens beyond the per-expert
+     capacity C are dropped (their residual path still carries them);
+  4. scatter to (E, C, D) slots, expert matmuls as one (E, C, D)x(E, D, F)
+     einsum (MXU-friendly, experts sharded over the model axis when
+     E % model == 0 — EP; otherwise d_ff is sharded — TP-inside-expert);
+  5. combine back with routing weights via scatter-add.
+
+Capacity C = ceil(T * k / E * capacity_factor) keeps the dispatched
+activation at O(T * k * D * cf) regardless of routing skew. The auxiliary
+load-balance loss is the standard switch-style E * sum_e f_e * p_e.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.sharding import constrain
+from jax.sharding import PartitionSpec as P
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": layers.dense_init(ks[0], (d, e), dtype=jnp.float32),
+        "moe_wi": layers.dense_init(ks[1], (e, d, f), fan_in=d, dtype=dtype),
+        "moe_wd": layers.dense_init(ks[2], (e, f, d), fan_in=f, dtype=dtype),
+    }
+    if cfg.ffn_type == "swiglu":
+        p["moe_wg"] = layers.dense_init(ks[3], (e, d, f), fan_in=d, dtype=dtype)
+    return p
+
+
+def capacity(tokens: int, cfg) -> int:
+    c = math.ceil(tokens * cfg.experts_per_token / cfg.num_experts
+                  * cfg.capacity_factor)
+    # keep C divisible by a model axis up to 16 so the dispatch buffer can
+    # shard on capacity when E does not divide the model axis (grok: 8e)
+    return max(16, min(c + (-c) % 16, tokens))
+
+
+def _dispatch_spec(E: int, C: int):
+    """EP when experts divide the model axis; otherwise shard CAPACITY
+    over the batch axes (C@model would conflict with the experts' F@model
+    TP layout and force an 8 GB xg all-gather — grok iteration 1/2).
+    Without any sharding the (E, C, D) dispatch buffer replicates and its
+    combine becomes a full all-reduce — 96% of grok-1's v1 collective
+    bytes."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return P(None, None, None)
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    if E % sizes["model"] == 0:
+        return P("model", None, None)
+    batch = tuple(n for n in mesh.axis_names if n != "model")
+    bs = 1
+    for b in batch:
+        bs *= sizes[b]
+    if bs > 1 and C % bs == 0:
+        return P(None, batch, None)
+    return P(None, None, None)
+
+
+def moe_ffn(params, cfg, x):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar f32)."""
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = capacity(T, cfg)
+    xf = x.reshape(T, D)
+
+    scores = (xf.astype(jnp.float32) @ params["router"])          # (T, E)
+    probs = jax.nn.softmax(scores, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, K)                        # (T, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux (switch-style)
+    frac = jnp.zeros((E,), jnp.float32).at[top_i.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(frac * probs.mean(0))
+
+    flat_e = top_i.reshape(-1)                                    # (T*K,)
+    flat_w = top_w.reshape(-1).astype(x.dtype)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    starts = jnp.searchsorted(se, jnp.arange(E))
+    pos = jnp.arange(T * K) - starts[se]
+    keep = pos < C
+    slot = jnp.where(keep, se * C + pos, E * C)                   # overflow -> E*C
+
+    tok_for_slot = jnp.zeros((E * C + 1,), jnp.int32).at[slot].set(
+        st.astype(jnp.int32))
+    w_for_slot = jnp.zeros((E * C + 1,), x.dtype).at[slot].set(
+        jnp.where(keep, sw, 0).astype(x.dtype))
+
+    spec = _dispatch_spec(E, C)
+    xg = xf[tok_for_slot[:E * C]].reshape(E, C, D)
+    xg = constrain(xg, spec)
+
+    h = jnp.einsum("ecd,edf->ecf", xg, params["moe_wi"])
+    if cfg.ffn_type == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xg, params["moe_wg"])) * h
+    else:
+        h = jax.nn.gelu(h)
+    y = jnp.einsum("ecf,efd->ecd", h, params["moe_wd"])
+    y = constrain(y, spec)
+
+    # combine: scatter back to token layout. The accumulator is pinned to
+    # the token sharding up front — an unsharded target makes GSPMD
+    # replicate the scatter and all-reduce the full (T, D) buffer.
+    batch = tuple(a for a in ("pod", "data"))
+    zeros = constrain(jnp.zeros((T, D), x.dtype), P(batch, None))
+    out = zeros.at[tok_for_slot[:E * C]].add(
+        y.reshape(E * C, D) * w_for_slot[:E * C, None])
+    out = constrain(out, P(batch, None))
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,40 @@
+"""Mixed-precision casting with explicit ZeRO-3 gather points.
+
+Masters live f32, sharded (model x data) per sharding._RULES. Compute
+copies are cast to bf16 and re-constrained to MODEL-ONLY sharding — the
+constraint pins GSPMD to gather-weights-over-data (ZeRO-3) instead of
+all-reducing full activations against data-sharded weights.
+
+Placement matters: the block stack is cast INSIDE the layer scan
+(per-period slice), so only one period's gathered bf16 weights are live
+at a time — casting the whole stack up front materialises params/16
+per device (grok: +39 GB, §Perf iteration 3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding as sh
+
+# f32-sensitive leaves never downcast to the compute dtype.
+KEEP_F32 = ("router", "a_log", "b_gates", "dt_bias", "w_gates")
+
+
+def cast_tree(params, compute_dtype, *, constrain_model_only: bool = False,
+              stacked: bool = True):
+    dt = jnp.dtype(compute_dtype)
+
+    def cast(path, p):
+        name = str(getattr(path[-1], "key", ""))
+        if name in KEEP_F32 or not jnp.issubdtype(p.dtype, jnp.floating):
+            return p
+        return p.astype(dt)
+
+    out = jax.tree_util.tree_map_with_path(cast, params)
+    if constrain_model_only:
+        plan = sh.compute_plan_from_context()
+        if plan is not None:
+            out = sh.constrain_tree(
+                out, plan, stacked_root="blocks" if stacked else "\x00none")
+    return out

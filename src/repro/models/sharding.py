@@ -1,0 +1,194 @@
+"""Parameter/activation sharding rules (GSPMD, path-based).
+
+Single-pod mesh: ("data", "model"); multi-pod adds a leading "pod" axis.
+Roles:
+  * model — Megatron TP: heads / d_ff / vocab / experts.
+  * fsdp  — parameter + optimizer-state sharding over the in-pod "data"
+            axis (ZeRO-3-like); the pod axis replicates params (pure DP
+            over DCN) unless fsdp_over_pod is set.
+  * batch — activation batch dims over ("pod", "data").
+
+Divisibility rule (DESIGN.md section 5): each preference (dim, role) is
+applied only if the dim size divides by the axis size and the axis is not
+already used — small archs (whisper's 8 heads on a 16-wide model axis)
+fall through to their next preference (head_dim) automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """Static description of the mesh used to resolve sharding roles."""
+    axis_sizes: dict          # name -> size
+    model_axis: str = "model"
+    fsdp_axes: tuple = ("data",)
+    batch_axes: tuple = ("data",)   # ("pod", "data") multi-pod
+    seq_shard: bool = True          # sequence-parallel residual stream
+
+    @staticmethod
+    def from_mesh(mesh, *, fsdp_over_pod: bool = False, seq_shard: bool = True):
+        names = tuple(mesh.axis_names)
+        sizes = dict(zip(names, mesh.devices.shape)) if hasattr(mesh, "devices") \
+            else {n: s for n, s in zip(names, mesh.axis_sizes)}
+        batch = tuple(n for n in names if n != "model")
+        fsdp = batch if fsdp_over_pod else tuple(n for n in batch if n != "pod")
+        return MeshPlan(axis_sizes=sizes, batch_axes=batch, fsdp_axes=fsdp)
+
+    def size(self, axes) -> int:
+        if isinstance(axes, str):
+            axes = (axes,)
+        out = 1
+        for a in axes:
+            out *= self.axis_sizes.get(a, 1)
+        return out
+
+    def has(self, axis: str) -> bool:
+        return self.axis_sizes.get(axis, 1) > 1
+
+
+# Preference tables: leaf name -> ordered (dim, role) assignments.
+# role: "model" | "fsdp". Dims are indices into the UNSTACKED leaf shape.
+_RULES = {
+    # embeddings / head
+    "table":    [(0, "model"), (1, "fsdp")],
+    "head_w":   [(1, "model"), (0, "fsdp")],
+    "pos_table": [(1, "fsdp")],
+    # attention (d, H, hd) / (H, hd, d). These are the MASTER layouts
+    # (f32 + optimizer states, ZeRO-3 sharded over model x data); the
+    # bf16 compute copies are re-constrained to model-only sharding at
+    # the cast (trainer.cast_for_compute), which pins GSPMD to the
+    # gather-weights schedule instead of all-reducing activations over
+    # the data axis — see EXPERIMENTS.md §Perf (grok iterations).
+    "wq":       [(1, "model"), (2, "model"), (0, "fsdp")],
+    "wk":       [(1, "model"), (2, "model"), (0, "fsdp")],
+    "wv":       [(1, "model"), (2, "model"), (0, "fsdp")],
+    "wo":       [(0, "model"), (1, "model"), (2, "fsdp")],
+    "bq":       [], "bk": [], "bv": [],
+    # dense mlp (d, F) / (F, d)
+    "wi":       [(1, "model"), (0, "fsdp")],
+    "wg":       [(1, "model"), (0, "fsdp")],
+    "wd":       [(0, "model"), (1, "fsdp")],
+    # moe (E, d, F) / (E, F, d); EP on experts when divisible, else TP on F
+    "moe_wi":   [(0, "model"), (2, "model"), (1, "fsdp")],
+    "moe_wg":   [(0, "model"), (2, "model"), (1, "fsdp")],
+    "moe_wd":   [(0, "model"), (1, "model"), (2, "fsdp")],
+    "router":   [(0, "fsdp")],
+    # mamba
+    "in_proj":  [(1, "model"), (0, "fsdp")],
+    "conv_w":   [(1, "model")],
+    "conv_b":   [(0, "model")],
+    "x_proj":   [(0, "model")],
+    "dt_proj":  [(1, "model")],
+    "dt_bias":  [(0, "model")],
+    "a_log":    [(0, "model")],
+    "skip_d":   [(0, "model")],
+    "out_proj": [(0, "model"), (1, "fsdp")],
+    # mlstm / slstm
+    "w_up":     [(1, "model"), (0, "fsdp")],
+    "w_down":   [(0, "model"), (1, "fsdp")],
+    "w_gates":  [(0, "fsdp")],
+    # (NH, 4, hd, hd): shard recurrent mats over model on hd — keeps the
+    # per-step gradient accumulation carry sharded (otherwise GSPMD
+    # all-reduces a replicated 16.8MB grad every timestep of the scan)
+    "r_gates":  [(2, "model")],
+    # norms
+    "scale":    [],
+    "bias":     [],
+}
+
+
+def _leaf_name(path) -> str:
+    keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+    return str(keys[-1])
+
+
+def specs_for_tree(tree, plan: MeshPlan, *, stacked_root: str = "blocks"):
+    """PartitionSpec pytree mirroring `tree` (arrays or ShapeDtypeStructs)."""
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        keys = [str(getattr(k, "key", "")) for k in path]
+        stacked = any(k.startswith(stacked_root) for k in keys)
+        rules = _RULES.get(name, [])
+        shape = leaf.shape
+        shift = 1 if stacked else 0
+        spec = [None] * len(shape)
+        used = set()
+        for dim, role in rules:
+            d = dim + shift
+            if d >= len(shape) or spec[d] is not None:
+                continue
+            if role == "model":
+                axes = (plan.model_axis,)
+            elif role == "model_fsdp":
+                axes = (plan.model_axis,) + tuple(plan.fsdp_axes)
+            else:
+                axes = plan.fsdp_axes
+            axes = tuple(a for a in axes if plan.has(a) and a not in used)
+            if not axes:
+                continue
+            if shape[d] % plan.size(axes) == 0 and shape[d] >= plan.size(axes):
+                spec[d] = axes[0] if len(axes) == 1 else axes
+                used.update(axes)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint that (a) no-ops outside a mesh context,
+    (b) drops axes absent from the current mesh, (c) drops axes whose size
+    does not divide the dim (e.g. seq-sharding a length-1 decode step)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    fixed = []
+    for i, entry in enumerate(spec):
+        dim = x.shape[i] if i < x.ndim else 1
+        if entry is None:
+            fixed.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = tuple(a for a in axes if a in sizes)
+        prod = 1
+        for a in kept:
+            prod *= sizes[a]
+        if not kept or prod == 0 or dim % prod != 0:
+            fixed.append(None)
+        else:
+            fixed.append(kept if len(kept) > 1 else kept[0])
+    return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
+def batch_spec(plan_or_axes) -> tuple:
+    if isinstance(plan_or_axes, MeshPlan):
+        return plan_or_axes.batch_axes
+    return tuple(plan_or_axes)
+
+
+def compute_plan_from_context() -> "MeshPlan | None":
+    """MeshPlan for the bf16 COMPUTE copies: model-only sharding (fsdp
+    axes empty). Derived from the abstract mesh at trace time; None when
+    tracing outside a mesh (smoke tests)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return None
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    batch = tuple(n for n in mesh.axis_names if n != "model")
+    return MeshPlan(axis_sizes=sizes, batch_axes=batch, fsdp_axes=())
+
+
+def constrain_tree(tree, plan: "MeshPlan", *, stacked_root="blocks"):
+    """Apply specs_for_tree layouts as sharding constraints (ZeRO-3
+    gather point for the compute-cast weights)."""
+    specs = specs_for_tree(tree, plan, stacked_root=stacked_root)
+    return jax.tree.map(
+        lambda x, s: constrain(x, s), tree, specs,
+        is_leaf=lambda x: not isinstance(x, dict))

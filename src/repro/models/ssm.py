@@ -1,0 +1,417 @@
+"""Recurrent mixers: Mamba (jamba), mLSTM / sLSTM (xLSTM).
+
+TPU adaptation notes (DESIGN.md §8):
+  * Mamba's selective scan is evaluated in CHUNKED form: within a chunk the
+    linear recurrence h_t = a_t h_{t-1} + b_t runs as an associative scan
+    (parallel, VPU/MXU friendly); across chunks a short lax.scan carries the
+    state. Chunk length bounds the (B, L, d_inner, state) working set.
+  * mLSTM keeps the stabilised exponential-gating recurrence of the xLSTM
+    paper as a sequential scan (matrix memory C per head); the chunked
+    linear-attention formulation is a §Perf hillclimb lever.
+  * sLSTM is inherently sequential (hidden-to-hidden recurrence) — scan.
+
+Each mixer has a full-sequence form (train/prefill) and a single-step form
+with explicit state (decode); the state replaces the KV cache.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+# ------------------------------------------------------------------ mamba --
+
+def mamba_dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    rank = max(cfg.d_model // 16, 1)
+    return di, rank
+
+
+def init_mamba(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    di, rank = mamba_dims(cfg)
+    st, cv = cfg.ssm_state, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": layers.dense_init(ks[0], (d, 2 * di), dtype=dtype),
+        "conv_w": layers.dense_init(ks[1], (cv, di), fan_in=cv, dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": layers.dense_init(ks[2], (di, rank + 2 * st), dtype=dtype),
+        "dt_proj": layers.dense_init(ks[3], (rank, di), dtype=dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),   # softplus^-1(0.01)
+        "a_log": jnp.log(a).astype(dtype),
+        "skip_d": jnp.ones((di,), dtype),
+        "out_proj": layers.dense_init(ks[4], (di, d), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x (B, S, C), w (K, C)."""
+    k, c = w.shape
+    out = jax.lax.conv_general_dilated(
+        x, w[:, None, :], window_strides=(1,), padding=[(k - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=c)
+    return out + b
+
+
+def _ssm_scan_chunked(a, b, c_mat, h0, chunk: int):
+    """h_t = a_t * h_{t-1} + b_t;  y_t = sum_s h_t[.., s] * c_t[.., s].
+
+    a, b: (B, S, di, st); c_mat: (B, S, st). Associative within chunks,
+    sequential across chunks. Returns y (B, S, di) and final h.
+    """
+    B, S, di, st = a.shape
+    nc = S // chunk
+
+    def one_chunk(h, args):
+        ac, bc, cc = args                          # (B, L, di, st), (B, L, st)
+        cum_a, cum_b = jax.lax.associative_scan(
+            lambda x, y: (y[0] * x[0], y[0] * x[1] + y[1]),
+            (ac, bc), axis=1)
+        h_t = cum_a * h[:, None] + cum_b           # (B, L, di, st)
+        y = jnp.einsum("blds,bls->bld", h_t, cc)
+        return h_t[:, -1], y
+
+    a_c = a.reshape(B, nc, chunk, di, st).swapaxes(0, 1)
+    b_c = b.reshape(B, nc, chunk, di, st).swapaxes(0, 1)
+    c_c = c_mat.reshape(B, nc, chunk, st).swapaxes(0, 1)
+    h_fin, ys = jax.lax.scan(one_chunk, h0, (a_c, b_c, c_c))
+    y = ys.swapaxes(0, 1).reshape(B, S, di)
+    return y, h_fin
+
+
+def mamba(params, cfg, x, *, chunk: int = 128):
+    """Full-sequence Mamba. x (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    di, rank = mamba_dims(cfg)
+    st = cfg.ssm_state
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+
+    xz = x @ params["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c = jax.nn.silu(_causal_conv(x_in, params["conv_w"], params["conv_b"]))
+
+    proj = x_c @ params["x_proj"]
+    dt_low, b_mat, c_mat = jnp.split(proj, [rank, rank + st], axis=-1)
+    dt = jax.nn.softplus(dt_low @ params["dt_proj"] + params["dt_bias"])
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))          # (di, st)
+    decay = jnp.exp(dt.astype(jnp.float32)[..., None] * a)     # (B,S,di,st)
+    drive = (dt * x_c).astype(jnp.float32)[..., None] \
+        * b_mat.astype(jnp.float32)[:, :, None, :]
+    h0 = jnp.zeros((B, di, st), jnp.float32)
+    y, _ = _ssm_scan_chunked(decay, drive, c_mat.astype(jnp.float32), h0, chunk)
+    y = y.astype(x.dtype) + params["skip_d"] * x_c
+    return (y * jax.nn.silu(z)) @ params["out_proj"]
+
+
+def init_mamba_state(cfg, batch, dtype):
+    di, _ = mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+        "h": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_step(params, cfg, x, state):
+    """One decode step. x (B, 1, d) -> ((B, 1, d), new state)."""
+    di, rank = mamba_dims(cfg)
+    st = cfg.ssm_state
+    xz = x @ params["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)                        # (B,1,di)
+    window = jnp.concatenate([state["conv"], x_in], axis=1)    # (B, cv, di)
+    conv = jnp.einsum("bkc,kc->bc", window, params["conv_w"]) \
+        + params["conv_b"]
+    x_c = jax.nn.silu(conv)[:, None, :]                        # (B,1,di)
+    proj = x_c @ params["x_proj"]
+    dt_low, b_mat, c_mat = jnp.split(proj, [rank, rank + st], axis=-1)
+    dt = jax.nn.softplus(dt_low @ params["dt_proj"] + params["dt_bias"])
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt.astype(jnp.float32)[:, 0, :, None] * a)  # (B,di,st)
+    drive = (dt * x_c).astype(jnp.float32)[:, 0, :, None] \
+        * b_mat.astype(jnp.float32)[:, 0, None, :]
+    h = decay * state["h"] + drive
+    y = jnp.einsum("bds,bs->bd", h, c_mat.astype(jnp.float32)[:, 0])
+    y = y[:, None, :].astype(x.dtype) + params["skip_d"] * x_c
+    out = (y * jax.nn.silu(z)) @ params["out_proj"]
+    return out, {"conv": window[:, 1:], "h": h}
+
+
+# ------------------------------------------------------------------ mLSTM --
+
+def mlstm_dims(cfg):
+    di = 2 * cfg.d_model
+    nh = cfg.num_heads
+    return di, nh, di // nh
+
+
+def init_mlstm(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    di, nh, hd = mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    # q/k/v are block-diagonal per head (xLSTM paper's BlockDiagonal
+    # projections): (NH, hd, hd) instead of (di, di) — 4x fewer params.
+    return {
+        "w_up": layers.dense_init(ks[0], (d, 2 * di), dtype=dtype),
+        "wq": layers.dense_init(ks[1], (nh, hd, hd), fan_in=hd, dtype=dtype),
+        "wk": layers.dense_init(ks[2], (nh, hd, hd), fan_in=hd, dtype=dtype),
+        "wv": layers.dense_init(ks[3], (nh, hd, hd), fan_in=hd, dtype=dtype),
+        "w_gates": layers.dense_init(ks[4], (di, 2 * nh), dtype=jnp.float32),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((nh,)), jnp.full((nh,), 3.0)]).astype(jnp.float32),
+        "w_down": layers.dense_init(ks[5], (di, d), dtype=dtype),
+    }
+
+
+def _mlstm_core(q, k, v, i_pre, f_pre, state):
+    """Stabilised mLSTM scan. q/k/v: (B,S,NH,hd); gates: (B,S,NH).
+    state: (C (B,NH,hd,hd), n (B,NH,hd), m (B,NH))."""
+    hd = q.shape[-1]
+    q = q.astype(jnp.float32) / math.sqrt(hd)
+    k = k.astype(jnp.float32) / math.sqrt(hd)
+    v = v.astype(jnp.float32)
+
+    def step(carry, xs):
+        c, n, m = carry
+        qt, kt, vt, it, ft = xs                   # (B,NH,hd) / (B,NH)
+        m_new = jnp.maximum(ft + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(ft + m - m_new)
+        c = f_s[..., None, None] * c + i_s[..., None, None] \
+            * (vt[..., :, None] * kt[..., None, :])      # (B,NH,hd_v,hd_k)
+        n = f_s[..., None] * n + i_s[..., None] * kt
+        num = jnp.einsum("bhvk,bhk->bhv", c, qt)
+        # stabilised denominator floor: exp(-m) (the unscaled "1" of the
+        # xLSTM paper, in the e^{-m}-scaled state representation)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)),
+                          jnp.exp(-m_new))
+        y = num / den[..., None]
+        return (c, n, m_new), y
+
+    xs = tuple(a.swapaxes(0, 1) for a in (q, k, v, i_pre, f_pre))
+    (c, n, m), ys = jax.lax.scan(step, state, xs)
+    return ys.swapaxes(0, 1), (c, n, m)           # (B,S,NH,hd)
+
+
+def _mlstm_qkv(params, x):
+    up = x @ params["w_up"]
+    di = up.shape[-1] // 2
+    x_m, z = up[..., :di], up[..., di:]
+    nh, hd, _ = params["wq"].shape
+    xh = x_m.reshape(*x_m.shape[:-1], nh, hd)
+    q = jnp.einsum("bshk,hkl->bshl", xh, params["wq"])
+    k = jnp.einsum("bshk,hkl->bshl", xh, params["wk"])
+    v = jnp.einsum("bshk,hkl->bshl", xh, params["wv"])
+    gates = x_m.astype(jnp.float32) @ params["w_gates"] + params["b_gates"]
+    i_pre, f_pre = gates[..., :nh], jax.nn.log_sigmoid(gates[..., nh:])
+    return q, k, v, i_pre, f_pre, z
+
+
+def init_mlstm_state(cfg, batch):
+    _, nh, hd = mlstm_dims(cfg)
+    return {"c": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, nh, hd), jnp.float32),
+            "m": jnp.full((batch, nh), -1e30, jnp.float32)}
+
+
+def _mlstm_core_chunked(q, k, v, i_pre, f_pre, state, *, chunk: int = 128):
+    """Chunkwise-parallel mLSTM (stabilised): identical math to
+    _mlstm_core, evaluated with intra-chunk masked matmuls + an
+    inter-chunk state recurrence. Backward saves only O(S/chunk) chunk
+    boundary states instead of one (hd x hd) matrix per timestep —
+    this is the §Perf fix for the xlstm train cells (memory term was
+    ~2e6 s on the sequential scan).
+
+    Derivation (per head; t, s inside a chunk of length L):
+      F_t   = sum_{u<=t} log f_u           (in-chunk cumulative decay)
+      D[t,s]= F_t - F_s + log i_s  (t>=s)  (decay matrix)
+      m~_t  = max(max_s D[t,s], F_t + m_prev)
+      out_t = e^{F_t+m_prev-m~_t} q_t S^_prev
+              + sum_s e^{D[t,s]-m~_t} (q_t.k_s) v_s
+      n_t   = e^{F_t+m_prev-m~_t} q_t n^_prev + sum_s e^{D[t,s]-m~_t} (q_t.k_s)
+      h_t   = out_t / max(|n_t|, e^{-m~_t})
+      state carry (scaled by e^{-m}):
+        m_new = F_L + max(m_prev, max_s (log i_s - F_s))
+        S^_new = e^{m_prev+F_L-m_new} S^_prev
+                 + sum_s e^{log i_s+F_L-F_s-m_new} k_s v_s^T
+    """
+    B, S, NH, hd = q.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    nc = S // chunk
+    scale = 1.0 / math.sqrt(hd)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32) * scale
+    vf = v.astype(jnp.float32)
+
+    def resh(a):  # (B,S,NH,...) -> (nc, B, L, NH, ...)
+        return a.reshape(B, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs = resh(qf), resh(kf), resh(vf)
+    is_, fs_ = resh(i_pre), resh(f_pre)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def one_chunk(carry, xs):
+        c_prev, n_prev, m_prev = carry          # scaled state
+        qc, kc, vc, ic, fc = xs                 # (B,L,NH,..)/(B,L,NH)
+        F = jnp.cumsum(fc, axis=1)              # (B,L,NH)
+        a = ic - F                              # log i_s - F_s
+        # D[t,s] = F_t + a_s  (masked to t>=s)
+        d_mat = F[:, :, None, :] + a[:, None, :, :]        # (B,t,s,NH)
+        d_mat = jnp.where(tri[None, :, :, None], d_mat, -jnp.inf)
+        m_intra = d_mat.max(axis=2)                        # (B,L,NH)
+        m_tilde = jnp.maximum(m_intra, F + m_prev[:, None, :])
+        # intra-chunk attention-style term
+        w = jnp.exp(d_mat - m_tilde[:, :, None, :])        # (B,t,s,NH)
+        qk = jnp.einsum("bthd,bshd->btsh", qc, kc)         # (B,t,s,NH)
+        out_intra = jnp.einsum("btsh,btsh,bshd->bthd", w, qk, vc)
+        n_intra = jnp.einsum("btsh,btsh->bth", w, qk)
+        # inter-chunk term from carried state
+        g = jnp.exp(F + m_prev[:, None, :] - m_tilde)      # (B,L,NH)
+        out_inter = jnp.einsum("bthk,bhvk->bthv", qc, c_prev) * g[..., None]
+        n_inter = jnp.einsum("bthk,bhk->bth", qc, n_prev) * g
+        num = out_intra + out_inter
+        den = jnp.maximum(jnp.abs(n_intra + n_inter),
+                          jnp.exp(-m_tilde))
+        y = num / den[..., None]
+        # state update
+        f_last = F[:, -1, :]                               # (B,NH)
+        a_max = a.max(axis=1)                              # (B,NH)
+        m_new = f_last + jnp.maximum(m_prev, a_max)
+        decay_state = jnp.exp(m_prev + f_last - m_new)     # (B,NH)
+        kv_w = jnp.exp(ic + f_last[:, None, :] - F - m_new[:, None, :])
+        # state layout (B, NH, hd_v, hd_k) — matches the sequential core
+        c_new = decay_state[..., None, None] * c_prev + jnp.einsum(
+            "bshk,bsh,bshv->bhvk", kc, kv_w, vc)
+        n_new = decay_state[..., None] * n_prev + jnp.einsum(
+            "bshd,bsh->bhd", kc, kv_w)
+        return (c_new, n_new, m_new), y
+
+    one_chunk = jax.checkpoint(one_chunk)
+    (c, n, m), ys = jax.lax.scan(
+        one_chunk, state, (qs, ks, vs, is_, fs_))
+    y = ys.swapaxes(0, 1).reshape(B, S, NH, hd)
+    return y, (c, n, m)
+
+
+def mlstm(params, cfg, x, state=None, *, chunked: bool = True):
+    """Full-sequence mLSTM block body. x (B, S, d)."""
+    B = x.shape[0]
+    q, k, v, i_pre, f_pre, z = _mlstm_qkv(params, x)
+    st = state or init_mlstm_state(cfg, B)
+    core = _mlstm_core_chunked if (chunked and x.shape[1] > 1) \
+        else _mlstm_core
+    ys, _ = core(q, k, v, i_pre, f_pre, (st["c"], st["n"], st["m"]))
+    di = z.shape[-1]
+    y = ys.reshape(B, x.shape[1], di).astype(x.dtype)
+    return (y * jax.nn.silu(z)) @ params["w_down"]
+
+
+def mlstm_step(params, cfg, x, state):
+    B = x.shape[0]
+    q, k, v, i_pre, f_pre, z = _mlstm_qkv(params, x)
+    ys, (c, n, m) = _mlstm_core(q, k, v, i_pre, f_pre,
+                                (state["c"], state["n"], state["m"]))
+    di = z.shape[-1]
+    y = ys.reshape(B, 1, di).astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ params["w_down"]
+    return out, {"c": c, "n": n, "m": m}
+
+
+# ------------------------------------------------------------------ sLSTM --
+
+def slstm_dims(cfg):
+    nh = cfg.num_heads
+    return nh, cfg.d_model // nh
+
+
+def init_slstm(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    nh, hd = slstm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    f_ffn = max((4 * d) // 3, 8)
+    return {
+        "w_gates": layers.dense_init(ks[0], (d, 4 * d), dtype=dtype),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((3 * d,)), jnp.full((d,), 1.0)]).astype(jnp.float32),
+        "r_gates": layers.dense_init(ks[1], (nh, 4, hd, hd), fan_in=hd,
+                                     dtype=dtype) * 0.5,
+        "wi": layers.dense_init(ks[2], (d, f_ffn), dtype=dtype),
+        "wd": layers.dense_init(ks[3], (f_ffn, d), dtype=dtype),
+    }
+
+
+def init_slstm_state(cfg, batch):
+    nh, hd = slstm_dims(cfg)
+    z = jnp.zeros((batch, nh, hd), jnp.float32)
+    return {"c": z, "n": z + 1e-6, "h": z,
+            "m": jnp.zeros((batch, nh), jnp.float32)}
+
+
+def _slstm_core(params, gx, state):
+    """gx: (B, S, 4, NH, hd) input-driven gate pre-activations (z,i,f,o).
+
+    On TPU this dispatches to the fused Pallas kernel
+    (kernels/slstm_scan.py): state + recurrent weights stay in VMEM for
+    the whole sequence instead of round-tripping HBM per timestep. The
+    jnp scan below is the oracle/CPU path.
+    """
+    if jax.default_backend() == "tpu" and gx.shape[1] > 1:
+        from repro.kernels.slstm_scan import slstm_scan
+        ys, (c, n, h, m) = slstm_scan(
+            gx, params["r_gates"].astype(jnp.float32),
+            state["c"], state["n"], state["h"], state["m"])
+        return ys, {"c": c, "n": n, "h": h, "m": m}
+    r = params["r_gates"].astype(jnp.float32)     # (NH, 4, hd, hd)
+
+    def step(carry, g_t):
+        c, n, h, m = carry                        # (B,NH,hd) / (B,NH)
+        rec = jnp.einsum("bhk,hgkl->bghl", h, r)  # (B,4,NH,hd)
+        pre = g_t.astype(jnp.float32) + rec
+        z_p, i_p, f_p, o_p = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+        i_red = i_p.max(-1)                       # stabilise per head
+        f_red = f_p.max(-1)
+        m_new = jnp.maximum(f_red + m, i_red)
+        i_s = jnp.exp(i_p - m_new[..., None])
+        f_s = jnp.exp(f_p + (m - m_new)[..., None])
+        z = jnp.tanh(z_p)
+        o = jax.nn.sigmoid(o_p)
+        c = f_s * c + i_s * z
+        n = f_s * n + i_s
+        h = o * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    (c, n, h, m), ys = jax.lax.scan(step, carry, gx.swapaxes(0, 1))
+    return ys.swapaxes(0, 1), {"c": c, "n": n, "h": h, "m": m}
+
+
+def _slstm_gx(params, cfg, x):
+    B, S, d = x.shape
+    nh, hd = slstm_dims(cfg)
+    g = x @ params["w_gates"] + params["b_gates"].astype(x.dtype)
+    return g.reshape(B, S, 4, nh, hd)
+
+
+def slstm(params, cfg, x, state=None):
+    B, S, d = x.shape
+    st = state or init_slstm_state(cfg, B)
+    ys, _ = _slstm_core(params, _slstm_gx(params, cfg, x), st)
+    y = ys.reshape(B, S, d).astype(x.dtype)
+    h = jax.nn.gelu(y @ params["wi"])
+    return h @ params["wd"]
+
+
+def slstm_step(params, cfg, x, state):
+    B = x.shape[0]
+    ys, new_state = _slstm_core(params, _slstm_gx(params, cfg, x), state)
+    y = ys.reshape(B, 1, -1).astype(x.dtype)
+    h = jax.nn.gelu(y @ params["wi"])
+    return h @ params["wd"], new_state

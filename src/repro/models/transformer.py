@@ -1,0 +1,480 @@
+"""Model assembly: periodic LayerProgram scan over heterogeneous blocks.
+
+A config's ``layer_pattern`` defines one *period* (e.g. gemma2 =
+("attn_local", "attn"), jamba = 7 mamba + 1 attn). Parameters for each
+pattern position are stacked over ``n_periods`` and the whole stack runs as
+one ``lax.scan`` (fast compiles for 94-layer models, natural FSDP prefetch
+overlap), with ``jax.checkpoint`` (remat) around the period body.
+
+Entry points:
+  init_lm / forward                  — training/scoring path.
+  init_cache / prefill / decode_step — serving path (KV cache or SSM state).
+Whisper (encoder-decoder) adds an encoder stack + cross-attention; its
+audio frontend is a stub: callers pass precomputed frame embeddings.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, layers, moe, ssm
+from repro.models.sharding import constrain
+
+MAX_WHISPER_POS = 32_768
+BATCH = ("pod", "data")  # activation batch axes; constrain() drops absent ones
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _block_has_ffn(cfg, pos):
+    return (cfg.ffn_type != "none" and cfg.d_ff > 0
+            and cfg.mixer(pos) in ("attn", "attn_local", "mamba"))
+
+
+def init_block(key, cfg: ModelConfig, pos: int, *, cross=False):
+    dtype = _dt(cfg)
+    mixer = cfg.mixer(pos)
+    ks = jax.random.split(key, 8)
+    p = {"ln1": layers.rmsnorm_init(cfg.d_model, dtype)}
+    if mixer in ("attn", "attn_local"):
+        p["mixer"] = attention.init_attention(ks[0], cfg, dtype=dtype)
+    elif mixer == "mamba":
+        p["mixer"] = ssm.init_mamba(ks[0], cfg, dtype=dtype)
+    elif mixer == "mlstm":
+        p["mixer"] = ssm.init_mlstm(ks[0], cfg, dtype=dtype)
+    elif mixer == "slstm":
+        p["mixer"] = ssm.init_slstm(ks[0], cfg, dtype=dtype)
+    else:
+        raise ValueError(mixer)
+    if cfg.post_norm:
+        p["post_ln1"] = layers.rmsnorm_init(cfg.d_model, dtype)
+    if cross:
+        p["ln_x"] = layers.rmsnorm_init(cfg.d_model, dtype)
+        p["cross"] = attention.init_attention(ks[1], cfg, dtype=dtype)
+    if _block_has_ffn(cfg, pos):
+        p["ln2"] = layers.rmsnorm_init(cfg.d_model, dtype)
+        if cfg.is_moe_layer(pos):
+            p["ffn"] = moe.init_moe(ks[2], cfg, dtype=dtype)
+        else:
+            p["ffn"] = layers.init_mlp(ks[2], cfg.d_model, cfg.d_ff,
+                                       cfg.ffn_type, dtype=dtype)
+        if cfg.post_norm:
+            p["post_ln2"] = layers.rmsnorm_init(cfg.d_model, dtype)
+    return p
+
+
+def _seq_constrain(h):
+    """Sequence-parallel residual stream between blocks."""
+    return constrain(h, P(BATCH, "model", None))
+
+
+def apply_block(params, cfg: ModelConfig, pos: int, h, *, causal=True,
+                enc_out=None):
+    """Full-sequence block application. Returns (h, moe_aux)."""
+    mixer = cfg.mixer(pos)
+    aux = jnp.float32(0.0)
+    x = layers.rmsnorm(params["ln1"], h)
+    if mixer in ("attn", "attn_local"):
+        window = cfg.sliding_window if mixer == "attn_local" else None
+        y = attention.attention(params["mixer"], cfg, x, causal=causal,
+                                window=window, attn_softcap=cfg.attn_softcap)
+    elif mixer == "mamba":
+        y = ssm.mamba(params["mixer"], cfg, x)
+    elif mixer == "mlstm":
+        y = ssm.mlstm(params["mixer"], cfg, x)
+    else:
+        y = ssm.slstm(params["mixer"], cfg, x)
+    if cfg.post_norm:
+        y = layers.rmsnorm(params["post_ln1"], y)
+    h = h + y
+    if "cross" in params and enc_out is not None:
+        x = layers.rmsnorm(params["ln_x"], h)
+        y = attention.attention(params["cross"], cfg, x, kv_x=enc_out,
+                                causal=False, rope=False)
+        h = h + y
+    if _block_has_ffn(cfg, pos):
+        x = layers.rmsnorm(params["ln2"], h)
+        if cfg.is_moe_layer(pos):
+            y, aux = moe.moe_ffn(params["ffn"], cfg, x)
+        else:
+            y = layers.mlp(params["ffn"], x, cfg.ffn_type)
+        if cfg.post_norm:
+            y = layers.rmsnorm(params["post_ln2"], y)
+        h = h + y
+    return _seq_constrain(h), aux
+
+
+def _stack_init(key, cfg: ModelConfig, *, cross=False):
+    blocks = {}
+    for pos in range(cfg.period):
+        kpos = jax.random.fold_in(key, pos)
+        pks = jax.random.split(kpos, cfg.n_periods)
+        blocks[f"pos{pos}"] = jax.vmap(
+            lambda k: init_block(k, cfg, pos, cross=cross))(pks)
+    return blocks
+
+
+def _stack_apply(blocks, cfg: ModelConfig, h, *, causal=True, enc_out=None,
+                 remat=True, block_cast=None):
+    def period_fn(carry, period_params):
+        hh, aux = carry
+        if block_cast is not None:
+            # ZeRO-3 gather point: cast this period's master slice to the
+            # compute dtype and re-constrain to model-only sharding. Done
+            # INSIDE the scan so only one period's gathered weights live.
+            from repro.models import precision
+            period_params = precision.cast_tree(
+                period_params, block_cast, constrain_model_only=True,
+                stacked=False)
+        for pos in range(cfg.period):
+            hh, a = apply_block(period_params[f"pos{pos}"], cfg, pos, hh,
+                                causal=causal, enc_out=enc_out)
+            aux = aux + a
+        return (hh, aux), None
+
+    if remat:
+        period_fn = jax.checkpoint(
+            period_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    (h, aux), _ = jax.lax.scan(period_fn, (h, jnp.float32(0.0)), blocks)
+    return h, aux
+
+
+# -------------------------------------------------------------- top level --
+
+def init_lm(key, cfg: ModelConfig):
+    dtype = _dt(cfg)
+    ks = jax.random.split(key, 6)
+    params = {
+        "embed": layers.init_embed(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": _stack_init(ks[1], cfg, cross=cfg.cross_attention),
+        "final_norm": layers.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {"head_w": layers.dense_init(
+            ks[2], (cfg.d_model, cfg.vocab_size), dtype=dtype)}
+    if cfg.encoder_layers:
+        enc_cfg = cfg  # same dims; encoder is bidirectional, non-cross
+        params["enc_blocks"] = _stack_init_encoder(ks[3], enc_cfg)
+        params["enc_norm"] = layers.rmsnorm_init(cfg.d_model, dtype)
+    if cfg.rope_theta == 0.0:
+        params["pos"] = {"pos_table": (jax.random.normal(
+            ks[4], (MAX_WHISPER_POS, cfg.d_model), jnp.float32) * 0.01
+        ).astype(dtype)}
+    return params
+
+
+def _stack_init_encoder(key, cfg):
+    import dataclasses
+    enc = dataclasses.replace(cfg, layer_pattern=("attn",),
+                              num_layers=cfg.encoder_layers,
+                              cross_attention=False, num_experts=0)
+    return _stack_init(key, enc, cross=False)
+
+
+def _enc_cfg(cfg):
+    import dataclasses
+    return dataclasses.replace(cfg, layer_pattern=("attn",),
+                               num_layers=cfg.encoder_layers,
+                               cross_attention=False, num_experts=0)
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """Whisper-style encoder over stub frame embeddings (B, S_enc, D)."""
+    # match the live parameter dtype (params may be bf16-cast for compute)
+    h = frames.astype(params["enc_norm"]["scale"].dtype)
+    h = h + layers.sinusoidal_positions(h.shape[1], cfg.d_model, h.dtype)
+    h, _ = _stack_apply(params["enc_blocks"], _enc_cfg(cfg), h, causal=False)
+    return layers.rmsnorm(params["enc_norm"], h)
+
+
+def _embed_tokens(params, cfg, tokens, pos_offset=0):
+    h = layers.embed(params["embed"], tokens, scale=cfg.scale_embed)
+    if cfg.rope_theta == 0.0:
+        S = tokens.shape[1]
+        h = h + jax.lax.dynamic_slice_in_dim(
+            params["pos"]["pos_table"], pos_offset, S, 0)
+    return h
+
+
+def _logits(params, cfg, h):
+    h = layers.rmsnorm(params["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"]["table"])
+    else:
+        logits = h @ params["head"]["head_w"]
+    logits = layers.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return constrain(logits, P(BATCH, None, "model"))
+
+
+def forward(params, cfg: ModelConfig, tokens, *, enc_frames=None,
+            remat=True, features=False, block_cast=None):
+    """Training/scoring forward. tokens (B, S) -> logits (B, S, V) f32.
+
+    Returns (logits, moe_aux). With features=True returns the final hidden
+    states instead of logits (the OBP embedding hook). block_cast: cast
+    block weights to this dtype per-period inside the scan (training
+    mixed-precision path)."""
+    h = _embed_tokens(params, cfg, tokens)
+    h = _seq_constrain(h)
+    enc_out = None
+    if cfg.encoder_layers and enc_frames is not None:
+        enc_params = params
+        if block_cast is not None:
+            from repro.models import precision
+            enc_params = dict(params)
+            enc_params["enc_blocks"] = precision.cast_tree(
+                params["enc_blocks"], block_cast)
+            enc_params["enc_norm"] = precision.cast_tree(
+                params["enc_norm"], block_cast)
+        enc_out = encode(enc_params, cfg, enc_frames)
+    h, aux = _stack_apply(params["blocks"], cfg, h, causal=True,
+                          enc_out=enc_out, remat=remat,
+                          block_cast=block_cast)
+    if features:
+        return layers.rmsnorm(params["final_norm"], h), aux
+    return _logits(params, cfg, h), aux
+
+
+# ----------------------------------------------------------------- serving --
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Decode cache: per pattern position, stacked over periods."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    cache = {}
+
+    def stacked(make_one):
+        one = make_one()
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape).copy(), one)
+
+    for pos in range(cfg.period):
+        mixer = cfg.mixer(pos)
+        if mixer in ("attn", "attn_local"):
+            # local layers ring-buffer the window: L = min(window, max_len)
+            L = max_len
+            if mixer == "attn_local" and cfg.sliding_window:
+                L = min(cfg.sliding_window, max_len)
+            cache[f"pos{pos}"] = stacked(
+                lambda L=L: attention.init_kv_cache(cfg, batch, L, dtype))
+        elif mixer == "mamba":
+            cache[f"pos{pos}"] = stacked(
+                lambda: ssm.init_mamba_state(cfg, batch, dtype))
+        elif mixer == "mlstm":
+            cache[f"pos{pos}"] = stacked(
+                lambda: ssm.init_mlstm_state(cfg, batch))
+        else:
+            cache[f"pos{pos}"] = stacked(
+                lambda: ssm.init_slstm_state(cfg, batch))
+    if cfg.encoder_layers:
+        cache["enc_out"] = jnp.zeros((batch, cfg.encoder_seq, cfg.d_model),
+                                     dtype)
+    return cache
+
+
+def decode_block(params, cfg, pos, h, cache, t, *, enc_out=None):
+    """One-token decode through one block. cache: this block's slice."""
+    mixer = cfg.mixer(pos)
+    x = layers.rmsnorm(params["ln1"], h)
+    if mixer in ("attn", "attn_local"):
+        window = cfg.sliding_window if mixer == "attn_local" else None
+        y, cache = attention.decode_attention(
+            params["mixer"], cfg, x, cache, t, window=window,
+            attn_softcap=cfg.attn_softcap)
+    elif mixer == "mamba":
+        y, cache = ssm.mamba_step(params["mixer"], cfg, x, cache)
+    elif mixer == "mlstm":
+        y, cache = ssm.mlstm_step(params["mixer"], cfg, x, cache)
+    else:
+        y, cache = ssm.slstm_step(params["mixer"], cfg, x, cache)
+    if cfg.post_norm:
+        y = layers.rmsnorm(params["post_ln1"], y)
+    h = h + y
+    if "cross" in params and enc_out is not None:
+        x = layers.rmsnorm(params["ln_x"], h)
+        y = attention.attention(params["cross"], cfg, x, kv_x=enc_out,
+                                causal=False, rope=False)
+        h = h + y
+    if _block_has_ffn(cfg, pos):
+        x = layers.rmsnorm(params["ln2"], h)
+        if cfg.is_moe_layer(pos):
+            y, _ = moe.moe_ffn(params["ffn"], cfg, x)
+        else:
+            y = layers.mlp(params["ffn"], x, cfg.ffn_type)
+        if cfg.post_norm:
+            y = layers.rmsnorm(params["post_ln2"], y)
+        h = h + y
+    return h, cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, t):
+    """token (B,) int32, t scalar int32 (current position). Returns
+    (logits (B, V) f32, new cache)."""
+    h = _embed_tokens_decode(params, cfg, token, t)
+    enc_out = cache.get("enc_out") if cfg.encoder_layers else None
+
+    def period_fn(h, xs):
+        period_params, period_cache = xs
+        new_cache = {}
+        for pos in range(cfg.period):
+            h, new_cache[f"pos{pos}"] = decode_block(
+                period_params[f"pos{pos}"], cfg, pos, h,
+                period_cache[f"pos{pos}"], t, enc_out=enc_out)
+        return h, new_cache
+
+    block_cache = {k: v for k, v in cache.items() if k.startswith("pos")}
+    h, new_block_cache = jax.lax.scan(
+        period_fn, h, (params["blocks"], block_cache))
+    logits = _logits(params, cfg, h)[:, 0]
+    out_cache = dict(new_block_cache)
+    if cfg.encoder_layers:
+        out_cache["enc_out"] = cache["enc_out"]
+    return logits, out_cache
+
+
+def _embed_tokens_decode(params, cfg, token, t):
+    h = layers.embed(params["embed"], token[:, None], scale=cfg.scale_embed)
+    if cfg.rope_theta == 0.0:
+        h = h + jax.lax.dynamic_slice_in_dim(
+            params["pos"]["pos_table"], t, 1, 0)[None]
+    return h
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len: int, *,
+            enc_frames=None):
+    """Full-sequence prefill: returns (last-token logits, filled cache).
+
+    Attention k/v are projected once for the whole prompt and written into
+    the cache; SSM/xLSTM blocks return their final recurrent state.
+    """
+    B, S = tokens.shape
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = _embed_tokens(params, cfg, tokens)
+    h = _seq_constrain(h)
+    enc_out = None
+    if cfg.encoder_layers and enc_frames is not None:
+        enc_out = encode(params, cfg, enc_frames)
+
+    def period_fn(h, period_params):
+        new_cache = {}
+        for pos in range(cfg.period):
+            p = period_params[f"pos{pos}"]
+            mixer = cfg.mixer(pos)
+            x = layers.rmsnorm(p["ln1"], h)
+            if mixer in ("attn", "attn_local"):
+                window = cfg.sliding_window if mixer == "attn_local" else None
+                y = attention.attention(p["mixer"], cfg, x, causal=True,
+                                        window=window,
+                                        attn_softcap=cfg.attn_softcap)
+                # re-project k/v for the cache (cheap vs attention itself)
+                _, k, v = attention._project_qkv(p["mixer"], x, x)
+                if cfg.rope_theta:
+                    cos, sin = layers.rope_angles(
+                        jnp.arange(S), cfg.resolved_head_dim, cfg.rope_theta)
+                    k = layers.apply_rope(k, cos, sin)
+                L = max_len
+                if window is not None:
+                    L = min(window, max_len)
+                kv = {"k": jnp.zeros((B, L) + k.shape[2:], dtype),
+                      "v": jnp.zeros((B, L) + v.shape[2:], dtype)}
+                if L >= S:
+                    kv["k"] = jax.lax.dynamic_update_slice(
+                        kv["k"], k.astype(dtype), (0, 0, 0, 0))
+                    kv["v"] = jax.lax.dynamic_update_slice(
+                        kv["v"], v.astype(dtype), (0, 0, 0, 0))
+                else:
+                    # ring fill: keep the last L tokens at slots t % L
+                    t0 = S - L
+                    idx = (t0 + jnp.arange(L)) % L
+                    kv["k"] = kv["k"].at[:, idx].set(
+                        k[:, t0:].astype(dtype))
+                    kv["v"] = kv["v"].at[:, idx].set(
+                        v[:, t0:].astype(dtype))
+                new_cache[f"pos{pos}"] = kv
+            elif mixer == "mamba":
+                y, st = _mamba_with_state(p["mixer"], cfg, x)
+                new_cache[f"pos{pos}"] = st
+            elif mixer == "mlstm":
+                y, st = _mlstm_with_state(p["mixer"], cfg, x)
+                new_cache[f"pos{pos}"] = st
+            else:
+                y, st = _slstm_with_state(p["mixer"], cfg, x)
+                new_cache[f"pos{pos}"] = st
+            if cfg.post_norm:
+                y = layers.rmsnorm(p["post_ln1"], y)
+            h = h + y
+            if "cross" in p and enc_out is not None:
+                x = layers.rmsnorm(p["ln_x"], h)
+                h = h + attention.attention(p["cross"], cfg, x, kv_x=enc_out,
+                                            causal=False, rope=False)
+            if _block_has_ffn(cfg, pos):
+                x = layers.rmsnorm(p["ln2"], h)
+                if cfg.is_moe_layer(pos):
+                    y, _ = moe.moe_ffn(p["ffn"], cfg, x)
+                else:
+                    y = layers.mlp(p["ffn"], x, cfg.ffn_type)
+                if cfg.post_norm:
+                    y = layers.rmsnorm(p["post_ln2"], y)
+                h = h + y
+            h = _seq_constrain(h)
+        return h, new_cache
+
+    h, cache = jax.lax.scan(period_fn, h, params["blocks"])
+    if cfg.encoder_layers:
+        cache["enc_out"] = (enc_out if enc_out is not None else
+                            jnp.zeros((B, cfg.encoder_seq, cfg.d_model), dtype))
+    logits = _logits(params, cfg, h[:, -1:])[:, 0]
+    return logits, cache
+
+
+def _mamba_with_state(p, cfg, x):
+    """Mamba full-seq + final decode state (conv tail + ssm h)."""
+    B, S, _ = x.shape
+    di, rank = ssm.mamba_dims(cfg)
+    st = cfg.ssm_state
+    chunk = min(128, S)
+    while S % chunk:
+        chunk -= 1
+    xz = x @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c = jax.nn.silu(ssm._causal_conv(x_in, p["conv_w"], p["conv_b"]))
+    proj = x_c @ p["x_proj"]
+    dt_low, b_mat, c_mat = jnp.split(proj, [rank, rank + st], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"] + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt.astype(jnp.float32)[..., None] * a)
+    drive = (dt * x_c).astype(jnp.float32)[..., None] \
+        * b_mat.astype(jnp.float32)[:, :, None, :]
+    h0 = jnp.zeros((B, di, st), jnp.float32)
+    y, h_fin = ssm._ssm_scan_chunked(decay, drive, c_mat.astype(jnp.float32),
+                                     h0, chunk)
+    y = y.astype(x.dtype) + p["skip_d"] * x_c
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    tail = x_in[:, -(cfg.ssm_conv - 1):, :]
+    return out, {"conv": tail.astype(jnp.dtype(cfg.compute_dtype)), "h": h_fin}
+
+
+def _mlstm_with_state(p, cfg, x):
+    B = x.shape[0]
+    q, k, v, i_pre, f_pre, z = ssm._mlstm_qkv(p, x)
+    st0 = ssm.init_mlstm_state(cfg, B)
+    ys, (c, n, m) = ssm._mlstm_core_chunked(
+        q, k, v, i_pre, f_pre, (st0["c"], st0["n"], st0["m"]))
+    di = z.shape[-1]
+    y = ys.reshape(B, x.shape[1], di).astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ p["w_down"]
+    return out, {"c": c, "n": n, "m": m}
+
+
+def _slstm_with_state(p, cfg, x):
+    B, S, d = x.shape
+    st0 = ssm.init_slstm_state(cfg, B)
+    ys, new_state = ssm._slstm_core(p, ssm._slstm_gx(p, cfg, x), st0)
+    y = ys.reshape(B, S, d).astype(x.dtype)
+    h = jax.nn.gelu(y @ p["wi"])
+    return h @ p["wd"], new_state

@@ -1,0 +1,1 @@
+from .metrics import CSVLogger, StepTimer  # noqa: F401

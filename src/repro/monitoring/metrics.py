@@ -1,0 +1,57 @@
+"""Run monitoring: step timing, EMA-based straggler detection, CSV logs.
+
+Straggler mitigation at fleet scale is (1) detect — per-step wall time vs
+an EMA envelope, (2) report — flagged steps land in the log for the
+scheduler/operator, (3) recover — checkpoint/restart excludes the slow
+host (launch scripts). This module implements (1) and (2); (3) is the
+checkpoint + launcher path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass
+class StepTimer:
+    ema_decay: float = 0.95
+    threshold: float = 2.0          # x EMA => straggler
+    warmup: int = 3                 # ignore compile steps
+
+    count: int = 0
+    ema: float = 0.0
+    stragglers: int = 0
+    _t0: float = 0.0
+    history: list = dataclasses.field(default_factory=list)
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.record(time.perf_counter() - self._t0)
+
+    def record(self, dt: float) -> bool:
+        """Returns True if this step is flagged as a straggler."""
+        self.count += 1
+        self.history.append(dt)
+        if self.count <= self.warmup:
+            self.ema = dt
+            return False
+        flagged = dt > self.threshold * self.ema
+        if flagged:
+            self.stragglers += 1
+        self.ema = self.ema_decay * self.ema + (1 - self.ema_decay) * dt
+        return flagged
+
+
+class CSVLogger:
+    def __init__(self, path: str, fields):
+        self.path = path
+        self.fields = list(fields)
+        with open(path, "w") as f:
+            f.write(",".join(self.fields) + "\n")
+
+    def log(self, **kw):
+        with open(self.path, "a") as f:
+            f.write(",".join(str(kw.get(k, "")) for k in self.fields) + "\n")

@@ -1,0 +1,64 @@
+"""Serving: prefill + single-token decode steps and a small batched engine.
+
+``make_serve_step``/``make_prefill`` return the pure functions the dry-run
+lowers (decode_32k / long_500k / prefill_32k shapes). ``Engine`` is a
+host-side convenience for the examples: batched greedy generation with a
+fixed cache budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.training.trainer import cast_for_compute
+
+
+def make_serve_step(cfg: ModelConfig):
+    """decode one token: (params, cache, token (B,), t) -> (logits, cache)."""
+
+    def serve_step(params, cache, token, t):
+        pc = cast_for_compute(params, cfg.compute_dtype)
+        return transformer.decode_step(pc, cfg, token, cache, t)
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, tokens, frames=None):
+        pc = cast_for_compute(params, cfg.compute_dtype)
+        return transformer.prefill(pc, cfg, tokens, max_len,
+                                   enc_frames=frames)
+
+    return prefill_step
+
+
+@dataclasses.dataclass
+class Engine:
+    """Batched greedy-decoding engine (host loop) for the examples."""
+    cfg: ModelConfig
+    params: dict
+    max_len: int = 256
+
+    def __post_init__(self):
+        self._prefill = jax.jit(make_prefill(self.cfg, self.max_len))
+        self._step = jax.jit(make_serve_step(self.cfg))
+
+    def generate(self, prompts: np.ndarray, new_tokens: int,
+                 frames=None) -> np.ndarray:
+        """prompts: (B, S0) int32 -> (B, S0 + new_tokens)."""
+        B, S0 = prompts.shape
+        assert S0 + new_tokens <= self.max_len
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
+                                      frames)
+        out = [jnp.argmax(logits, -1)]
+        for i in range(new_tokens - 1):
+            logits, cache = self._step(self.params, cache, out[-1],
+                                       jnp.int32(S0 + i))
+            out.append(jnp.argmax(logits, -1))
+        gen = jnp.stack(out, axis=1)
+        return np.concatenate([prompts, np.asarray(gen)], axis=1)

@@ -1,0 +1,3 @@
+from .optimizer import OptConfig, adamw_update, init_moments, schedule  # noqa: F401
+from .trainer import cast_for_compute, init_train_state, make_train_step  # noqa: F401
+from .losses import next_token_loss  # noqa: F401

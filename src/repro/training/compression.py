@@ -1,0 +1,62 @@
+"""Cross-pod gradient compression: int8 quantisation with error feedback.
+
+The pod axis crosses DCN (12.5 GB/s/chip vs 50 GB/s ICI), so the
+cross-pod gradient reduction is the one collective worth compressing.
+``compressed_psum`` moves int8 on the wire (4x fewer bytes than f32: an
+all-gather of int8 shards + local dequant-sum) and returns the
+quantisation residual for error feedback — adding it to the next step's
+grads makes the compression error telescope instead of accumulate
+(1-bit/8-bit EF-SGD literature).
+
+Usage is shard_map over the "pod" axis (grads are per-pod partials
+there); see tests/helpers/dist_compression_check.py for the wiring.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray):
+    """Per-tensor symmetric int8. Returns (q, scale, residual)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    residual = xf - q.astype(jnp.float32) * scale
+    return q, scale, residual
+
+
+def dequantize_int8(q: jnp.ndarray, scale) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str, error: jnp.ndarray | None = None):
+    """psum over `axis_name` with int8 wire format + error feedback.
+
+    Returns (reduced f32 (the SAME value on every participant), new error
+    state to carry into the next call). Wire bytes: |x| int8 + one f32
+    scale per participant, vs 2x|x| f32 for a ring all-reduce.
+    """
+    if error is not None:
+        x = x.astype(jnp.float32) + error
+    q, scale, residual = quantize_int8(x)
+    qs = jax.lax.all_gather(q, axis_name)          # int8 on the wire
+    scales = jax.lax.all_gather(scale, axis_name)  # (P,) f32
+    out = jnp.tensordot(scales,
+                        qs.astype(jnp.float32), axes=((0,), (0,)))
+    return out, residual
+
+
+def compressed_psum_tree(tree, axis_name: str, error_tree=None):
+    """Tree version; error_tree=None initialises feedback state."""
+    if error_tree is None:
+        error_tree = jax.tree.map(lambda _: None, tree,
+                                  is_leaf=lambda x: x is None)
+    outs = jax.tree.map(
+        lambda g, e: compressed_psum(g, axis_name, e), tree, error_tree,
+        is_leaf=lambda x: x is None or not isinstance(x, tuple))
+    out = jax.tree.map(lambda o: o[0], outs,
+                       is_leaf=lambda o: isinstance(o, tuple))
+    err = jax.tree.map(lambda o: o[1], outs,
+                       is_leaf=lambda o: isinstance(o, tuple))
+    return out, err

@@ -1,0 +1,24 @@
+"""Next-token cross entropy with z-loss, computed against vocab-sharded
+logits (the logsumexp reduction crosses the model axis; GSPMD inserts the
+psum)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def next_token_loss(logits, tokens, *, z_loss: float = 1e-4,
+                    moe_aux=None, moe_aux_weight: float = 0.01):
+    """logits: (B, S, V) f32 over positions 0..S-1; tokens: (B, S) int32.
+    Predicts tokens[:, 1:] from logits[:, :-1]."""
+    lg = logits[:, :-1].astype(jnp.float32)
+    tg = tokens[:, 1:]
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, tg[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    loss = jnp.mean(nll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(lse * lse)
+    if moe_aux is not None:
+        loss = loss + moe_aux_weight * moe_aux
+    return loss, {"nll": jnp.mean(nll), "ppl_log": jnp.mean(nll)}

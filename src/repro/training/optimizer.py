@@ -1,0 +1,85 @@
+"""AdamW with decoupled weight decay, global-norm clipping, cosine
+schedule, and configurable moment dtype (bf16 moments for the 200B+ archs,
+DESIGN.md §7)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+
+
+def schedule(step, oc: OptConfig):
+    step = step.astype(jnp.float32) + 1.0  # lr > 0 from the first step
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - oc.warmup_steps)
+                    / jnp.maximum(oc.total_steps - oc.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return oc.lr * warm * (oc.min_lr_ratio + (1 - oc.min_lr_ratio) * cos)
+
+
+def init_moments(params, oc: OptConfig):
+    dt = jnp.dtype(oc.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return jax.tree.map(zeros, params), jax.tree.map(zeros, params)
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def _decayable(path) -> bool:
+    """No weight decay on norms / biases / 1-D leaves."""
+    name = str(getattr(path[-1], "key", ""))
+    return name not in ("scale", "bias", "b_gates", "bq", "bk", "bv",
+                        "conv_b", "dt_bias", "skip_d")
+
+
+def adamw_update(params, grads, m, v, step, oc: OptConfig):
+    """One AdamW step. Returns (new_params, new_m, new_v, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if oc.clip_norm else jnp.float32(1.0)
+    lr = schedule(step, oc)
+    b1, b2 = jnp.float32(oc.b1), jnp.float32(oc.b2)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+    mdt = jnp.dtype(oc.moment_dtype)
+
+    def upd(path, p, g, m_, v_):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m_.astype(jnp.float32) + (1 - b1) * g
+        v_new = b2 * v_.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + oc.eps)
+        if oc.weight_decay and _decayable(path):
+            delta = delta + oc.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(mdt), v_new.astype(mdt)
+
+    out = jax.tree_util.tree_map_with_path(upd, params, grads, m, v)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda o: isinstance(o, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda o: isinstance(o, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda o: isinstance(o, tuple))
+    return new_params, new_m, new_v, {"grad_norm": gnorm, "lr": lr}

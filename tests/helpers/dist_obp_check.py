@@ -1,0 +1,53 @@
+"""Subprocess body: distributed OBP on an 8-device host mesh must equal the
+single-device solver. Invoked by tests/test_distributed.py with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 in the environment."""
+import os
+import sys
+
+assert "--xla_force_host_platform_device_count=8" in os.environ.get("XLA_FLAGS", "")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core import sampling, solver  # noqa: E402
+from repro.core.distributed import make_distributed_obp  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+
+
+def main(mesh_kind: str) -> None:
+    assert jax.device_count() == 8, jax.device_count()
+    if mesh_kind == "multipod":
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    else:
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+
+    rng = np.random.default_rng(0)
+    n, p, k, m = 512, 16, 7, 64
+    x = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+    batch_idx = jnp.asarray(rng.choice(n, size=m, replace=False))
+    weights = jnp.asarray(rng.uniform(0.5, 1.5, size=m).astype(np.float32))
+    init_idx = jnp.asarray(rng.choice(n, size=k, replace=False))
+
+    # single-device reference
+    d = ops.pairwise_distance(x, x[batch_idx], metric="l1") * weights[None, :]
+    ref = solver.solve_batched(d, init_idx)
+
+    run = make_distributed_obp(mesh, k=k, metric="l1")
+    batch_axes = tuple(a for a in mesh.axis_names if a != "model")
+    xs = jax.device_put(x, NamedSharding(mesh, P(batch_axes, "model")))
+    got = run(xs, batch_idx, weights, init_idx)
+
+    ref_med = np.sort(np.asarray(ref.medoid_idx))
+    got_med = np.sort(np.asarray(got.medoid_idx))
+    np.testing.assert_array_equal(ref_med, got_med)
+    np.testing.assert_allclose(float(got.est_objective),
+                               float(ref.est_objective), rtol=1e-5)
+    assert int(got.n_swaps) == int(ref.n_swaps)
+    print(f"OK {mesh_kind} swaps={int(got.n_swaps)} "
+          f"obj={float(got.est_objective):.4f}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "singlepod")

@@ -1,0 +1,154 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one train step on CPU, asserting shapes and finite outputs; plus
+a prefill+decode consistency check on the serving path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get, reduced
+from repro.models import transformer as T
+from repro.training import OptConfig, init_train_state, make_train_step
+
+B, S = 2, 16
+
+
+def _batch(cfg, key=1):
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(key), (B, S), 0,
+                                          cfg.vocab_size)}
+    if cfg.encoder_layers:
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(key + 1), (B, cfg.encoder_seq, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_forward_and_train_step(arch):
+    cfg = reduced(get(arch))
+    oc = OptConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, oc)
+    batch = _batch(cfg)
+
+    logits, aux = T.forward(state["params"], cfg, batch["tokens"],
+                            enc_frames=batch.get("frames"))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert jnp.isfinite(logits).all(), f"{arch}: non-finite logits"
+
+    step = jax.jit(make_train_step(cfg, oc))
+    new_state, metrics = step(state, batch)
+    assert jnp.isfinite(metrics["loss"]), f"{arch}: non-finite loss"
+    assert jnp.isfinite(metrics["grad_norm"]), f"{arch}: non-finite grads"
+    assert int(new_state["step"]) == 1
+    # params must actually change
+    delta = jax.tree.map(
+        lambda a, b: float(jnp.abs(a - b).max()),
+        new_state["params"], state["params"])
+    assert max(jax.tree.leaves(delta)) > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_serving_consistency(arch):
+    """prefill(S-1) + decode(1) == full forward at the last position,
+    modulo MoE capacity drops (disabled via a large capacity factor)."""
+    cfg = reduced(get(arch))
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=100.0)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    tokens = batch["tokens"]
+    frames = batch.get("frames")
+
+    full, _ = T.forward(params, cfg, tokens, enc_frames=frames, remat=False)
+    _, cache = T.prefill(params, cfg, tokens[:, :S - 1], max_len=S + 4,
+                         enc_frames=frames)
+    ld, _ = T.decode_step(params, cfg, tokens[:, S - 1], cache,
+                          jnp.int32(S - 1))
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(full[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ring_window_cache_matches_full_attention():
+    """Local-attention ring cache (L = window slots): prefill past the
+    window + multi-step decode must match the full forward exactly."""
+    cfg = reduced(get("gemma2-27b"))   # window=8, [local, global] pattern
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    S = 24
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    full, _ = T.forward(params, cfg, tokens, remat=False)
+    lp, cache = T.prefill(params, cfg, tokens[:, :20], max_len=S)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(full[:, 19]),
+                               rtol=2e-3, atol=2e-3)
+    for t in range(20, S):
+        ld, cache = T.decode_step(params, cfg, tokens[:, t], cache,
+                                  jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(ld), np.asarray(full[:, t]),
+                                   rtol=2e-3, atol=2e-3)
+    # the local layers' cache really is window-sized
+    k_local = cache["pos0"]["k"]
+    assert k_local.shape[2] == cfg.sliding_window
+
+
+def test_whisper_bf16_mixed_precision_train_step():
+    """Regression: encoder frames must match the live compute dtype (bf16
+    params) — a f32 enc_out used to poison the decoder scan carry."""
+    cfg = dataclasses.replace(reduced(get("whisper-base")),
+                              compute_dtype="bfloat16")
+    oc = OptConfig(warmup_steps=1, total_steps=5)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, oc)
+    batch = _batch(cfg)
+    state, m = jax.jit(make_train_step(cfg, oc, grad_accum=2))(state, batch)
+    assert jnp.isfinite(m["loss"])
+
+
+def test_train_loss_decreases_tinyllama():
+    """A few steps on a repeated batch must reduce loss (end-to-end sanity
+    of loss/grad/optimizer plumbing)."""
+    cfg = reduced(get("tinyllama-1.1b"))
+    oc = OptConfig(lr=3e-3, warmup_steps=1, total_steps=50)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, oc)
+    step = jax.jit(make_train_step(cfg, oc))
+    batch = _batch(cfg)
+    losses = []
+    for _ in range(8):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_grad_accum_matches_single_batch():
+    """grad_accum=2 must match grad_accum=1 on the same global batch."""
+    cfg = reduced(get("tinyllama-1.1b"))
+    oc = OptConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, oc)
+    batch = _batch(cfg)
+    s1, m1 = jax.jit(make_train_step(cfg, oc, grad_accum=1))(state, batch)
+    s2, m2 = jax.jit(make_train_step(cfg, oc, grad_accum=2))(state, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+    leaves1, leaves2 = jax.tree.leaves(s1["params"]), jax.tree.leaves(s2["params"])
+    for a, b in zip(leaves1, leaves2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_param_counts_match_scale():
+    """Full-config param counts are in the advertised ballpark."""
+    expect = {
+        "grok-1-314b": (250e9, 380e9),
+        "qwen3-moe-235b-a22b": (190e9, 280e9),
+        "chameleon-34b": (28e9, 42e9),
+        "tinyllama-1.1b": (0.9e9, 1.4e9),
+        "gemma2-27b": (22e9, 34e9),
+        "qwen1.5-32b": (26e9, 40e9),
+        "phi4-mini-3.8b": (3.0e9, 5.0e9),
+        "jamba-v0.1-52b": (42e9, 62e9),
+        "xlstm-1.3b": (0.9e9, 2.3e9),  # block internals are our design
+                                       # choice (DESIGN.md §8); scale-class
+                                       # matches the 1.3B family
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.1f}B outside [{lo/1e9}, {hi/1e9}]"

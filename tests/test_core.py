@@ -1,0 +1,243 @@
+"""System-behaviour tests for the OneBatchPAM core library."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines, sampling, solver
+from repro.core.selector import MedoidSelector
+
+
+def _blobs(rng, n=300, p=8, centers=5, spread=0.3):
+    c = rng.normal(size=(centers, p)) * 4.0
+    assign = rng.integers(0, centers, size=n)
+    return (c[assign] + rng.normal(size=(n, p)) * spread).astype(np.float32)
+
+
+# ---------------------------------------------------------------- solver --
+
+def test_obp_beats_random_and_close_to_fasterpam():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(_blobs(rng, n=400, p=6, centers=8))
+    k = 8
+    key = jax.random.PRNGKey(1)
+    res, _ = solver.one_batch_pam(key, x, k, variant="nniw")
+    obj_obp = float(solver.objective(x, res.medoid_idx))
+
+    fp = solver.fasterpam(key, x, k, strategy="eager")
+    obj_fp = float(solver.objective(x, fp.medoid_idx))
+
+    rand_idx = jax.random.choice(jax.random.PRNGKey(2), x.shape[0], (k,),
+                                 replace=False)
+    obj_rand = float(solver.objective(x, rand_idx))
+
+    assert obj_obp < obj_rand, "OBP must beat random selection"
+    # Paper: ~2% gap to FasterPAM; allow slack on tiny synthetic data.
+    assert obj_obp <= obj_fp * 1.15
+
+
+def test_full_batch_batched_equals_bruteforce_first_swap():
+    """With m = n (Theorem 1 limit), the batched solver's first swap must be
+    the brute-force best swap."""
+    rng = np.random.default_rng(4)
+    n, k = 60, 4
+    x = jnp.asarray(rng.normal(size=(n, 5)).astype(np.float32))
+    from repro.kernels import ops
+    d = ops.pairwise_distance(x, x, metric="l1")
+    init = jnp.asarray(rng.choice(n, size=k, replace=False))
+    res = solver.solve_batched(d, init, max_swaps=1)
+
+    dm = np.asarray(d)
+    med0 = np.asarray(init)
+    base = dm[med0].min(0).sum()
+    best_val, best_pair = -np.inf, None
+    for i in range(n):
+        if i in med0:
+            continue
+        for l in range(k):
+            new = med0.copy()
+            new[l] = i
+            gain = base - dm[new].min(0).sum()
+            if gain > best_val:
+                best_val, best_pair = gain, (i, l)
+    if best_val > 0:
+        med_expected = med0.copy()
+        med_expected[best_pair[1]] = best_pair[0]
+        np.testing.assert_array_equal(np.sort(np.asarray(res.medoid_idx)),
+                                      np.sort(med_expected))
+    else:
+        np.testing.assert_array_equal(np.asarray(res.medoid_idx), med0)
+
+
+def test_eager_full_batch_matches_numpy_fasterpam_swaps():
+    """JAX eager solver == numpy reference FasterPAM on the same full matrix
+    and the same init: identical medoid sets (Theorem 1, m = n)."""
+    rng = np.random.default_rng(7)
+    n, k = 80, 5
+    x = rng.normal(size=(n, 4)).astype(np.float32)
+    from repro.kernels import ops
+    d = ops.pairwise_distance(jnp.asarray(x), jnp.asarray(x), metric="l1")
+    init = rng.choice(n, size=k, replace=False)
+    jres = solver.solve_eager(d, jnp.asarray(init), max_passes=8)
+    nres = baselines._eager_pam(np.asarray(d), init, max_passes=8)
+    np.testing.assert_array_equal(np.sort(np.asarray(jres.medoid_idx)),
+                                  np.sort(nres))
+
+
+def test_objective_nonincreasing_across_swap_budgets():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(_blobs(rng, n=200, p=4, centers=6))
+    from repro.kernels import ops
+    key = jax.random.PRNGKey(0)
+    batch = sampling.build_batch(key, x, 64, variant="unif")
+    init = jax.random.choice(jax.random.PRNGKey(1), 200, (6,), replace=False)
+    prev = np.inf
+    for budget in (0, 1, 2, 4, 8, 500):
+        res = solver.solve_batched(batch.d, init, max_swaps=budget)
+        est = float(res.est_objective)
+        assert est <= prev + 1e-5, "objective must not increase with more swaps"
+        prev = est
+
+
+def test_medoids_are_dataset_members_and_unique():
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(_blobs(rng, n=150, p=4))
+    res, _ = solver.one_batch_pam(jax.random.PRNGKey(0), x, 10)
+    idx = np.asarray(res.medoid_idx)
+    assert ((idx >= 0) & (idx < 150)).all()
+    assert len(np.unique(idx)) == 10
+
+
+# ------------------------------------------------------------- sampling --
+
+@pytest.mark.parametrize("variant", sampling.VARIANTS)
+def test_variants_run_and_weight_invariants(variant):
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(_blobs(rng, n=120, p=4))
+    b = sampling.build_batch(jax.random.PRNGKey(2), x, 32, variant=variant)
+    assert b.idx.shape == (32,)
+    assert len(np.unique(np.asarray(b.idx))) == 32
+    w = np.asarray(b.weights)
+    assert (w >= 0).all()
+    np.testing.assert_allclose(w.mean(), 1.0, rtol=0.35)
+    if variant == "debias":
+        diag = np.asarray(b.d)[np.asarray(b.idx), np.arange(32)]
+        assert (diag >= 1e14).all(), "self-distances must be LARGE"
+    if variant == "unif":
+        np.testing.assert_allclose(w, 1.0)
+
+
+def test_nniw_weights_are_nn_counts():
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=(50, 3)).astype(np.float32))
+    b = sampling.build_batch(jax.random.PRNGKey(3), x, 10, variant="nniw")
+    from repro.kernels import ops
+    d_raw = ops.pairwise_distance(x, x[b.idx], metric="l1")
+    counts = np.bincount(np.asarray(jnp.argmin(d_raw, 1)), minlength=10)
+    np.testing.assert_allclose(np.asarray(b.weights), counts * 10 / 50,
+                               rtol=1e-5)
+
+
+# ------------------------------------------------------ property tests --
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(20, 60),
+    k=st.integers(2, 5),
+    seed=st.integers(0, 10_000),
+)
+def test_property_swap_gain_equals_objective_delta(n, k, seed):
+    """For random instances, the gain matrix == brute-force objective delta
+    (the invariant that makes OBP's swaps exactly Algorithm 2's)."""
+    rng = np.random.default_rng(seed)
+    m = rng.integers(5, 20)
+    d = rng.uniform(0.0, 3.0, (n, m)).astype(np.float32)
+    med = rng.choice(n, size=k, replace=False)
+    rows = d[med]
+    d1, d2, near = baselines._top2_from(rows)
+    from repro.kernels import ref
+    gain = np.asarray(ref.swap_gain(
+        jnp.asarray(d), jnp.asarray(d1), jnp.asarray(np.minimum(d2, 1e30)),
+        jax.nn.one_hot(jnp.asarray(near), k, dtype=jnp.float32)))
+    base = rows.min(0).sum()
+    # check a random subset of swaps
+    for _ in range(10):
+        i = int(rng.integers(n))
+        l = int(rng.integers(k))
+        if i in med:
+            continue
+        new = med.copy()
+        new[l] = i
+        want = base - d[new].min(0).sum()
+        np.testing.assert_allclose(gain[i, l], want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_batched_never_worse_than_init(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(30, 100))
+    k = int(rng.integers(2, 6))
+    x = jnp.asarray(rng.normal(size=(n, 4)).astype(np.float32))
+    from repro.kernels import ops
+    d = ops.pairwise_distance(x, x, metric="l1")
+    init = jnp.asarray(rng.choice(n, size=k, replace=False))
+    before = float(jnp.mean(jnp.min(d[init], axis=0)))
+    res = solver.solve_batched(d, init)
+    after = float(res.est_objective)
+    assert after <= before + 1e-5
+    assert bool(res.converged)
+
+
+# ------------------------------------------------------------ selector --
+
+def test_medoid_selector_end_to_end():
+    rng = np.random.default_rng(11)
+    x = _blobs(rng, n=250, p=6, centers=5)
+    sel = MedoidSelector(k=5, seed=0).fit(x)
+    assert sel.medoid_indices_.shape == (5,)
+    labels = sel.predict(x)
+    assert labels.shape == (250,)
+    assert set(np.unique(labels)) <= set(range(5))
+    assert sel.objective(x) < MedoidSelector(k=5, max_swaps=0, seed=0).fit(x).objective(x) + 1e-6
+
+
+# ---------------------------------------------------------- compression --
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), scale=st.floats(1e-3, 1e3))
+def test_property_int8_quantization_error_bound(seed, scale):
+    """|x - dequant(quant(x))| <= max|x|/254 elementwise, and the residual
+    returned for error feedback is exactly that difference."""
+    from repro.training.compression import dequantize_int8, quantize_int8
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(257,)).astype(np.float32) * scale)
+    q, s, resid = quantize_int8(x)
+    back = dequantize_int8(q, s)
+    bound = float(jnp.max(jnp.abs(x))) / 254 + 1e-6 * scale
+    assert float(jnp.max(jnp.abs(x - back))) <= bound * 1.01
+    np.testing.assert_allclose(np.asarray(resid), np.asarray(x - back),
+                               rtol=1e-6, atol=1e-6 * scale)
+
+
+# ----------------------------------------------------------- baselines --
+
+def test_baselines_run_and_count():
+    rng = np.random.default_rng(12)
+    n = 600  # large enough that CLARA's m = 80 + 4k subsample pays off
+    x = _blobs(rng, n=n, p=5, centers=6)
+    oracle = baselines.Oracle(x, metric="l1")
+    k = 6
+    results = {}
+    for name, fn in baselines.ALL_BASELINES.items():
+        oracle.count = 0
+        results[name] = fn(np.random.default_rng(0), oracle, k)
+        assert len(np.unique(results[name].medoids)) == k, name
+        assert np.isfinite(results[name].objective), name
+    # complexity ordering: fasterpam counts ~ n^2; kmeans++ ~ nk; clara << n^2
+    assert results["fasterpam"].n_dissim >= n * n
+    assert results["kmeans_pp"].n_dissim <= 2 * n * k
+    assert results["clara"].n_dissim < results["fasterpam"].n_dissim
+    # quality ordering on easy blobs: pam-family <= random
+    assert results["fasterpam"].objective <= results["random"].objective

@@ -1,0 +1,35 @@
+"""Multi-device behaviour, exercised in subprocesses with 8 fake host
+devices (the main test process must keep seeing 1 device — XLA locks the
+platform device count at first init)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _run(script: str, *args: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = f"{ROOT / 'src'}:{env.get('PYTHONPATH', '')}"
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "helpers" / script), *args],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.mark.parametrize("mesh_kind", ["singlepod", "multipod"])
+def test_distributed_obp_matches_single_device(mesh_kind):
+    out = _run("dist_obp_check.py", mesh_kind)
+    assert f"OK {mesh_kind}" in out
+
+
+def test_compressed_crosspod_psum():
+    out = _run("dist_compression_check.py")
+    assert "one-shot ok" in out
+    assert "error-feedback ok" in out
+    assert "wire format ok" in out

@@ -1,0 +1,73 @@
+"""Loop-aware HLO cost parser: trip-count expansion, dot flops,
+slice-aware fusion byte accounting, collective classification."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import hlo as H
+
+
+def _compiled_text(fn, *shapes):
+    return jax.jit(fn).lower(*shapes).compile().as_text()
+
+
+def test_scan_flops_expand_by_trip_count():
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+
+    def f1(x, w):
+        return x @ w
+
+    def f10(x, w):
+        def body(c, _):
+            return c @ w, None
+        c, _ = jax.lax.scan(body, x, None, length=10)
+        return c
+
+    c1 = H.analyze(_compiled_text(f1, x, w))
+    c10 = H.analyze(_compiled_text(f10, x, w))
+    dot = 2 * 128 * 256 * 256
+    assert abs(c1["flops"] - dot) / dot < 0.1
+    assert abs(c10["flops"] - 10 * dot) / (10 * dot) < 0.1
+
+
+def test_scan_slice_updates_not_overcounted():
+    """A scan writing one row per step into a (1000, 1024) buffer must
+    count ~2 * 1000 * 4KB of slice traffic, not 1000 * 4MB of full-buffer
+    traffic (XLA aliases the dynamic-update-slice in place)."""
+    x = jax.ShapeDtypeStruct((1024,), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            c = c * 1.0001
+            return c, c
+        _, ys = jax.lax.scan(body, x, None, length=1000)
+        return ys
+
+    costs = H.analyze(_compiled_text(f, x))
+    buffer_bytes = 1000 * 1024 * 4
+    # generous bound: well under one full-buffer-per-step (1000x)
+    assert costs["hbm_bytes"] < 30 * buffer_bytes, costs["hbm_bytes"]
+
+
+def test_shape_bytes_parsing():
+    assert H.shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert H.shape_bytes("bf16[8]") == 16
+    assert H.shape_bytes("(s32[], f32[4,4]{1,0})") == 4 + 64
+    assert H.shape_bytes("pred[]") == 1
+
+
+def test_wire_bytes_model():
+    assert H._wire_bytes("all-reduce", 100, 100, 4) == 2 * 100 * 3 / 4
+    assert H._wire_bytes("all-gather", 25, 100, 4) == 100 * 3 / 4
+    assert H._wire_bytes("reduce-scatter", 100, 25, 4) == 100 * 3 / 4
+    assert H._wire_bytes("collective-permute", 64, 64, 1) == 64
+    assert H._wire_bytes("all-reduce", 100, 100, 1) == 0.0
+
+
+def test_dot_contract_dims():
+    a = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((32, 16), jnp.float32)
+    costs = H.analyze(_compiled_text(lambda a, b: a @ b, a, b))
+    want = 2 * 64 * 16 * 32
+    assert abs(costs["flops"] - want) / want < 0.05

@@ -1,0 +1,56 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from
+artifacts/dryrun/*.json. Prints markdown to stdout."""
+import glob
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def gb(x):
+    return (x or 0) / 2**30
+
+
+def main():
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        if f.endswith("skips.json"):
+            continue
+        d = json.load(open(f))
+        rows.append(d)
+
+    print("### Dry-run table (compiled cells)\n")
+    print("| arch | shape | mesh | chips | compile s | arg GB/dev | "
+          "temp GB/dev | fits 16GB | grad_accum |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for d in sorted(rows, key=lambda d: (d["arch"], d["shape"], d["mesh"])):
+        m = d["memory"]
+        a, t = gb(m["argument_bytes"]), gb(m["temp_bytes"])
+        fits = "yes" if a + t <= 16.0 else f"NO ({a+t:.0f} GB)"
+        print(f"| {d['arch']} | {d['shape']} | {d['mesh']} | {d['chips']} "
+              f"| {d['times']['compile_s']:.0f} | {a:.2f} | {t:.2f} "
+              f"| {fits} | {d['meta'].get('grad_accum', '-')} |")
+
+    sk = os.path.join(ART, "skips.json")
+    if os.path.exists(sk):
+        print("\nSkipped cells (documented in DESIGN.md "
+              "§Arch-applicability):\n")
+        for s in json.load(open(sk)):
+            print(f"* {s['arch']} x {s['shape']} ({s['mesh']}): {s['skip']}")
+
+    print("\n### Roofline table (per device, from the compiled artifact)\n")
+    print("| arch | shape | mesh | compute s | memory s | collective s | "
+          "DCN s | bottleneck | useful | MFU |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for d in sorted(rows, key=lambda d: (d["arch"], d["shape"], d["mesh"])):
+        r = d["roofline"]
+        print(f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+              f"| {r['compute_s']:.4g} | {r['memory_s']:.4g} "
+              f"| {r['collective_s']:.4g} | {r['dcn_s']:.3g} "
+              f"| {r['bottleneck']} | {r['useful_ratio']:.2f} "
+              f"| {r['mfu']:.4f} |")
+
+
+if __name__ == "__main__":
+    sys.exit(main())
