@@ -4,7 +4,7 @@ The container is offline (no MNIST/UCI), so the paper's tables are
 reproduced on synthetic datasets spanning the same regimes: clustered
 (gaussian mixture), imbalanced heavy-tail, and higher-dimensional blobs.
 Scales are CPU-budgeted; the qualitative claims under test are listed in
-EXPERIMENTS.md §Paper-claims.
+DESIGN.md §8 ("Paper claims under test").
 """
 from __future__ import annotations
 
@@ -41,7 +41,11 @@ class Run:
 
 
 def run_obp(x: np.ndarray, k: int, variant: str, seed: int,
-            m: int | None = None, strategy: str = "batched") -> Run:
+            m: int | None = None, strategy: str = "batched",
+            chunk_size: int | None = None, metric: str = "l1") -> Run:
+    """Timed OneBatchPAM run. ``chunk_size`` streams the distance build in
+    row chunks (core/streaming.py) — same numbers, bounded intermediates;
+    the ``-stream`` suffix marks those rows in figure CSVs."""
     xj = jnp.asarray(x)
     n = x.shape[0]
     m = m or min(sampling.default_batch_size(n, k), n // 2)
@@ -49,17 +53,20 @@ def run_obp(x: np.ndarray, k: int, variant: str, seed: int,
 
     def go():
         res, _ = solver.one_batch_pam(key, xj, k, m=m, variant=variant,
-                                      strategy=strategy, backend="ref")
+                                      metric=metric, strategy=strategy,
+                                      backend="ref", chunk_size=chunk_size)
         return res.medoid_idx.block_until_ready()
 
     go()  # compile
     t0 = time.perf_counter()
     med = go()
     dt = time.perf_counter() - t0
-    obj = float(solver.objective(xj, med, backend="ref"))
-    return Run(f"obp-{variant}" + ("" if strategy == "batched" else
-                                   f"-{strategy}"),
-               "", k, dt, obj, n * m)
+    obj = float(solver.objective(xj, med, metric=metric, backend="ref",
+                                 chunk_size=chunk_size))
+    suffix = "" if metric == "l1" else f"-{metric}"
+    suffix += "" if strategy == "batched" else f"-{strategy}"
+    suffix += "" if chunk_size is None else "-stream"
+    return Run(f"obp-{variant}{suffix}", "", k, dt, obj, n * m)
 
 
 def run_baseline(name: str, x: np.ndarray, k: int, seed: int, **kw) -> Run:

@@ -1,12 +1,17 @@
 """Paper Figure 1: runtime/objective evolution vs n (k fixed) and vs k
-(n fixed) for the five headline competitors."""
+(n fixed) for the five headline competitors, plus the streaming OBP row
+(chunk_size bounds peak intermediate memory; numbers must coincide with
+the one-shot row — DESIGN.md §4)."""
 from __future__ import annotations
 
 from benchmarks.common import csv_line, run_baseline, run_obp
-from repro.data.embeddings import gaussian_mixture
+
+CHUNK = 2048  # streaming row-chunk: peak intermediates ~ CHUNK * m floats
 
 
 def run() -> list[str]:
+    from repro.data.embeddings import gaussian_mixture
+
     lines = []
     # left panel: vs n at k=10
     for n in (1000, 2000, 4000, 8000):
@@ -15,6 +20,7 @@ def run() -> list[str]:
             "kmeans_pp": run_baseline("kmeans_pp", x, 10, 0),
             "clara-5": run_baseline("clara", x, 10, 0, repeats=5),
             "obp-nniw": run_obp(x, 10, "nniw", 0),
+            "obp-nniw-stream": run_obp(x, 10, "nniw", 0, chunk_size=CHUNK),
         }
         if n <= 4000:  # FasterPAM infeasible past this scale on CPU here
             rows["fasterpam"] = run_baseline("fasterpam", x, 10, 0)

@@ -1,8 +1,11 @@
 """Large-scale OneBatchPAM: the paper's workload at 200k points, all four
-batch variants, plus the distributed (shard_map) solver on host devices.
+batch variants with a streamed distance build, plus the distributed
+(shard_map) solver on host devices with the batch built in-mesh.
 
     PYTHONPATH=src python examples/cluster_embeddings.py
-    # distributed path (8 forced host devices):
+    # bound peak intermediate memory to ~chunk x m floats:
+    PYTHONPATH=src python examples/cluster_embeddings.py --chunk-size 8192
+    # distributed path (8 forced host devices), n sharded over the mesh:
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/cluster_embeddings.py --distributed
 """
@@ -19,49 +22,64 @@ from repro.data import heavy_tail
 N, P, K = 200_000, 24, 64
 
 
-def single_process():
+def single_process(chunk_size: int | None):
     x = heavy_tail(N, P, seed=0)
     print(f"== OneBatchPAM variants on {N} x {P} (k={K}) ==")
     m = sampling.default_batch_size(N, K)
     print(f"batch size m = 100*log(k*n) = {m}  "
           f"({N * m:,} distance evals vs n^2 = {N * N:,})")
+    if chunk_size:
+        # Per-chunk f32 working set: (chunk, m) output on the TPU kernel
+        # path; the CPU ref path's broadcast slab is larger (up to a
+        # factor of p) — the exact accounting is in DESIGN.md §7.
+        print(f"streaming: chunk_size={chunk_size} "
+              f"((chunk, m) block slice = {chunk_size * m * 4 / 2**20:.0f} "
+              f"MiB per chunk; CPU ref intermediates peak higher, see "
+              f"DESIGN.md §7)")
     for variant in sampling.VARIANTS:
         t0 = time.perf_counter()
-        sel = MedoidSelector(k=K, variant=variant, seed=0).fit(x)
+        sel = MedoidSelector(k=K, variant=variant, seed=0,
+                             chunk_size=chunk_size).fit(x)
         dt = time.perf_counter() - t0
         print(f"{variant:7s}: obj={sel.objective(x):.4f} time={dt:5.1f}s "
               f"swaps={sel.n_swaps_}")
 
 
-def distributed():
-    from jax.sharding import NamedSharding, PartitionSpec as P_
-    from repro.core.distributed import make_distributed_obp
+def distributed(chunk_size: int | None):
+    from repro.core.distributed import make_distributed_obp_e2e, shard_over_batch
 
     n_dev = jax.device_count()
     assert n_dev >= 4, "run with XLA_FLAGS=--xla_force_host_platform_device_count=8"
-    mesh = jax.make_mesh((n_dev // 2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    x = heavy_tail(N, P + 8, seed=0)  # p=32, divisible by model axis
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    x = heavy_tail(N, P, seed=0)
     rng = np.random.default_rng(0)
     m = sampling.default_batch_size(N, K)
     batch_idx = jnp.asarray(rng.choice(N, m, replace=False))
-    weights = jnp.ones((m,), jnp.float32)
     init = jnp.asarray(rng.choice(N, K, replace=False))
 
-    run = make_distributed_obp(mesh, k=K, metric="l1")
-    xs = jax.device_put(jnp.asarray(x),
-                        NamedSharding(mesh, P_(("data",), "model")))
+    # e2e: the nniw weights are built in-mesh from the sharded rows (one
+    # (m,)-float psum), the solve sweeps data-parallel (DESIGN.md §5).
+    run = make_distributed_obp_e2e(mesh, k=K, metric="l1", variant="nniw",
+                                   chunk_size=chunk_size)
+    xs = shard_over_batch(mesh, jnp.asarray(x))
     t0 = time.perf_counter()
-    res = run(xs, batch_idx, weights, init)
+    res, weights = run(xs, batch_idx, init)
     jax.block_until_ready(res)
     dt = time.perf_counter() - t0
-    obj = float(solver.objective(jnp.asarray(x), res.medoid_idx))
+    obj = float(solver.objective(jnp.asarray(x), res.medoid_idx,
+                                 chunk_size=chunk_size))
     print(f"distributed OBP on {n_dev} devices: obj={obj:.4f} "
-          f"time={dt:.1f}s swaps={int(res.n_swaps)}")
+          f"time={dt:.1f}s swaps={int(res.n_swaps)} "
+          f"nniw weight mean={float(jnp.mean(weights)):.3f}")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="stream the n axis in row chunks of this size")
     args = ap.parse_args()
-    distributed() if args.distributed else single_process()
+    if args.distributed:
+        distributed(args.chunk_size)
+    else:
+        single_process(args.chunk_size)

@@ -1,0 +1,71 @@
+"""jax version compatibility shims.
+
+The repo targets current jax APIs; these helpers keep it importable and
+correct on the older jax baked into the offline container. Each shim
+prefers the modern spelling and falls back:
+
+  * mesh context: ``jax.sharding.set_mesh`` / ``use_mesh`` (new) vs the
+    classic ``with mesh:`` physical-mesh context (old).
+  * current mesh: ``jax.sharding.get_abstract_mesh`` (new) vs the
+    thread-resources physical mesh (old). Callers treat "no mesh" as
+    None / empty axis_names, which both paths honour.
+  * ``shard_map``: top-level vs experimental import, and the
+    ``check_rep`` -> ``check_vma`` kwarg rename.
+  * ``make_mesh``: the ``axis_types`` kwarg only exists on newer jax.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:  # jax >= 0.6 exposes shard_map at top level
+    from jax import shard_map as _shard_map_raw
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map_raw
+
+# The replication-check kwarg was renamed check_rep -> check_vma across jax
+# versions; pick whichever this jax spells.
+_CHECK_KW = ("check_vma" if "check_vma"
+             in inspect.signature(_shard_map_raw).parameters else "check_rep")
+
+
+def shard_map(fun=None, **kw):
+    """shard_map accepting either replication-check kwarg spelling."""
+    if "check_vma" in kw and _CHECK_KW != "check_vma":
+        kw[_CHECK_KW] = kw.pop("check_vma")
+    if fun is None:
+        return lambda f: _shard_map_raw(f, **kw)
+    return _shard_map_raw(fun, **kw)
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis_types where that kwarg exists (it is
+    the default there, so omitting it on older jax is equivalent)."""
+    if "axis_types" in inspect.signature(jax.make_mesh).parameters:
+        auto = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types=auto)
+    return jax.make_mesh(shape, axes)
+
+
+def get_abstract_mesh():
+    """The mesh governing the current trace, or None outside any mesh."""
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        return getter()
+    from jax._src import mesh as _mesh_lib
+
+    am = _mesh_lib.get_abstract_mesh()
+    if getattr(am, "axis_names", ()):
+        return am
+    pm = _mesh_lib.thread_resources.env.physical_mesh
+    return pm if pm.axis_names else None
+
+
+def set_mesh(mesh):
+    """Context manager entering ``mesh`` for sharding-constraint lookup."""
+    for name in ("set_mesh", "use_mesh"):
+        setter = getattr(jax.sharding, name, None)
+        if setter is not None:
+            return setter(mesh)
+    return mesh  # classic API: Mesh is itself a context manager

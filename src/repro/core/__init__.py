@@ -3,12 +3,14 @@
 Public API:
   one_batch_pam / fasterpam / objective   (solver.py)
   build_batch, Batch, VARIANTS            (sampling.py)
+  stream_block / stream_assign            (streaming.py)
   MedoidSelector                          (selector.py)
-  make_distributed_obp                    (distributed.py)
+  make_distributed_obp / _e2e             (distributed.py)
   baselines.ALL_BASELINES                 (paper competitors, counted)
 """
 from .sampling import Batch, VARIANTS, build_batch, default_batch_size  # noqa: F401
 from .selector import MedoidSelector  # noqa: F401
+from .streaming import StreamedBlock, stream_assign, stream_block  # noqa: F401
 from .solver import (  # noqa: F401
     SolveResult,
     fasterpam,

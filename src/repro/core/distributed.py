@@ -1,19 +1,28 @@
 """Multi-pod distributed OneBatchPAM via shard_map.
 
-Sharding plan (DESIGN.md section 3/5):
+Sharding plan (DESIGN.md §5):
   * candidates n   -> sharded over the ("pod", "data") mesh axes ("batch
-                      axes"): each device owns an n_local x m block.
+                      axes"): each device owns an n_local x m block,
+                      built row-chunk by row-chunk (streaming.py) so peak
+                      per-device HBM is O(chunk * m).
   * batch m        -> replicated (m = O(log n) is tiny).
   * feature dim p  -> sharded over "model" during the distance build; the
-                      per-feature partial L1/L2 sums are psum-reduced, after
-                      which the model axis holds replicas of the block.
+                      per-feature raw partials combine with the metric's
+                      registered ``reduce`` collective (psum for l1/l2,
+                      pmax for chebyshev; cosine is not feature-shardable
+                      — see metrics.py), after which the model axis holds
+                      replicas of the block.
 
-Per swap sweep the only cross-device traffic is:
-  * one (gain, index) argmax all-reduce over the batch axes,
-  * one m-float psum to broadcast the winning candidate's row.
-So the collective footprint is O(m) bytes per swap versus the O(n m) the
-block would cost to gather — this is why OBP maps onto pods so well: the
-O(n log n) state never moves.
+Per swap sweep the only cross-device traffic is three scalars (gain pmax,
+winner-shard pmin, winning-flat psum) plus one m-float psum to broadcast
+the winning candidate's row. So the collective footprint is O(m) bytes
+per swap versus the O(n m) the block would cost to gather — this is why
+OBP maps onto pods so well: the O(n log n) state never moves. The e2e
+entry point also builds the batch variant weights in-mesh: the nniw
+nearest-neighbour histogram is counted on each shard's rows inside the
+streaming chunk sweep and completed with a single (m,)-float psum (with a
+"model" feature axis the counts instead come from a second pass over the
+reduced block, since raw partials are not yet distances).
 
 Entry points are shard_map-decorated and meant to be called under
 ``with mesh:`` from launch/ or examples/. n must be divisible by the
@@ -26,37 +35,51 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import solver
-from repro.kernels import ops
-
-try:  # jax >= 0.6 exposes shard_map at top level
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
+from repro.compat import shard_map as _shard_map
+from repro.core import solver, streaming
+from repro.kernels import metrics, ops
+from repro.kernels.ref import LARGE
 
 
 def _batch_axes(mesh) -> tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a != "model")
 
 
-def distance_block(x_local, b, *, metric: str, model_axis: str | None,
-                   backend: str = "auto"):
-    """Local (n_local, m) block with the feature dim sharded over `model`.
+def _axis_size(ax: str, axis_sizes=None):
+    """Static mesh-axis size. Older jax has no lax.axis_size, so factories
+    thread dict(mesh.shape) through; the traced psum(1) is the last resort."""
+    if axis_sizes is not None:
+        return axis_sizes[ax]
+    if hasattr(jax.lax, "axis_size"):  # jax >= 0.4.some
+        return jax.lax.axis_size(ax)
+    return jax.lax.psum(1, ax)  # pragma: no cover — traced fallback
 
-    x_local: (n_local, p_local), b: (m, p_local). For L1 the per-feature
-    partial sums add linearly, so a psum over the model axis completes the
-    reduction; same for squared L2 partials.
+
+def shard_over_batch(mesh, x: jnp.ndarray) -> jnp.ndarray:
+    """Place x (n, p) on the mesh: n over the batch axes, p over "model"."""
+    has_model = "model" in mesh.axis_names
+    n_dev = 1
+    for ax in _batch_axes(mesh):
+        n_dev *= mesh.shape[ax]
+    if x.shape[0] % n_dev:
+        raise ValueError(
+            f"n={x.shape[0]} must be divisible by the {n_dev} batch-axis "
+            "devices; pad upstream with LARGE-distance rows (DESIGN.md §5)")
+    spec = P(_batch_axes(mesh), "model" if has_model else None)
+    return jax.device_put(x, NamedSharding(mesh, spec))
+
+
+def _owner_select(idx, off, n_local):
+    """Global indices -> (mine, safe) for this shard: which of ``idx`` this
+    shard owns, and their clipped local row numbers (safe to gather with;
+    meaningful only where ``mine``). The single home for the global-to-
+    local ownership idiom, so the shard linearisation has one definition.
     """
-    d = ops.pairwise_distance(
-        x_local, b, metric="sqeuclidean" if metric == "l2" else metric,
-        backend=backend)
-    if model_axis is not None:
-        d = jax.lax.psum(d, model_axis)
-    if metric == "l2":
-        d = jnp.sqrt(jnp.maximum(d, 0.0))
-    return d
+    local = idx - off
+    mine = (local >= 0) & (local < n_local)
+    return mine, jnp.clip(local, 0, n_local - 1)
 
 
 def solve_sharded(
@@ -65,7 +88,9 @@ def solve_sharded(
     *,
     axes: Sequence[str],       # batch mesh axes, e.g. ("pod", "data")
     max_swaps: int = 500,
+    eps: float = 0.0,
     backend: str = "auto",
+    axis_sizes=None,           # dict(mesh.shape) for static axis sizes
 ) -> solver.SolveResult:
     """Batched steepest-descent sweep with a global argmax across shards.
 
@@ -74,16 +99,12 @@ def solve_sharded(
     axes = tuple(axes)
     n_local, m = d_local.shape
     k = init_idx.shape[0]
-    shard_id = jax.lax.axis_index(axes[0])
-    for ax in axes[1:]:
-        shard_id = shard_id * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+    shard_id = _shard_id(axes, axis_sizes)
     row_offset = shard_id * n_local
 
     def owned_rows(idx):
         """Replicated (k, m) medoid rows: each owner psum-broadcasts."""
-        local = idx - row_offset
-        mine = (local >= 0) & (local < n_local)
-        safe = jnp.clip(local, 0, n_local - 1)
+        mine, safe = _owner_select(idx, row_offset, n_local)
         rows = jnp.where(mine[:, None], d_local[safe], 0.0)
         return jax.lax.psum(rows, axes)
 
@@ -103,26 +124,35 @@ def solve_sharded(
         nh = jax.nn.one_hot(near, k, dtype=jnp.float32)
         gain = ops.swap_gain(d_local, d1, d2, nh, backend=backend)
         # Mask rows that are current medoids (global -> local index check).
-        local = idx - row_offset
-        mine = (local >= 0) & (local < n_local)
-        safe = jnp.clip(local, 0, n_local - 1)
+        mine, safe = _owner_select(idx, row_offset, n_local)
         gain = gain.at[safe].set(
             jnp.where(mine[:, None], solver.NEG, gain[safe]))
         flat = jnp.argmax(gain)
         best_local = gain.reshape(-1)[flat]
-        # Global argmax: max over (gain, encoded index).
+        # Global argmax: max gain, then the *lowest* global flat index among
+        # the tied winners — exact gain ties are routine (the min/max
+        # clipping in the gain plateaus values), and jnp.argmax on a single
+        # device picks the first flat index, so the collective must too for
+        # the sharded sweep to be bit-for-bit with solve_batched. The
+        # election is lexicographic (shard, local flat): shards are ordered
+        # by row offset and the local argmax already picked the minimal
+        # local flat, so this equals the global minimum without ever
+        # forming n*k-scale integers (which overflow int32 at large n).
         best_all = jax.lax.pmax(best_local, axes)
         is_winner = best_local >= best_all
-        cand_global = row_offset + flat // k
-        enc = jnp.where(is_winner, cand_global * k + flat % k, -1)
-        enc = jax.lax.pmax(enc, axes)          # deterministic tie-break: max enc
-        i_glob, l = enc // k, enc % k
+        win_shard = jax.lax.pmin(
+            jnp.where(is_winner, shard_id, jnp.iinfo(jnp.int32).max), axes)
+        flat_win = jax.lax.psum(
+            jnp.where(shard_id == win_shard, flat, 0), axes)
+        i_glob = win_shard * n_local + flat_win // k
+        l = flat_win % k
         # Broadcast the winning row (owner psum).
-        li = i_glob - row_offset
-        owns = (li >= 0) & (li < n_local)
-        row = jnp.where(owns, d_local[jnp.clip(li, 0, n_local - 1)], 0.0)
+        owns, li = _owner_select(i_glob, row_offset, n_local)
+        row = jnp.where(owns, d_local[li], 0.0)
         row = jax.lax.psum(row, axes)
-        improved = best_all > 0.0
+        # Same acceptance rule as solve_batched: d1 is replicated, so the
+        # eps threshold is identical on every shard.
+        improved = best_all > eps * jnp.sum(d1)
         new_rows = med_rows.at[l].set(row)
         nd1, nd2, nnear = solver._top2(new_rows)
         new_state = (idx.at[l].set(i_glob.astype(jnp.int32)), new_rows,
@@ -136,17 +166,51 @@ def solve_sharded(
     return solver.SolveResult(idx, t, jnp.mean(d1), done)
 
 
+def _shard_id(axes: Sequence[str], axis_sizes=None):
+    """This device's linear index over the axes-major device grid."""
+    shard_id = jax.lax.axis_index(axes[0])
+    for ax in axes[1:]:
+        shard_id = shard_id * _axis_size(ax, axis_sizes) + jax.lax.axis_index(ax)
+    return shard_id
+
+
+def _shard_offset(axes: Sequence[str], n_local: int, axis_sizes=None):
+    """This device's row offset in the axes-major linearised n axis."""
+    return _shard_id(axes, axis_sizes) * n_local
+
+
+def _gather_batch_rows(x_local, batch_idx, off, axes):
+    """Replicate the m batch rows out of the n-sharded x: owners
+    contribute, psum broadcasts. O(m p) bytes, once."""
+    n_local = x_local.shape[0]
+    mine, safe = _owner_select(batch_idx, off, n_local)
+    b = jnp.where(mine[:, None], x_local[safe], 0.0)
+    return jax.lax.psum(b, axes)
+
+
+@functools.lru_cache(maxsize=32)
 def make_distributed_obp(mesh, *, k: int, metric: str = "l1",
-                         max_swaps: int = 500, backend: str = "auto"):
+                         max_swaps: int = 500, eps: float = 0.0,
+                         backend: str = "auto",
+                         chunk_size: int | None = None):
     """Build a jit-able distributed OneBatchPAM solve function.
 
     Returns fn(x, batch_idx, weights, init_idx) -> SolveResult, where
       x: (n, p) sharded P(batch_axes, "model"),
       batch_idx: (m,) replicated, weights: (m,) replicated,
       init_idx: (k,) replicated.
+
+    Weights are caller-supplied (precomputed variant weights); use
+    :func:`make_distributed_obp_e2e` to also build them in-mesh.
+    ``chunk_size`` streams each device's local block build (DESIGN.md §4).
+    Both factories are memoised on their (mesh, options) key, so repeated
+    calls (a seed sweep, MedoidSelector.fit in a loop) reuse the traced +
+    compiled program instead of paying shard_map retracing per call.
     """
     batch_axes = _batch_axes(mesh)
     has_model = "model" in mesh.axis_names
+    sizes = dict(mesh.shape)
+    spec = metrics.get(metric)
 
     @functools.partial(
         _shard_map, mesh=mesh,
@@ -156,41 +220,133 @@ def make_distributed_obp(mesh, *, k: int, metric: str = "l1",
         check_vma=False,
     )
     def run(x_local, batch_idx, weights, init_idx):
-        # Gather the batch rows (global indices) from the sharded x:
-        # owners contribute, psum replicates. O(m p) bytes, once.
-        axes_all = batch_axes
         n_local = x_local.shape[0]
-        shard_id = jax.lax.axis_index(axes_all[0])
-        for ax in axes_all[1:]:
-            shard_id = shard_id * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
-        off = shard_id * n_local
-        local = batch_idx - off
-        mine = (local >= 0) & (local < n_local)
-        b = jnp.where(mine[:, None],
-                      x_local[jnp.clip(local, 0, n_local - 1)], 0.0)
-        b = jax.lax.psum(b, axes_all)
-        # p is sharded over "model": the local block holds per-feature
-        # partial sums. Each model replica only needs its own 1/|model|
-        # row-slice for the sweep (rows re-sharded over model => batch x
-        # model sweep parallelism), so the reduction is a reduce-scatter
-        # over rows — half the wire bytes of psum+slice and no replicated
-        # block ever materialises (§Perf obp iterations 1-2).
-        metric_l = "sqeuclidean" if metric == "l2" else metric
-        d = ops.pairwise_distance(x_local, b, metric=metric_l,
-                                  backend=backend)
+        off = _shard_offset(batch_axes, n_local, sizes)
+        b = _gather_batch_rows(x_local, batch_idx, off, batch_axes)
+        # p is sharded over "model": the local block holds per-feature raw
+        # partials. For additive metrics each model replica only needs its
+        # own 1/|model| row-slice for the sweep (rows re-sharded over
+        # model => batch x model sweep parallelism), so the reduction is a
+        # reduce-scatter over rows — half the wire bytes of psum+slice and
+        # no replicated block ever materialises (DESIGN.md §5). Max-reduce
+        # metrics (chebyshev) have no scatter collective, so they pmax.
+        raw = streaming.stream_block(x_local, b, metric=metric,
+                                     backend=backend, chunk_size=chunk_size,
+                                     raw=True).d
         solve_axes = batch_axes
         if has_model:
-            msize = jax.lax.axis_size("model")
-            if n_local % msize == 0:
-                d = jax.lax.psum_scatter(d, "model", scatter_dimension=0,
-                                         tiled=True)
+            if spec.reduce is None:
+                raise ValueError(
+                    f"metric {metric!r} cannot be feature-sharded; "
+                    "drop the model axis")
+            msize = sizes["model"]
+            if spec.reduce == "sum" and n_local % msize == 0:
+                raw = jax.lax.psum_scatter(raw, "model", scatter_dimension=0,
+                                           tiled=True)
                 solve_axes = batch_axes + ("model",)
+            elif spec.reduce == "sum":
+                raw = jax.lax.psum(raw, "model")
             else:
-                d = jax.lax.psum(d, "model")
-        if metric == "l2":
-            d = jnp.sqrt(jnp.maximum(d, 0.0))
-        d = d * weights[None, :]
+                raw = jax.lax.pmax(raw, "model")
+        d = spec.finalize(raw) * weights[None, :]
         return solve_sharded(d, init_idx, axes=solve_axes,
-                             max_swaps=max_swaps, backend=backend)
+                             max_swaps=max_swaps, eps=eps,
+                             backend=backend, axis_sizes=sizes)
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=32)
+def make_distributed_obp_e2e(mesh, *, k: int, metric: str = "l1",
+                             variant: str = "unif",
+                             max_swaps: int = 500, eps: float = 0.0,
+                             backend: str = "auto",
+                             chunk_size: int | None = None):
+    """Distributed OneBatchPAM with the batch build fused into the mesh.
+
+    Returns fn(x, batch_idx, init_idx) -> (SolveResult, weights (m,)).
+    Unlike :func:`make_distributed_obp`, the variant weights are computed
+    data-parallel on the sharded rows (DESIGN.md §5):
+
+      * unif   — unit weights, no extra collective.
+      * debias — each owner shard LARGE-s its own batch rows' diagonal.
+      * nniw   — nearest-neighbour counts accumulate per shard inside the
+                 streaming chunk sweep (count_nn fusion; a second pass
+                 over the reduced block when a "model" axis is present),
+                 then one (m,)-float psum completes the histogram.
+                 Identical numbers to sampling.build_batch.
+
+    lwcs needs a second dataset-wide sampling pass, so it stays host-side
+    (build the batch with sampling.build_batch and use
+    make_distributed_obp). When the mesh has a "model" axis, the block is
+    psum/pmax-reduced before counting so the fused counts see finalized
+    distances.
+    """
+    if variant not in ("unif", "debias", "nniw"):
+        raise ValueError(
+            f"variant {variant!r} not supported in-mesh; build the batch "
+            "host-side with sampling.build_batch + make_distributed_obp")
+    batch_axes = _batch_axes(mesh)
+    has_model = "model" in mesh.axis_names
+    sizes = dict(mesh.shape)
+    spec = metrics.get(metric)
+    if has_model and spec.reduce is None:
+        raise ValueError(
+            f"metric {metric!r} cannot be feature-sharded; drop the model axis")
+
+    @functools.partial(
+        _shard_map, mesh=mesh,
+        in_specs=(P(batch_axes, "model" if has_model else None),
+                  P(), P()),
+        out_specs=(solver.SolveResult(P(), P(), P(), P()), P()),
+        check_vma=False,
+    )
+    def run(x_local, batch_idx, init_idx):
+        n_local = x_local.shape[0]
+        m = batch_idx.shape[0]
+        off = _shard_offset(batch_axes, n_local, sizes)
+        b = _gather_batch_rows(x_local, batch_idx, off, batch_axes)
+        want_fused = variant == "nniw" and not has_model
+        if has_model:
+            # Raw partials must reduce across the model axis before they
+            # are distances, so the nniw argmin cannot fuse into the chunk
+            # sweep here — it runs as a second pass over the reduced block.
+            raw = streaming.stream_block(x_local, b, metric=metric,
+                                         backend=backend,
+                                         chunk_size=chunk_size, raw=True).d
+            collective = (jax.lax.psum if spec.reduce == "sum"
+                          else jax.lax.pmax)
+            d = spec.finalize(collective(raw, "model"))
+            local_counts = (jnp.zeros((m,), jnp.float32).at[
+                jnp.argmin(d, axis=1)].add(1.0)
+                if variant == "nniw" else None)
+        else:
+            sb = streaming.stream_block(x_local, b, metric=metric,
+                                        backend=backend,
+                                        chunk_size=chunk_size,
+                                        count_nn=want_fused)
+            d = sb.d
+            local_counts = sb.nn_counts if want_fused else None
+
+        n_global = n_local
+        for ax in batch_axes:
+            n_global = n_global * sizes[ax]
+
+        if variant == "nniw":
+            counts = jax.lax.psum(local_counts, batch_axes)  # the single psum
+            weights = counts * (m / n_global)                # mean 1
+        else:
+            weights = jnp.ones((m,), jnp.float32)
+        if variant == "debias":
+            mine, safe = _owner_select(batch_idx, off, n_local)
+            cols = jnp.arange(m)
+            d = d.at[safe, cols].set(
+                jnp.where(mine, LARGE, d[safe, cols]))
+
+        d = d * weights[None, :]
+        res = solve_sharded(d, init_idx, axes=batch_axes,
+                            max_swaps=max_swaps, eps=eps,
+                            backend=backend, axis_sizes=sizes)
+        return res, weights
 
     return jax.jit(run)

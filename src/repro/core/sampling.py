@@ -11,7 +11,14 @@ Four variants from the paper's Experiments section:
   lwcs   — lightweight-coreset sampling (Bachem et al. 2018):
            q(x) = 1/2n + d(x, mean)^2 / (2 * sum d^2), weights 1/(m q).
 
-All functions are jit-compatible (static m).
+All functions are jit-compatible (static m). The (n, m) block is produced
+by the streaming pipeline (streaming.py, DESIGN.md §4): pass ``chunk_size``
+to bound peak intermediate memory — the nniw nearest-neighbour histogram
+is fused into the same row sweep, so no full-height argmin pass re-reads
+the block. ``chunk_size=None`` keeps the one-shot computation; both paths
+produce identical numbers whenever they stay on the same evaluation path
+(see streaming.py's module docstring for the ref-oracle big-block caveat
+that bounds the bitwise form of this claim).
 """
 from __future__ import annotations
 
@@ -20,7 +27,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops
+from repro.core import streaming
 from repro.kernels.ref import LARGE
 
 VARIANTS = ("unif", "debias", "nniw", "lwcs")
@@ -51,15 +58,21 @@ def build_batch(
     variant: str = "nniw",
     metric: str = "l1",
     backend: str = "auto",
+    chunk_size: int | None = None,
 ) -> Batch:
-    """Sample the batch, compute the (n, m) block, apply the variant."""
+    """Sample the batch, compute the (n, m) block, apply the variant.
+
+    ``chunk_size`` streams the n axis through the distance kernels in row
+    chunks (exact; see streaming.py). None computes the block in one shot.
+    """
     n = x.shape[0]
     if variant not in VARIANTS:
         raise ValueError(f"unknown variant {variant!r}; options {VARIANTS}")
 
     if variant == "lwcs":
         mean = jnp.mean(x, axis=0, keepdims=True)
-        dmean = ops.pairwise_distance(x, mean, metric=metric, backend=backend)[:, 0]
+        dmean = streaming.stream_block(
+            x, mean, metric=metric, backend=backend, chunk_size=chunk_size).d[:, 0]
         q = 0.5 / n + 0.5 * (dmean**2) / jnp.maximum(jnp.sum(dmean**2), 1e-30)
         idx = jax.random.choice(key, n, shape=(m,), replace=False, p=q)
         w = 1.0 / (m * q[idx])
@@ -68,12 +81,13 @@ def build_batch(
         idx = _uniform_idx(key, n, m)
         w = jnp.ones((m,), jnp.float32)
 
-    d = ops.pairwise_distance(x, x[idx], metric=metric, backend=backend)
+    sb = streaming.stream_block(x, x[idx], metric=metric, backend=backend,
+                                chunk_size=chunk_size,
+                                count_nn=(variant == "nniw"))
+    d = sb.d
 
     if variant == "nniw":
-        nn = jnp.argmin(d, axis=1)                          # (n,)
-        counts = jnp.zeros((m,), jnp.float32).at[nn].add(1.0)
-        w = counts * (m / n)                                # mean 1
+        w = sb.nn_counts * (m / n)                          # mean 1
     if variant == "debias":
         d = d.at[idx, jnp.arange(m)].set(LARGE)
 

@@ -16,8 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import solver
-from repro.kernels import ops
+from repro.core import solver, streaming
 
 
 @dataclasses.dataclass
@@ -30,6 +29,10 @@ class MedoidSelector:
     max_swaps: int = 500
     seed: int = 0
     backend: str = "auto"
+    # Streaming / sharding knobs (DESIGN.md §4-§5): chunk_size bounds peak
+    # intermediate memory to O(chunk * m); mesh shards the n axis.
+    chunk_size: int | None = None
+    mesh: object = None
 
     medoid_indices_: np.ndarray | None = None
     medoids_: np.ndarray | None = None
@@ -41,7 +44,8 @@ class MedoidSelector:
         res, _ = solver.one_batch_pam(
             jax.random.PRNGKey(self.seed), x, self.k, m=self.m,
             variant=self.variant, metric=self.metric, strategy=self.strategy,
-            max_swaps=self.max_swaps, backend=self.backend)
+            max_swaps=self.max_swaps, backend=self.backend,
+            chunk_size=self.chunk_size, mesh=self.mesh)
         self.medoid_indices_ = np.asarray(res.medoid_idx)
         self.medoids_ = np.asarray(x[res.medoid_idx])
         self.est_objective_ = float(res.est_objective)
@@ -51,13 +55,15 @@ class MedoidSelector:
     def predict(self, x) -> np.ndarray:
         if self.medoids_ is None:
             raise RuntimeError("call fit() first")
-        d = ops.pairwise_distance(jnp.asarray(x), jnp.asarray(self.medoids_),
-                                  metric=self.metric, backend=self.backend)
-        return np.asarray(jnp.argmin(d, axis=1))
+        labels, _ = streaming.stream_assign(
+            jnp.asarray(x), jnp.asarray(self.medoids_), metric=self.metric,
+            backend=self.backend, chunk_size=self.chunk_size)
+        return np.asarray(labels)
 
     def objective(self, x) -> float:
         if self.medoid_indices_ is None:
             raise RuntimeError("call fit() first")
         return float(solver.objective(jnp.asarray(x),
                                       jnp.asarray(self.medoid_indices_),
-                                      metric=self.metric, backend=self.backend))
+                                      metric=self.metric, backend=self.backend,
+                                      chunk_size=self.chunk_size))

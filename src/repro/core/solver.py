@@ -1,6 +1,6 @@
 """OneBatchPAM local-search solver (the paper's core contribution, in JAX).
 
-Two strategies over identical swap math (DESIGN.md section 2):
+Two strategies over identical swap math (DESIGN.md §2):
 
   * ``eager``   — Algorithm 2 of the paper: scan candidates i = 1..n in
       order, swap as soon as the batch-estimated gain is positive
@@ -157,10 +157,17 @@ def solve_eager(
 
 
 def objective(x: jnp.ndarray, medoid_idx: jnp.ndarray, *, metric: str = "l1",
-              backend: str = "auto") -> jnp.ndarray:
-    """Exact k-medoids objective L(M) on the full dataset (Eq. 1 / n)."""
-    d = ops.pairwise_distance(x, x[medoid_idx], metric=metric, backend=backend)
-    return jnp.mean(jnp.min(d, axis=1))
+              backend: str = "auto",
+              chunk_size: int | None = None) -> jnp.ndarray:
+    """Exact k-medoids objective L(M) on the full dataset (Eq. 1 / n).
+
+    ``chunk_size`` streams the evaluation in O(chunk * k) memory without
+    materialising the (n, k) block (streaming.py, DESIGN.md §4).
+    """
+    from repro.core import streaming
+    _, dmin = streaming.stream_assign(x, x[medoid_idx], metric=metric,
+                                      backend=backend, chunk_size=chunk_size)
+    return jnp.mean(dmin)
 
 
 def one_batch_pam(
@@ -175,18 +182,40 @@ def one_batch_pam(
     max_swaps: int = 500,
     eps: float = 0.0,
     backend: str = "auto",
+    chunk_size: int | None = None,
+    mesh=None,
 ) -> tuple[SolveResult, sampling.Batch]:
     """End-to-end OneBatchPAM (Algorithm 1).
 
     Returns the solve result plus the batch (for inspection / reuse).
+
+    ``chunk_size`` streams the distance build in row chunks (DESIGN.md §4).
+    ``mesh`` (a ``jax.sharding.Mesh``) shards the n axis across its batch
+    axes and runs the whole batch build + swap sweep data-parallel under
+    shard_map (DESIGN.md §5); the returned batch then has ``d=None`` since
+    the block only ever exists shard-wise on the devices.
     """
     n = x.shape[0]
     m = m if m is not None else sampling.default_batch_size(n, k)
     m = min(m, n)
     key_b, key_i = jax.random.split(key)
-    batch = sampling.build_batch(key_b, x, m, variant=variant, metric=metric,
-                                 backend=backend)
     init_idx = jax.random.choice(key_i, n, shape=(k,), replace=False)
+
+    if mesh is not None:
+        from repro.core import distributed
+        if strategy != "batched":
+            raise ValueError("mesh mode supports strategy='batched' only")
+        # Same draw as build_batch so mesh and host runs see the same batch.
+        batch_idx = sampling._uniform_idx(key_b, n, m)
+        run = distributed.make_distributed_obp_e2e(
+            mesh, k=k, metric=metric, variant=variant, chunk_size=chunk_size,
+            max_swaps=max_swaps, eps=eps, backend=backend)
+        res, weights = run(distributed.shard_over_batch(mesh, x), batch_idx,
+                           init_idx)
+        return res, sampling.Batch(idx=batch_idx, weights=weights, d=None)
+
+    batch = sampling.build_batch(key_b, x, m, variant=variant, metric=metric,
+                                 backend=backend, chunk_size=chunk_size)
     if strategy == "batched":
         res = solve_batched(batch.d, init_idx, max_swaps=max_swaps, eps=eps,
                             backend=backend)

@@ -1,0 +1,181 @@
+"""Row-streaming distance pipeline (DESIGN.md §4).
+
+OneBatchPAM's memory story is O(nm) instead of O(n^2), but the seed
+pipeline still materialised the full x array *and* the whole (n, m) block
+through one device allocation — the intermediate broadcast/padding of the
+distance computation peaked at O(chunk-free) HBM and capped n far below
+the ROADMAP's millions-of-points target. This module sweeps the n axis in
+fixed-size row chunks with ``lax.map`` (a sequential scan, so only one
+chunk's intermediates are ever live):
+
+  * :func:`stream_block` — the (n, m) block, chunk by chunk. Only the
+    (n, m) f32 output is materialised; per-chunk intermediates are
+    O(chunk * m) on the Pallas kernel path (plus fixed VMEM tiles), and
+    up to O(chunk * m * p_tile) on the ref-oracle path, whose broadcast
+    metrics (l1/chebyshev) hold a (chunk, m, p_tile) slab — p_tile = p
+    below ``ref._BCAST_BUDGET``, <= 32 above it. Size chunks from the
+    backend you run on. The nniw nearest-neighbour count is fused into
+    the same sweep (``count_nn=True``) so the batch builder never
+    re-reads the block for a full-height argmin pass.
+  * :func:`stream_assign` — nearest-batch labels + distances without
+    materialising (n, m) at all: O(chunk * m) total for predict /
+    objective at any n.
+
+Chunking is exact, not approximate: every per-row quantity (distance row,
+argmin, min) is row-local, so the chunked sweep computes the identical
+numbers as the one-shot path — tests/test_streaming.py pins this for
+every registered metric x batch variant. ``chunk_size=None`` (the
+default everywhere) falls through to the one-shot computation. One
+caveat bounds the bitwise form of the claim: equality is per evaluation
+path, and the ref oracles for the broadcast metrics (l1/chebyshev)
+switch to p-tiled summation above ``ref._BCAST_BUDGET`` — a one-shot
+block big enough to trip that escape while its chunks stay under it can
+differ from the chunked sweep in the last ulp (different f32 summation
+order; the same applies between ref and pallas backends). The values
+are equally valid roundings; exact equality is guaranteed whenever both
+paths stay on the same oracle, which the tests pin.
+
+The same chunk loop runs unchanged inside ``shard_map`` on each device's
+local rows, which is how core/distributed.py bounds per-device HBM
+(DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import metrics, ops
+
+
+class StreamedBlock(NamedTuple):
+    """Result of one streaming sweep over the n axis."""
+    d: jnp.ndarray          # (n, m) distance block (post-transformed)
+    nn_counts: jnp.ndarray  # (m,) f32 count of rows whose argmin is column j
+
+
+def _check_chunk(chunk_size: int | None) -> None:
+    if chunk_size is not None and chunk_size < 1:
+        raise ValueError(
+            f"chunk_size must be a positive row count or None, "
+            f"got {chunk_size}")
+
+
+def _chunk_rows(x: jnp.ndarray, chunk_size: int):
+    """Pad the n axis to a chunk multiple and reshape to (c, chunk, p).
+
+    Returns the chunked rows plus a (c, chunk) validity mask for the
+    padded tail (padded rows still produce distance rows — sliced off by
+    the caller — but must not contribute to fused statistics).
+    """
+    n, p = x.shape
+    pad = (-n) % chunk_size
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    c = (n + pad) // chunk_size
+    valid = (jnp.arange(c * chunk_size) < n).reshape(c, chunk_size)
+    return x.reshape(c, chunk_size, p), valid
+
+
+def stream_block(
+    x: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    metric: str = "l1",
+    backend: str = "auto",
+    chunk_size: int | None = None,
+    count_nn: bool = False,
+    raw: bool = False,
+) -> StreamedBlock:
+    """The (n, m) distance block, swept in row chunks.
+
+    With ``count_nn`` the per-chunk argmin feeds a scatter-add into the
+    (m,) nearest-neighbour histogram inside the same sweep — the nniw
+    weights come out of the sweep for free (DESIGN.md §4).
+
+    ``raw=True`` returns the metric's pre-``post`` accumulator instead of
+    distances (see ops.pairwise_raw): the distributed path reduces raw
+    partials across feature shards before finalizing. ``count_nn`` is not
+    meaningful on raw partials, so the two flags are mutually exclusive.
+    """
+    if raw and count_nn:
+        raise ValueError("count_nn requires finalized distances (raw=False)")
+    _check_chunk(chunk_size)
+    n = x.shape[0]
+    m = b.shape[0]
+    spec = metrics.get(metric)
+
+    def pair(xi, bi):
+        r = ops.pairwise_raw(xi, bi, metric=metric, backend=backend,
+                             skip_prepare=True)
+        return r if raw else spec.finalize(r)
+
+    # Apply the metric's row transform once, outside the chunk loop: it is
+    # row-local (chunking cannot change it) and b is loop-invariant, so
+    # re-preparing per chunk would redo m*p work every iteration.
+    if spec.prepare is not None:
+        x = spec.prepare(x)
+        b = spec.prepare(b)
+
+    if chunk_size is None or chunk_size >= n:
+        d = pair(x, b)
+        if count_nn:
+            counts = jnp.zeros((m,), jnp.float32).at[jnp.argmin(d, axis=1)].add(1.0)
+        else:
+            counts = jnp.zeros((m,), jnp.float32)
+        return StreamedBlock(d=d, nn_counts=counts)
+
+    xc, valid = _chunk_rows(x, chunk_size)
+
+    def sweep(args):
+        xi, vi = args
+        di = pair(xi, b)
+        if count_nn:
+            ci = jnp.zeros((m,), jnp.float32).at[jnp.argmin(di, axis=1)].add(
+                vi.astype(jnp.float32))
+        else:
+            ci = jnp.zeros((m,), jnp.float32)
+        return di, ci
+
+    d, counts = jax.lax.map(sweep, (xc, valid))
+    return StreamedBlock(d=d.reshape(-1, m)[:n], nn_counts=counts.sum(axis=0))
+
+
+def stream_assign(
+    x: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    metric: str = "l1",
+    backend: str = "auto",
+    chunk_size: int | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Nearest-batch assignment without materialising the (n, m) block.
+
+    Returns ``(labels, dmin)``: per-row argmin index into b and the
+    corresponding distance. This is the O(chunk * m) predict/objective
+    path (DESIGN.md §7's memory budget table).
+    """
+    _check_chunk(chunk_size)
+    n = x.shape[0]
+    spec = metrics.get(metric)
+    if spec.prepare is not None:  # once, outside the loop (see stream_block)
+        x = spec.prepare(x)
+        b = spec.prepare(b)
+
+    def pair(xi):
+        return spec.finalize(ops.pairwise_raw(
+            xi, b, metric=metric, backend=backend, skip_prepare=True))
+
+    if chunk_size is None or chunk_size >= n:
+        d = pair(x)
+        return jnp.argmin(d, axis=1), jnp.min(d, axis=1)
+
+    xc, _ = _chunk_rows(x, chunk_size)
+
+    def sweep(xi):
+        di = pair(xi)
+        return jnp.argmin(di, axis=1), jnp.min(di, axis=1)
+
+    labels, dmin = jax.lax.map(sweep, xc)
+    return labels.reshape(-1)[:n], dmin.reshape(-1)[:n]

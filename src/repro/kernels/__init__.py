@@ -3,8 +3,12 @@
 Layout (per repo convention):
   pairwise.py / swap_gain.py — pl.pallas_call kernels with explicit
       BlockSpec VMEM tiling (TPU target; interpret=True on CPU).
+  metrics.py — the metric registry: name -> (ref oracle, Pallas kernel,
+      tiles, prepare/post transforms, cross-shard reduce). DESIGN.md §3.
   ops.py — jit'd, padding, backend-dispatching public wrappers.
   ref.py — pure-jnp oracles (ground truth for tests).
 """
-from .ops import pairwise_distance, swap_gain  # noqa: F401
+from . import metrics  # noqa: F401
+from .metrics import MetricSpec  # noqa: F401
+from .ops import pairwise_distance, pairwise_raw, swap_gain  # noqa: F401
 from .ref import LARGE  # noqa: F401

@@ -1,0 +1,118 @@
+"""Metric registry: the single place a dissimilarity is defined (DESIGN.md §3).
+
+Every metric bundles everything the rest of the pipeline needs to stay
+metric-agnostic:
+
+  * ``ref``     — pure-jnp oracle (ground truth, CPU fallback),
+  * ``kernel``  — Pallas kernel over tile-padded inputs,
+  * ``tiles``   — (TN, TM, TP) padding multiples for that kernel,
+  * ``prepare`` — optional row-space transform applied to both operands
+                  before either backend (e.g. L2 row-normalisation turns
+                  the dot kernel into cosine similarity),
+  * ``post``    — monotone transform from the kernel's raw accumulator to
+                  the distance (e.g. sqrt for l2, ``1 - s`` for cosine),
+  * ``reduce``  — how raw partials from feature (p-axis) shards combine
+                  across a model mesh axis: "sum" (psum), "max" (pmax), or
+                  None when the metric cannot be feature-sharded (cosine:
+                  ``prepare`` needs full rows). See DESIGN.md §5.
+
+``ops.pairwise_distance`` dispatches through this table, so adding a metric
+is one ``register()`` call — no solver, sampling, streaming, or distributed
+code changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+from . import pairwise, ref
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    """One registered dissimilarity; see the module docstring for fields."""
+    name: str
+    ref: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    kernel: Callable[..., jnp.ndarray]
+    tiles: tuple[int, int, int]
+    prepare: Callable[[jnp.ndarray], jnp.ndarray] | None = None
+    post: Callable[[jnp.ndarray], jnp.ndarray] | None = None
+    reduce: str | None = "sum"
+
+    def finalize(self, raw: jnp.ndarray) -> jnp.ndarray:
+        """Raw kernel accumulator -> distance (identity when post is None)."""
+        return self.post(raw) if self.post is not None else raw
+
+
+_REGISTRY: dict[str, MetricSpec] = {}
+
+
+def register(spec: MetricSpec) -> MetricSpec:
+    """Add a metric to the registry (last registration wins)."""
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> MetricSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown metric {name!r}; registered: {names()}") from None
+
+
+def names() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def _normalize_rows(a: jnp.ndarray) -> jnp.ndarray:
+    a = a.astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(a * a, axis=-1, keepdims=True))
+    return a / jnp.maximum(norm, 1e-12)
+
+
+_L1_TILES = (pairwise.L1_TN, pairwise.L1_TM, pairwise.L1_TP)
+_L2_TILES = (pairwise.L2_TN, pairwise.L2_TM, pairwise.L2_TP)
+
+register(MetricSpec(
+    name="l1",
+    ref=ref.pairwise_l1_auto,
+    kernel=pairwise.l1_distance,
+    tiles=_L1_TILES,
+))
+
+register(MetricSpec(
+    name="sqeuclidean",
+    ref=lambda x, b: ref.pairwise_l2(x, b, squared=True),
+    kernel=pairwise.l2_distance,
+    tiles=_L2_TILES,
+    post=lambda raw: jnp.maximum(raw, 0.0),
+))
+
+register(MetricSpec(
+    name="l2",
+    ref=lambda x, b: ref.pairwise_l2(x, b, squared=True),
+    kernel=pairwise.l2_distance,
+    tiles=_L2_TILES,
+    post=lambda raw: jnp.sqrt(jnp.maximum(raw, 0.0)),
+))
+
+register(MetricSpec(
+    name="cosine",
+    ref=ref.pairwise_dot,
+    kernel=pairwise.dot_product,
+    tiles=_L2_TILES,
+    prepare=_normalize_rows,
+    post=lambda raw: jnp.maximum(1.0 - raw, 0.0),
+    reduce=None,
+))
+
+register(MetricSpec(
+    name="chebyshev",
+    ref=ref.pairwise_chebyshev_auto,
+    kernel=pairwise.chebyshev_distance,
+    tiles=_L1_TILES,
+    reduce="max",
+))

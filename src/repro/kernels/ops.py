@@ -8,15 +8,18 @@ Dispatch policy (``backend=`` argument, default "auto"):
   * "auto"      — pallas on TPU, ref elsewhere (interpret mode is far too
                   slow for real CPU workloads).
 
-These wrappers pad inputs to the kernels' tile multiples and slice the
-result back, so callers never see alignment constraints.
+Distances dispatch through the metric registry (metrics.py, DESIGN.md §3):
+each metric's prepare / kernel / tile / post pipeline lives there, so this
+module stays metric-agnostic. These wrappers pad inputs to the kernels'
+tile multiples and slice the result back, so callers never see alignment
+constraints.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from . import pairwise, ref, swap_gain as swap_gain_mod
+from . import metrics, swap_gain as swap_gain_mod
 
 
 def _on_tpu() -> bool:
@@ -39,6 +42,41 @@ def _pad_to(a: jnp.ndarray, axis: int, mult: int, value: float = 0.0) -> jnp.nda
     return jnp.pad(a, widths, constant_values=value)
 
 
+def pairwise_raw(
+    x: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    metric: str = "l1",
+    backend: str = "auto",
+    skip_prepare: bool = False,
+) -> jnp.ndarray:
+    """Raw (pre-``post``) metric accumulator between x (n, p) and b (m, p).
+
+    This is the distributed building block: raw partials from feature
+    shards combine with the metric's ``reduce`` collective (psum / pmax)
+    before ``MetricSpec.finalize`` produces actual distances (DESIGN.md §5).
+    Single-host callers want :func:`pairwise_distance` instead.
+
+    ``skip_prepare`` is for loop callers (streaming.py) that have already
+    applied the metric's row transform once, outside their chunk loop —
+    re-preparing the loop-invariant b operand every iteration would
+    otherwise redo m*p work per chunk.
+    """
+    backend = _resolve(backend)
+    spec = metrics.get(metric)
+    if spec.prepare is not None and not skip_prepare:
+        x = spec.prepare(x)
+        b = spec.prepare(b)
+    if backend == "ref":
+        return spec.ref(x, b)
+    interpret = backend == "interpret"
+    n, m = x.shape[0], b.shape[0]
+    tn, tm, tp = spec.tiles
+    xp = _pad_to(_pad_to(x, 0, tn), 1, tp)
+    bp = _pad_to(_pad_to(b, 0, tm), 1, tp)
+    return spec.kernel(xp, bp, interpret=interpret)[:n, :m]
+
+
 def pairwise_distance(
     x: jnp.ndarray,
     b: jnp.ndarray,
@@ -47,34 +85,8 @@ def pairwise_distance(
     backend: str = "auto",
 ) -> jnp.ndarray:
     """Distance block between rows of x (n, p) and b (m, p) -> (n, m) f32."""
-    backend = _resolve(backend)
-    n, m = x.shape[0], b.shape[0]
-    if backend == "ref":
-        if metric == "l1":
-            # bound the (n, m, p) broadcast: tile like the Pallas kernel
-            if x.shape[0] * b.shape[0] * x.shape[1] > (1 << 28):
-                return ref.pairwise_l1_chunked(x, b)
-            return ref.pairwise_l1(x, b)
-        if metric in ("l2", "sqeuclidean"):
-            return ref.pairwise_l2(x, b, squared=(metric == "sqeuclidean"))
-        raise ValueError(f"unknown metric {metric!r}")
-
-    interpret = backend == "interpret"
-    if metric == "l1":
-        tn, tm, tp = pairwise.L1_TN, pairwise.L1_TM, pairwise.L1_TP
-        xp = _pad_to(_pad_to(x, 0, tn), 1, tp)
-        bp = _pad_to(_pad_to(b, 0, tm), 1, tp)
-        out = pairwise.l1_distance(xp, bp, interpret=interpret)
-    elif metric in ("l2", "sqeuclidean"):
-        tn, tm, tp = pairwise.L2_TN, pairwise.L2_TM, pairwise.L2_TP
-        xp = _pad_to(_pad_to(x, 0, tn), 1, tp)
-        bp = _pad_to(_pad_to(b, 0, tm), 1, tp)
-        out = pairwise.l2_distance(xp, bp, interpret=interpret)
-        if metric == "l2":
-            out = jnp.sqrt(out)
-    else:
-        raise ValueError(f"unknown metric {metric!r}")
-    return out[:n, :m]
+    spec = metrics.get(metric)
+    return spec.finalize(pairwise_raw(x, b, metric=metric, backend=backend))
 
 
 def swap_gain(
@@ -86,6 +98,8 @@ def swap_gain(
     backend: str = "auto",
 ) -> jnp.ndarray:
     """Swap-gain matrix (n, k); see swap_gain.py / ref.swap_gain."""
+    from . import ref
+
     backend = _resolve(backend)
     if backend == "ref":
         return ref.swap_gain(d, d1, d2, near_onehot)

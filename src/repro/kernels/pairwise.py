@@ -1,22 +1,28 @@
 """Pallas TPU kernels for the n x m pairwise-dissimilarity block.
 
 This is OneBatchPAM's dominant compute: O(n * m * p) FLOPs producing the
-(n, m) block that the whole local search then re-reads. Two kernels:
+(n, m) block that the whole local search then re-reads. Four kernels, all
+registered in metrics.py (DESIGN.md §3):
 
   * ``l1_distance`` — the paper's metric. |x - b| has no matmul form, so it
     is a VPU kernel: blocked abs-diff-accumulate with an (TN, TM) f32
     accumulator resident in VMEM across the p-grid.
   * ``l2_distance`` — MXU formulation: ||x||^2 + ||b||^2 - 2 x b^T with the
     cross term as a (TN, TP) @ (TP, TM) dot per grid step.
+  * ``chebyshev_distance`` — the L_inf norm: same blocked VPU sweep as l1
+    but the p-grid accumulation is max instead of sum.
+  * ``dot_product`` — plain blocked x b^T on the MXU; with row-normalised
+    inputs (the cosine ``prepare`` in metrics.py) this is cosine similarity,
+    and the registry's post-transform turns it into cosine distance.
 
 Tiling: grid = (n/TN, m/TM, p/TP). The output BlockSpec ignores the p index,
 so the same VMEM tile is revisited across the p sweep and accumulated
 in-place (initialised at p-step 0). Tile sizes keep the MXU/VPU shapes
 128-aligned and the working set << 16 MB VMEM:
 
-  l1: X tile (128, 512) + B tile (128, 512) + out (128, 128) + the
-      (128, 128, 8) broadcast slab ~ 1.5 MB.
-  l2: X (256, 256) + B^T view (256, 256) + out (256, 256) f32 ~ 1 MB.
+  l1/chebyshev: X tile (128, 512) + B tile (128, 512) + out (128, 128) +
+      the (128, 128, 8) broadcast slab ~ 1.5 MB.
+  l2/dot: X (256, 256) + B^T view (256, 256) + out (256, 256) f32 ~ 1 MB.
 
 Inputs of any f32/bf16 dtype; accumulation always f32. Callers must pad
 shapes to tile multiples (ops.py does this).
@@ -97,6 +103,43 @@ def l1_distance(x: jnp.ndarray, b: jnp.ndarray, *, interpret: bool = False) -> j
     )(x, b)
 
 
+def _chebyshev_kernel(x_ref, b_ref, o_ref):
+    """One (TN, TM) tile of max_p |x - b|, max-accumulated over the p grid.
+
+    |x - b| >= 0, so a zero init (and zero p-padding upstream) is absorbed
+    by the running max.
+    """
+    pk = pl.program_id(2)
+
+    @pl.when(pk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (TN, TP)
+    b = b_ref[...].astype(jnp.float32)          # (TM, TP)
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for s in range(L1_TP // L1_TP_INNER):
+        xs = x[:, s * L1_TP_INNER:(s + 1) * L1_TP_INNER]
+        bs = b[:, s * L1_TP_INNER:(s + 1) * L1_TP_INNER]
+        acc = jnp.maximum(acc, jnp.abs(xs[:, None, :] - bs[None, :, :]).max(-1))
+    o_ref[...] = jnp.maximum(o_ref[...], acc)
+
+
+def _dot_kernel(x_ref, b_ref, o_ref):
+    """One (TN, TM) tile of x.b^T, p-accumulated on the MXU."""
+    pk = pl.program_id(2)
+
+    @pl.when(pk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (TN, TP)
+    b = b_ref[...].astype(jnp.float32)          # (TM, TP)
+    o_ref[...] += jax.lax.dot_general(
+        x, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def l2_distance(x: jnp.ndarray, b: jnp.ndarray, *, interpret: bool = False) -> jnp.ndarray:
     """Blocked squared-L2 distance matrix. x (n, p), b (m, p) -> (n, m) f32."""
@@ -115,3 +158,43 @@ def l2_distance(x: jnp.ndarray, b: jnp.ndarray, *, interpret: bool = False) -> j
         interpret=interpret,
     )(x, b)
     return jnp.maximum(out, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def chebyshev_distance(x: jnp.ndarray, b: jnp.ndarray, *,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Blocked L_inf distance matrix. x (n, p), b (m, p) -> (n, m) f32."""
+    n, p = x.shape
+    m, _ = b.shape
+    grid = (n // L1_TN, m // L1_TM, p // L1_TP)
+    return pl.pallas_call(
+        _chebyshev_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((L1_TN, L1_TP), lambda i, j, pk: (i, pk)),
+            pl.BlockSpec((L1_TM, L1_TP), lambda i, j, pk: (j, pk)),
+        ],
+        out_specs=pl.BlockSpec((L1_TN, L1_TM), lambda i, j, pk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=interpret,
+    )(x, b)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dot_product(x: jnp.ndarray, b: jnp.ndarray, *,
+                interpret: bool = False) -> jnp.ndarray:
+    """Blocked row dot products. x (n, p), b (m, p) -> (n, m) f32 x.b^T."""
+    n, p = x.shape
+    m, _ = b.shape
+    grid = (n // L2_TN, m // L2_TM, p // L2_TP)
+    return pl.pallas_call(
+        _dot_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((L2_TN, L2_TP), lambda i, j, pk: (i, pk)),
+            pl.BlockSpec((L2_TM, L2_TP), lambda i, j, pk: (j, pk)),
+        ],
+        out_specs=pl.BlockSpec((L2_TN, L2_TM), lambda i, j, pk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=interpret,
+    )(x, b)

@@ -5,10 +5,15 @@ These are the ground-truth implementations used by:
   * ops.py as the CPU fallback path for small problems.
 
 All math here mirrors the paper exactly:
-  * pairwise_l1 / pairwise_l2: the n x m dissimilarity block of
-    OneBatchPAM (Algorithm 1, line 4).
+  * pairwise_l1 / pairwise_l2 / pairwise_chebyshev / pairwise_dot: the
+    n x m dissimilarity block of OneBatchPAM (Algorithm 1, line 4), one
+    oracle per registered metric (DESIGN.md §3).
   * swap_gain: the vectorised form of Algorithm 2 lines 6-18 (see
-    DESIGN.md section 2 for the derivation).
+    DESIGN.md §2 for the derivation).
+
+The ``*_auto`` variants switch to the lax.scan-tiled implementation when
+the naive (n, m, p) broadcast would exceed ~1 GiB of intermediate memory —
+the pure-jnp mirror of the Pallas tiling (DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -26,13 +31,15 @@ def pairwise_l1(x: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return jnp.abs(x[:, None, :] - b[None, :, :]).sum(-1)
 
 
-def pairwise_l1_chunked(x: jnp.ndarray, b: jnp.ndarray, *,
-                        n_chunk: int = 4096, p_chunk: int = 32) -> jnp.ndarray:
-    """Memory-bounded L1: the pure-jnp mirror of the Pallas kernel's
-    (TN, TM, TP) tiling — lax.scan over row/feature tiles keeps the live
-    broadcast at (n_chunk, m, p_chunk) instead of (n, m, p). Used for
-    large blocks (distributed OBP, dry-run) where the naive broadcast
-    would claim hundreds of GB."""
+def _pairwise_bcast_chunked(x: jnp.ndarray, b: jnp.ndarray, *,
+                            combine: str, n_chunk: int = 4096,
+                            p_chunk: int = 32) -> jnp.ndarray:
+    """Memory-bounded broadcast metrics: the pure-jnp mirror of the Pallas
+    kernel's (TN, TM, TP) tiling — lax.scan over row/feature tiles keeps
+    the live broadcast at (n_chunk, m, p_chunk) instead of (n, m, p). Used
+    for large blocks (distributed OBP, dry-run) where the naive broadcast
+    would claim hundreds of GB. ``combine`` is how per-feature-tile
+    partials fold together: "sum" (L1) or "max" (Chebyshev)."""
     import jax
 
     n, p = x.shape
@@ -46,19 +53,60 @@ def pairwise_l1_chunked(x: jnp.ndarray, b: jnp.ndarray, *,
     xb = x.astype(jnp.float32).reshape(n // n_chunk, n_chunk,
                                        p // p_chunk, p_chunk)
     bb = b.astype(jnp.float32).reshape(m, p // p_chunk, p_chunk)
+    fold = jnp.add if combine == "sum" else jnp.maximum
 
     def row_tile(_, xc):                       # xc: (n_chunk, P/pc, pc)
         def p_tile(acc, idx):
             xs = xc[:, idx]                    # (n_chunk, pc)
             bs = bb[:, idx]                    # (m, pc)
-            acc = acc + jnp.abs(xs[:, None, :] - bs[None, :, :]).sum(-1)
-            return acc, None
+            diff = jnp.abs(xs[:, None, :] - bs[None, :, :])
+            part = diff.sum(-1) if combine == "sum" else diff.max(-1)
+            return fold(acc, part), None
         acc0 = jnp.zeros((n_chunk, m), jnp.float32)
         acc, _ = jax.lax.scan(p_tile, acc0, jnp.arange(p // p_chunk))
         return None, acc
 
     _, tiles = jax.lax.scan(row_tile, None, xb)
     return tiles.reshape(n, m)
+
+
+def pairwise_l1_chunked(x: jnp.ndarray, b: jnp.ndarray, *,
+                        n_chunk: int = 4096, p_chunk: int = 32) -> jnp.ndarray:
+    """Memory-bounded L1; see _pairwise_bcast_chunked."""
+    return _pairwise_bcast_chunked(x, b, combine="sum", n_chunk=n_chunk,
+                                   p_chunk=p_chunk)
+
+
+# Naive-broadcast intermediates above this many f32 elements (~1 GiB) take
+# the scan-tiled path instead.
+_BCAST_BUDGET = 1 << 28
+
+
+def pairwise_l1_auto(x: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """L1 oracle with the big-block escape hatch (registry entry point)."""
+    if x.shape[0] * b.shape[0] * x.shape[1] > _BCAST_BUDGET:
+        return pairwise_l1_chunked(x, b)
+    return pairwise_l1(x, b)
+
+
+def pairwise_chebyshev(x: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """L_inf distances between rows of x (n, p) and b (m, p) -> (n, m)."""
+    x = x.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    return jnp.abs(x[:, None, :] - b[None, :, :]).max(-1)
+
+
+def pairwise_chebyshev_auto(x: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Chebyshev oracle with the big-block escape hatch."""
+    if x.shape[0] * b.shape[0] * x.shape[1] > _BCAST_BUDGET:
+        return _pairwise_bcast_chunked(x, b, combine="max")
+    return pairwise_chebyshev(x, b)
+
+
+def pairwise_dot(x: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Row dot products x.b^T (n, m). With row-normalised inputs this is
+    cosine similarity; metrics.py's post-transform maps it to distance."""
+    return x.astype(jnp.float32) @ b.astype(jnp.float32).T
 
 
 def pairwise_l2(x: jnp.ndarray, b: jnp.ndarray, *, squared: bool = True) -> jnp.ndarray:

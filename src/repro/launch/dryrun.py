@@ -14,6 +14,7 @@ import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.analysis import hlo as hlo_analysis  # noqa: E402
 from repro.analysis import roofline  # noqa: E402
 from repro.configs import SHAPES, cells, get, registry  # noqa: E402
@@ -189,7 +190,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         mf = roofline.model_flops(get(arch), SHAPES[shape_name])
 
     t0 = time.perf_counter()
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         jfn = jax.jit(fn, in_shardings=shards) if shards is not None \
             else fn  # obp cell is already jitted with shard_map specs
         lowered = jfn.lower(*args)

@@ -11,11 +11,7 @@ a leading DCN-connected "pod" axis — (pod=2, data=16, model=16) for the
 """
 from __future__ import annotations
 
-import jax
-
-
-def _auto(axes):
-    return (jax.sharding.AxisType.Auto,) * len(axes)
+from repro.compat import make_mesh as _make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False, num_pods: int = 2):
@@ -25,9 +21,9 @@ def make_production_mesh(*, multi_pod: bool = False, num_pods: int = 2):
     else:
         shape = (16, 16)
         axes = ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh over forced host devices (tests / examples)."""
-    return jax.make_mesh(shape, axes, axis_types=_auto(axes))
+    return _make_mesh(shape, axes)

@@ -21,10 +21,11 @@ import math
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.models import layers
 from repro.models.sharding import constrain
-from jax.sharding import PartitionSpec as P
 
 
 def init_moe(key, cfg, dtype=jnp.float32):
@@ -55,7 +56,7 @@ def _dispatch_spec(E: int, C: int):
     Without any sharding the (E, C, D) dispatch buffer replicates and its
     combine becomes a full all-reduce — 96% of grok-1's v1 collective
     bytes."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or "model" not in mesh.axis_names:
         return P(None, None, None)
     sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))

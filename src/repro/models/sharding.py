@@ -8,7 +8,7 @@ Roles:
             over DCN) unless fsdp_over_pod is set.
   * batch — activation batch dims over ("pod", "data").
 
-Divisibility rule (DESIGN.md section 5): each preference (dim, role) is
+Divisibility rule (DESIGN.md §5): each preference (dim, role) is
 applied only if the dim size divides by the axis size and the axis is not
 already used — small archs (whisper's 8 heads on a 16-wide model axis)
 fall through to their next preference (head_dim) automatically.
@@ -20,6 +20,8 @@ from typing import Sequence
 
 import jax
 from jax.sharding import PartitionSpec as P
+
+from repro import compat
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,7 +147,7 @@ def constrain(x, spec: P):
     """with_sharding_constraint that (a) no-ops outside a mesh context,
     (b) drops axes absent from the current mesh, (c) drops axes whose size
     does not divide the dim (e.g. seq-sharding a length-1 decode step)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
@@ -177,7 +179,7 @@ def compute_plan_from_context() -> "MeshPlan | None":
     """MeshPlan for the bf16 COMPUTE copies: model-only sharding (fsdp
     axes empty). Derived from the abstract mesh at trace time; None when
     tracing outside a mesh (smoke tests)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return None
     sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))

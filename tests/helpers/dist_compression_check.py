@@ -12,17 +12,12 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
+from repro.compat import shard_map  # noqa: E402
 from repro.training.compression import compressed_psum  # noqa: E402
-
-try:
-    from jax import shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
 
 
 def main():
-    mesh = jax.make_mesh((8,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((8,), ("pod",))
     rng = np.random.default_rng(0)
     xs = jnp.asarray(rng.normal(size=(8, 4096)).astype(np.float32))
 

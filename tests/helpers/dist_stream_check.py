@@ -1,0 +1,69 @@
+"""Subprocess body: the e2e sharded pipeline (in-mesh batch build + solve)
+on 2 fake host devices must match the single-device build_batch + solver
+bit-for-bit — same medoids, same swap count, same weights, same estimated
+objective. Invoked by tests/test_distributed.py with
+XLA_FLAGS=--xla_force_host_platform_device_count=2 in the environment."""
+import os
+
+assert "--xla_force_host_platform_device_count=2" in os.environ.get("XLA_FLAGS", "")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import sampling, solver  # noqa: E402
+from repro.core.distributed import (  # noqa: E402
+    make_distributed_obp_e2e,
+    shard_over_batch,
+)
+
+
+def main() -> None:
+    assert jax.device_count() == 2, jax.device_count()
+    mesh = jax.make_mesh((2,), ("data",))
+
+    rng = np.random.default_rng(0)
+    n, p, k, m = 256, 8, 5, 32
+    x = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+    key = jax.random.PRNGKey(7)
+
+    for variant in ("unif", "debias", "nniw"):
+        # single-device reference: host-side batch build + batched solver,
+        # with the batch indices the mesh path will also use (build_batch
+        # draws idx from the same key, so they coincide).
+        key_b, key_i = jax.random.split(key)
+        batch_idx = jax.random.choice(key_b, n, shape=(m,), replace=False)
+        init_idx = jax.random.choice(key_i, n, shape=(k,), replace=False)
+        ref_batch = sampling.build_batch(key_b, x, m, variant=variant)
+        np.testing.assert_array_equal(np.asarray(ref_batch.idx),
+                                      np.asarray(batch_idx))
+        ref = solver.solve_batched(ref_batch.d, init_idx)
+        ref_w = ref_batch.weights
+
+        run = make_distributed_obp_e2e(mesh, k=k, metric="l1",
+                                       variant=variant, chunk_size=32)
+        got, got_w = run(shard_over_batch(mesh, x), batch_idx, init_idx)
+
+        np.testing.assert_array_equal(np.sort(np.asarray(ref.medoid_idx)),
+                                      np.sort(np.asarray(got.medoid_idx)))
+        assert int(got.n_swaps) == int(ref.n_swaps), variant
+        np.testing.assert_array_equal(np.asarray(ref_w), np.asarray(got_w))
+        np.testing.assert_array_equal(np.float32(ref.est_objective),
+                                      np.float32(got.est_objective))
+        print(f"OK {variant} swaps={int(got.n_swaps)} "
+              f"obj={float(got.est_objective):.6f}")
+
+    # mesh path through the public API (one_batch_pam + MedoidSelector knob)
+    res, batch = solver.one_batch_pam(key, x, k, m=m, variant="nniw",
+                                      mesh=mesh, chunk_size=64)
+    res_1d, batch_1d = solver.one_batch_pam(key, x, k, m=m, variant="nniw")
+    np.testing.assert_array_equal(np.sort(np.asarray(res.medoid_idx)),
+                                  np.sort(np.asarray(res_1d.medoid_idx)))
+    np.testing.assert_array_equal(np.asarray(batch.weights),
+                                  np.asarray(batch_1d.weights))
+    assert batch.d is None
+    print("OK one_batch_pam mesh path")
+
+
+if __name__ == "__main__":
+    main()

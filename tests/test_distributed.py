@@ -11,9 +11,9 @@ import pytest
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
-def _run(script: str, *args: str) -> str:
+def _run(script: str, *args: str, devices: int = 8) -> str:
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = f"{ROOT / 'src'}:{env.get('PYTHONPATH', '')}"
     out = subprocess.run(
         [sys.executable, str(ROOT / "tests" / "helpers" / script), *args],
@@ -26,6 +26,15 @@ def _run(script: str, *args: str) -> str:
 def test_distributed_obp_matches_single_device(mesh_kind):
     out = _run("dist_obp_check.py", mesh_kind)
     assert f"OK {mesh_kind}" in out
+
+
+def test_sharded_e2e_bitwise_matches_single_device():
+    """In-mesh batch build + streamed sharded solve == host build_batch +
+    solve_batched, bit-for-bit, on 2 simulated devices (ISSUE 1)."""
+    out = _run("dist_stream_check.py", devices=2)
+    for variant in ("unif", "debias", "nniw"):
+        assert f"OK {variant}" in out
+    assert "OK one_batch_pam mesh path" in out
 
 
 def test_compressed_crosspod_psum():

@@ -27,7 +27,7 @@ PAIR_SHAPES = [
 ]
 
 
-@pytest.mark.parametrize("metric", ["l1", "sqeuclidean", "l2"])
+@pytest.mark.parametrize("metric", list(ops.metrics.names()))
 @pytest.mark.parametrize("n,m,p", PAIR_SHAPES)
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_pairwise_interpret_matches_ref(metric, n, m, p, dtype):
@@ -37,6 +37,33 @@ def test_pairwise_interpret_matches_ref(metric, n, m, p, dtype):
     assert got.shape == (n, m)
     tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
     np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_metric_registry_is_exhaustive_and_validates():
+    """Every registered metric round-trips through ops; unknown names fail
+    with the registered list in the message."""
+    assert {"l1", "l2", "sqeuclidean", "cosine", "chebyshev"} <= set(
+        ops.metrics.names())
+    with pytest.raises(ValueError, match="registered"):
+        ops.pairwise_distance(jnp.zeros((4, 2)), jnp.zeros((3, 2)),
+                              metric="mahalanobis")
+
+
+def test_pairwise_chebyshev_known_values():
+    x = jnp.array([[0.0, 0.0], [1.0, 5.0]])
+    b = jnp.array([[1.0, 1.0]])
+    for backend in ("ref", "interpret"):
+        d = ops.pairwise_distance(x, b, metric="chebyshev", backend=backend)
+        np.testing.assert_allclose(d, [[1.0], [4.0]], atol=1e-6)
+
+
+def test_pairwise_cosine_known_values():
+    x = jnp.array([[1.0, 0.0], [0.0, 2.0], [-3.0, 0.0]])
+    b = jnp.array([[2.0, 0.0]])
+    for backend in ("ref", "interpret"):
+        d = ops.pairwise_distance(x, b, metric="cosine", backend=backend)
+        # parallel -> 0, orthogonal -> 1, antiparallel -> 2
+        np.testing.assert_allclose(d, [[0.0], [1.0], [2.0]], atol=1e-6)
 
 
 @pytest.mark.parametrize("n,m,k", [

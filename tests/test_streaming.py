@@ -1,0 +1,119 @@
+"""Streaming pipeline invariants (DESIGN.md §4): the row-chunked sweep must
+be *exact* — identical blocks, weights, and assignments to the one-shot
+path — for every registered metric and every batch variant, with ragged
+chunk boundaries."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sampling, solver, streaming
+from repro.kernels import metrics, ops
+
+METRICS = list(metrics.names())
+
+
+def _blobs(rng, n=120, p=5):
+    return jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("chunk", [16, 37, 120, 500])
+def test_stream_block_matches_oneshot(metric, chunk):
+    """Exact-divisor, ragged, whole-n, and larger-than-n chunk sizes."""
+    rng = np.random.default_rng(0)
+    x, b = _blobs(rng, n=112), _blobs(rng, n=21)
+    want = ops.pairwise_distance(x, b, metric=metric, backend="ref")
+    got = streaming.stream_block(x, b, metric=metric, backend="ref",
+                                 chunk_size=chunk).d
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("variant", sampling.VARIANTS)
+def test_build_batch_chunked_matches_oneshot(metric, variant):
+    """The acceptance invariant: chunked build_batch == one-shot build_batch
+    (indices, weights, and the weighted block) for all metric x variant."""
+    rng = np.random.default_rng(1)
+    x = _blobs(rng, n=123, p=6)
+    key = jax.random.PRNGKey(3)
+    one = sampling.build_batch(key, x, 24, variant=variant, metric=metric,
+                               backend="ref")
+    chunked = sampling.build_batch(key, x, 24, variant=variant, metric=metric,
+                                   backend="ref", chunk_size=32)
+    np.testing.assert_array_equal(np.asarray(one.idx), np.asarray(chunked.idx))
+    np.testing.assert_array_equal(np.asarray(one.weights),
+                                  np.asarray(chunked.weights))
+    np.testing.assert_array_equal(np.asarray(one.d), np.asarray(chunked.d))
+
+
+def test_nniw_counts_fused_into_sweep():
+    """The fused per-chunk histogram == the full-block argmin bincount, and
+    padded tail rows do not contribute."""
+    rng = np.random.default_rng(2)
+    x = _blobs(rng, n=101, p=4)   # 101 rows: every chunk size is ragged
+    b = x[jnp.asarray(rng.choice(101, size=10, replace=False))]
+    d = ops.pairwise_distance(x, b, metric="l1", backend="ref")
+    want = np.bincount(np.asarray(jnp.argmin(d, axis=1)), minlength=10)
+    for chunk in (7, 25, 101):
+        got = streaming.stream_block(x, b, metric="l1", backend="ref",
+                                     chunk_size=chunk, count_nn=True).nn_counts
+        np.testing.assert_array_equal(np.asarray(got), want)
+    assert float(np.asarray(want).sum()) == 101.0
+
+
+@pytest.mark.parametrize("chunk", [None, 13, 40])
+def test_nniw_weights_stay_mean_one_under_chunking(chunk):
+    rng = np.random.default_rng(4)
+    x = _blobs(rng, n=110, p=4)
+    batch = sampling.build_batch(jax.random.PRNGKey(0), x, 22, variant="nniw",
+                                 backend="ref", chunk_size=chunk)
+    np.testing.assert_allclose(float(np.asarray(batch.weights).mean()), 1.0,
+                               rtol=1e-6)
+
+
+def test_stream_assign_matches_full_argmin():
+    rng = np.random.default_rng(5)
+    x, b = _blobs(rng, n=90, p=3), _blobs(rng, n=8, p=3)
+    d = ops.pairwise_distance(x, b, metric="l2", backend="ref")
+    labels, dmin = streaming.stream_assign(x, b, metric="l2", backend="ref",
+                                           chunk_size=17)
+    np.testing.assert_array_equal(np.asarray(labels),
+                                  np.asarray(jnp.argmin(d, axis=1)))
+    np.testing.assert_array_equal(np.asarray(dmin),
+                                  np.asarray(jnp.min(d, axis=1)))
+
+
+def test_chunked_solve_end_to_end_matches_oneshot():
+    """one_batch_pam with chunk_size finds the identical medoids."""
+    rng = np.random.default_rng(6)
+    x = _blobs(rng, n=140, p=6)
+    key = jax.random.PRNGKey(1)
+    res0, _ = solver.one_batch_pam(key, x, 6, backend="ref")
+    res1, _ = solver.one_batch_pam(key, x, 6, backend="ref", chunk_size=33)
+    np.testing.assert_array_equal(np.asarray(res0.medoid_idx),
+                                  np.asarray(res1.medoid_idx))
+    assert float(res0.est_objective) == float(res1.est_objective)
+
+
+def test_objective_chunked_matches_oneshot():
+    rng = np.random.default_rng(7)
+    x = _blobs(rng, n=75, p=4)
+    med = jnp.asarray([3, 40, 66])
+    full = float(solver.objective(x, med, backend="ref"))
+    chunked = float(solver.objective(x, med, backend="ref", chunk_size=16))
+    assert full == chunked
+
+
+def test_stream_block_raw_excludes_post_transform():
+    """raw=True returns the pre-post accumulator (distributed reduce input)."""
+    rng = np.random.default_rng(8)
+    x, b = _blobs(rng, n=40, p=4), _blobs(rng, n=6, p=4)
+    raw = streaming.stream_block(x, b, metric="l2", backend="ref",
+                                 chunk_size=16, raw=True).d
+    d = streaming.stream_block(x, b, metric="l2", backend="ref",
+                               chunk_size=16).d
+    np.testing.assert_allclose(np.asarray(jnp.sqrt(jnp.maximum(raw, 0.0))),
+                               np.asarray(d), rtol=1e-6)
+    with pytest.raises(ValueError, match="count_nn"):
+        streaming.stream_block(x, b, raw=True, count_nn=True)

@@ -34,8 +34,7 @@ def main():
 
     sk = os.path.join(ART, "skips.json")
     if os.path.exists(sk):
-        print("\nSkipped cells (documented in DESIGN.md "
-              "§Arch-applicability):\n")
+        print("\nSkipped cells (documented in DESIGN.md §6):\n")
         for s in json.load(open(sk)):
             print(f"* {s['arch']} x {s['shape']} ({s['mesh']}): {s['skip']}")
 
