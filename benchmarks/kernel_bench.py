@@ -1,16 +1,31 @@
 """Kernel-layer microbenchmarks (ours): the n x m distance block and the
-fused swap-gain sweep. On this CPU container we time the jnp reference
-paths (naive vs tiled) and report the arithmetic quantities the Pallas
-kernels are tiled around; TPU wall-time comes from the roofline analysis."""
+swap sweep, including the fused swap-select path (ISSUE 2). On this CPU
+container we time the jnp reference paths and report the arithmetic and
+HBM-byte quantities the Pallas kernels are tiled around; TPU wall-time
+comes from the roofline analysis.
+
+``smoke=True`` (CI) shrinks shapes, drops repetitions, and runs the
+interpret-mode swap_select kernel on ragged shapes so kernel regressions
+(shape mismatches, interpret breaks, select/argmax divergence) fail fast
+without timing flakiness.
+
+The selection byte accounting is the PR 2 acceptance metric: per sweep the
+naive path writes and re-reads the (n, k) f32 gain matrix on top of the
+(n, m) block read, while the fused path reads the block once and writes
+O(n/TN) scalar partials; a bf16 block halves the dominant read term.
+"""
 from __future__ import annotations
 
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import csv_line
+from repro.core import solver
 from repro.kernels import ops, ref
+from repro.kernels.swap_gain import SG_TN
 
 
 def _time(fn, *args, reps=3):
@@ -22,17 +37,124 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps
 
 
-def run() -> list[str]:
+def selection_bytes(n: int, m: int, k: int, block_bytes: int) -> dict:
+    """HBM bytes one swap-selection sweep moves, by strategy.
+
+    naive:  read the (n, m) block + write the (n, k) f32 gain matrix +
+            re-read it for the host argmax.
+    fused:  read the (n, m) block + write ceil(n/TN) (f32 gain, i32 flat)
+            partials; the gain tiles stay in VMEM.
+    """
+    tiles = -(-n // SG_TN)
+    return {
+        "block_read": n * m * block_bytes,
+        "naive": n * m * block_bytes + 2 * n * k * 4,
+        "fused": n * m * block_bytes + tiles * 8,
+        "partials": tiles * 8,
+    }
+
+
+def _bench_selection(lines, n, m, k, reps):
+    """Time one selection step naive vs fused on identical inputs, and
+    emit the byte accounting for f32 and bf16 blocks."""
+    kd, k1, kn = jax.random.split(jax.random.PRNGKey(1), 3)
+    d = jax.random.uniform(kd, (n, m), minval=0.1, maxval=10.0)
+    a = jax.random.uniform(k1, (m,), minval=0.0, maxval=10.0)
+    d1, d2 = a, a + 0.5
+    nh = jax.nn.one_hot(jax.random.randint(kn, (m,), 0, k), k,
+                        dtype=jnp.float32)
+
+    def naive_select(d_, d1_, d2_, nh_):
+        gain = ref.swap_gain(d_, d1_, d2_, nh_)
+        flat = jnp.argmax(gain)
+        return gain.reshape(-1)[flat]
+
+    fused_select = jax.jit(lambda *a_: ops.swap_select(*a_, backend="ref")[0])
+    t_naive = _time(jax.jit(naive_select), d, d1, d2, nh, reps=reps)
+    t_fused = _time(fused_select, d, d1, d2, nh, reps=reps)
+    for name, t, bts in (("naive", t_naive, selection_bytes(n, m, k, 4)["naive"]),
+                         ("fused", t_fused, selection_bytes(n, m, k, 4)["fused"])):
+        lines.append(csv_line(
+            f"kernel/swap_select/{name}", t * 1e6,
+            f"hbm_bytes_per_sweep={bts} gbps={bts/t/1e9:.2f}"))
+    b16 = selection_bytes(n, m, k, 2)
+    b32 = selection_bytes(n, m, k, 4)
+    lines.append(csv_line(
+        "kernel/swap_select/bytes_fused_bf16", 0.0,
+        f"hbm_bytes_per_sweep={b16['fused']} "
+        f"vs_naive_f32={b32['naive']/b16['fused']:.2f}x "
+        f"partials_bytes={b16['partials']}"))
+
+
+def _bench_solver_sweep(lines, n, m, k, reps):
+    """Whole-solve comparison: pre-fusion vs fused vs fused+bf16 on the
+    same block — per-iteration time, swaps/sec, and the trajectory-identity
+    claim check (AssertionError surfaces via run.py)."""
+    rng = np.random.default_rng(0)
+    d = jnp.asarray(rng.uniform(0.1, 10.0, (n, m)).astype(np.float32))
+    init = jnp.asarray(rng.choice(n, size=k, replace=False))
+
+    runs = {
+        "naive": (solver.solve_batched_naive, d),
+        "fused": (solver.solve_batched, d),
+        "fused_bf16": (solver.solve_batched, d.astype(jnp.bfloat16)),
+    }
+    results = {}
+    for name, (fn, dd) in runs.items():
+        def go(dd=dd, fn=fn):
+            return fn(dd, init, backend="ref")
+        res = go()
+        iters = int(res.n_swaps) + 1          # +1 converging sweep
+        t = _time(lambda _=None: go().medoid_idx, None, reps=reps)
+        results[name] = res
+        lines.append(csv_line(
+            f"solver/sweep/{name}", t * 1e6,
+            f"us_per_iter={t*1e6/iters:.1f} swaps={int(res.n_swaps)} "
+            f"swaps_per_s={int(res.n_swaps)/t:.1f}"))
+    assert np.array_equal(np.asarray(results["naive"].medoid_idx),
+                          np.asarray(results["fused"].medoid_idx)), \
+        "fused solver diverged from the pre-fusion trajectory"
+
+
+def _smoke_select_checks(lines):
+    """Interpret-mode kernel sanity on ragged shapes: fail-fast coverage
+    for shape/pad/tie regressions, no timing involved."""
+    for n, m, k in ((100, 33, 7), (300, 260, 130), (256, 64, 4)):
+        kd, k1, kn = jax.random.split(jax.random.fold_in(
+            jax.random.PRNGKey(2), n), 3)
+        d = jnp.round(jax.random.uniform(kd, (n, m), maxval=10.0) * 2) / 2
+        a = jax.random.uniform(k1, (m,), maxval=10.0)
+        d1, d2 = a, a + 0.25
+        nh = jax.nn.one_hot(jax.random.randint(kn, (m,), 0, k), k,
+                            dtype=jnp.float32)
+        g_i, i_i, l_i = ops.swap_select(d, d1, d2, nh, backend="interpret")
+        gain = ops.swap_gain(d, d1, d2, nh, backend="interpret")
+        flat = int(jnp.argmax(gain))
+        assert (int(i_i), int(l_i)) == (flat // k, flat % k), \
+            f"swap_select/interpret mismatch at {(n, m, k)}"
+        assert np.float32(g_i) == np.float32(gain.reshape(-1)[flat])
+        lines.append(csv_line(f"kernel/swap_select/interpret_{n}x{m}x{k}",
+                              0.0, "check=ok"))
+
+
+def run(smoke: bool = False) -> list[str]:
     lines = []
     key = jax.random.PRNGKey(0)
-    n, m, p, k = 32_768, 512, 64, 64
+    if smoke:
+        n, m, p, k = 2048, 128, 16, 16
+        sweep_n, sweep_m, sweep_k = 1024, 64, 8
+        reps = 1
+    else:
+        n, m, p, k = 32_768, 512, 64, 64
+        sweep_n, sweep_m, sweep_k = 8192, 256, 32
+        reps = 3
     x = jax.random.normal(key, (n, p))
     b = x[:m]
 
     naive = jax.jit(ref.pairwise_l1)
     tiled = jax.jit(lambda a, c: ref.pairwise_l1_chunked(a, c))
-    t_naive = _time(naive, x, b)
-    t_tiled = _time(tiled, x, b)
+    t_naive = _time(naive, x, b, reps=reps)
+    t_tiled = _time(tiled, x, b, reps=reps)
     flops = 3 * n * m * p
     lines.append(csv_line("kernel/pairwise_l1/naive", t_naive * 1e6,
                           f"gflops={flops/t_naive/1e9:.2f}"))
@@ -44,12 +166,17 @@ def run() -> list[str]:
     d2 = d1 + 0.5
     nh = jax.nn.one_hot(jnp.zeros(m, jnp.int32), k)
     sg = jax.jit(lambda *a: ref.swap_gain(*a))
-    t_sg = _time(sg, d, d1, d2, nh)
+    t_sg = _time(sg, d, d1, d2, nh, reps=reps)
     bytes_touched = d.size * 4 * 2 + n * k * 4
     lines.append(csv_line("kernel/swap_gain/sweep", t_sg * 1e6,
                           f"gbps={bytes_touched/t_sg/1e9:.2f}"))
 
-    t_l2 = _time(jax.jit(lambda a, c: ref.pairwise_l2(a, c)), x, b)
+    _bench_selection(lines, n, m, k, reps)
+    _bench_solver_sweep(lines, sweep_n, sweep_m, sweep_k, reps)
+    if smoke:
+        _smoke_select_checks(lines)
+
+    t_l2 = _time(jax.jit(lambda a, c: ref.pairwise_l2(a, c)), x, b, reps=reps)
     lines.append(csv_line("kernel/pairwise_l2/mxu_form", t_l2 * 1e6,
                           f"gflops={2*n*m*p/t_l2/1e9:.2f}"))
     return lines

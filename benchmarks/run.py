@@ -1,16 +1,52 @@
 """Benchmark driver: one module per paper table/figure (+ ours).
-Prints ``name,us_per_call,derived`` CSV. Select with --only."""
+Prints ``name,us_per_call,derived`` CSV. Select with --only.
+
+``--json PATH`` additionally writes the records as structured JSON (the
+machine-readable perf trajectory; BENCH_PR2.json in-repo is the committed
+snapshot). ``--smoke`` shrinks shapes and drops repetitions for suites
+that support it (kernel_bench) — the CI mode that catches kernel
+regressions fast without timing flakiness.
+"""
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
+import pathlib
 import sys
 import time
+
+# ``python benchmarks/run.py`` puts benchmarks/ itself on sys.path, not the
+# repo root the ``benchmarks.*`` imports need — add it regardless of cwd.
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+
+def _parse_record(line: str) -> dict:
+    """CSV line -> JSON record; ``derived`` is space-separated k=v pairs."""
+    name, us, derived = line.split(",", 2)
+    rec = {"name": name, "us_per_call": float(us), "derived": {}}
+    for kv in derived.split():
+        if "=" in kv:
+            key, val = kv.split("=", 1)
+            try:
+                rec["derived"][key] = float(val.rstrip("x"))
+            except ValueError:
+                rec["derived"][key] = val
+        else:
+            rec["derived"][kv] = True
+    return rec
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table3,fig1,pareto,kernel,roofline")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write records as structured JSON (e.g. "
+                         "BENCH_PR2.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes, 1 rep, extra interpret-mode kernel "
+                         "checks — the CI fail-fast mode")
     args = ap.parse_args()
 
     from benchmarks import (fig1_scaling, kernel_bench, pareto,
@@ -27,16 +63,28 @@ def main() -> None:
     }
     selected = (args.only.split(",") if args.only else list(suites))
     print("name,us_per_call,derived")
+    records = []
     failed = False
     for name in selected:
+        fn = suites[name]
+        kwargs = ({"smoke": True} if args.smoke
+                  and "smoke" in inspect.signature(fn).parameters else {})
         t0 = time.perf_counter()
         try:
-            for line in suites[name]():
+            for line in fn(**kwargs):
                 print(line)
+                records.append(_parse_record(line))
         except AssertionError as e:  # claim-check failures are visible
             print(f"{name}/ASSERTION,0.0,failed={e}")
+            records.append({"name": f"{name}/ASSERTION", "us_per_call": 0.0,
+                            "derived": {"failed": str(e)}})
             failed = True
         print(f"{name}/total,{(time.perf_counter() - t0) * 1e6:.0f},done")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"driver": "benchmarks/run.py", "smoke": args.smoke,
+                       "suites": selected, "records": records}, f, indent=1)
+        print(f"# wrote {len(records)} records to {args.json}", file=sys.stderr)
     if failed:
         sys.exit(1)
 

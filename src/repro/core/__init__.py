@@ -17,5 +17,6 @@ from .solver import (  # noqa: F401
     objective,
     one_batch_pam,
     solve_batched,
+    solve_batched_naive,
     solve_eager,
 )

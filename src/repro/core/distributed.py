@@ -13,11 +13,14 @@ Sharding plan (DESIGN.md §5):
                       — see metrics.py), after which the model axis holds
                       replicas of the block.
 
-Per swap sweep the only cross-device traffic is three scalars (gain pmax,
+Per swap sweep each shard runs the fused swap_select sweep on its local
+block (the (n_local, k) gain matrix never materialises — DESIGN.md §2)
+and the only cross-device traffic is three scalars (gain pmax,
 winner-shard pmin, winning-flat psum) plus one m-float psum to broadcast
-the winning candidate's row. So the collective footprint is O(m) bytes
-per swap versus the O(n m) the block would cost to gather — this is why
-OBP maps onto pods so well: the O(n log n) state never moves. The e2e
+the winning candidate's row for the incremental top-2 repair. So the
+collective footprint is O(m) bytes per swap versus the O(n m) the block
+would cost to gather — this is why OBP maps onto pods so well: the
+O(n log n) state never moves. The e2e
 entry point also builds the batch variant weights in-mesh: the nniw
 nearest-neighbour histogram is counted on each shard's rows inside the
 streaming chunk sweep and completed with a single (m,)-float psum (with a
@@ -83,7 +86,7 @@ def _owner_select(idx, off, n_local):
 
 
 def solve_sharded(
-    d_local: jnp.ndarray,      # (n_local, m) this device's block
+    d_local: jnp.ndarray,      # (n_local, m) this device's block (f32/bf16)
     init_idx: jnp.ndarray,     # (k,) global indices, replicated
     *,
     axes: Sequence[str],       # batch mesh axes, e.g. ("pod", "data")
@@ -92,9 +95,15 @@ def solve_sharded(
     backend: str = "auto",
     axis_sizes=None,           # dict(mesh.shape) for static axis sizes
 ) -> solver.SolveResult:
-    """Batched steepest-descent sweep with a global argmax across shards.
+    """Batched steepest-descent sweep with a global fused selection.
 
     Runs inside shard_map. Device r owns candidates [r*n_local, (r+1)*n_local).
+    Each shard runs the fused ``ops.swap_select`` sweep over its local
+    block — the (n_local, k) gain matrix never materialises, the shard
+    emits one (best_gain, best_flat) partial — and the winner election is
+    three scalar collectives. The replicated top-2 state is then repaired
+    incrementally (``solver._repair_top2``) from the psum-broadcast winning
+    row, so no full (k, m) recompute runs per swap either.
     """
     axes = tuple(axes)
     n_local, m = d_local.shape
@@ -103,41 +112,45 @@ def solve_sharded(
     row_offset = shard_id * n_local
 
     def owned_rows(idx):
-        """Replicated (k, m) medoid rows: each owner psum-broadcasts."""
+        """Replicated (k, m) f32 medoid rows: each owner psum-broadcasts."""
         mine, safe = _owner_select(idx, row_offset, n_local)
-        rows = jnp.where(mine[:, None], d_local[safe], 0.0)
+        rows = jnp.where(mine[:, None], d_local[safe].astype(jnp.float32), 0.0)
         return jax.lax.psum(rows, axes)
 
     def init_state(idx):
         med_rows = owned_rows(idx)
-        d1, d2, near = solver._top2(med_rows)
-        return (idx.astype(jnp.int32), med_rows, d1, d2, near,
+        d1, d2, near, near2 = solver._top2(med_rows)
+        return (idx.astype(jnp.int32), med_rows, d1, d2, near, near2,
                 jnp.int32(0), jnp.bool_(False))
 
     state = init_state(init_idx)
 
     def cond(state):
-        return jnp.logical_and(~state[6], state[5] < max_swaps)
+        return jnp.logical_and(~state[7], state[6] < max_swaps)
 
     def body(state):
-        idx, med_rows, d1, d2, near, t, done = state
+        idx, med_rows, d1, d2, near, near2, t, done = state
         nh = jax.nn.one_hot(near, k, dtype=jnp.float32)
-        gain = ops.swap_gain(d_local, d1, d2, nh, backend=backend)
         # Mask rows that are current medoids (global -> local index check).
+        # ``.at[].min`` keeps the mask correct even when a clipped foreign
+        # index collides with an owned row (min(1, 0) = 0 deterministically,
+        # where duplicate-index .set would be order-dependent).
         mine, safe = _owner_select(idx, row_offset, n_local)
-        gain = gain.at[safe].set(
-            jnp.where(mine[:, None], solver.NEG, gain[safe]))
-        flat = jnp.argmax(gain)
-        best_local = gain.reshape(-1)[flat]
-        # Global argmax: max gain, then the *lowest* global flat index among
-        # the tied winners — exact gain ties are routine (the min/max
-        # clipping in the gain plateaus values), and jnp.argmax on a single
-        # device picks the first flat index, so the collective must too for
-        # the sharded sweep to be bit-for-bit with solve_batched. The
-        # election is lexicographic (shard, local flat): shards are ordered
-        # by row offset and the local argmax already picked the minimal
-        # local flat, so this equals the global minimum without ever
-        # forming n*k-scale integers (which overflow int32 at large n).
+        row_mask = jnp.ones((n_local,), jnp.float32).at[safe].min(
+            jnp.where(mine, 0.0, 1.0))
+        best_local, i_loc, l_loc = ops.swap_select(
+            d_local, d1, d2, nh, row_mask=row_mask, backend=backend)
+        flat = i_loc * k + l_loc
+        # Global fused selection: max gain, then the *lowest* global flat
+        # index among the tied winners — exact gain ties are routine (the
+        # min/max clipping in the gain plateaus values), and swap_select
+        # picks the first local flat index (jnp.argmax semantics), so the
+        # collective must too for the sharded sweep to be bit-for-bit with
+        # solve_batched. The election is lexicographic (shard, local flat):
+        # shards are ordered by row offset and the local selection already
+        # picked the minimal local flat, so this equals the global minimum
+        # without ever forming n*k-scale integers (which overflow int32 at
+        # large n). Three scalar collectives per step, total.
         best_all = jax.lax.pmax(best_local, axes)
         is_winner = best_local >= best_all
         win_shard = jax.lax.pmin(
@@ -146,23 +159,25 @@ def solve_sharded(
             jnp.where(shard_id == win_shard, flat, 0), axes)
         i_glob = win_shard * n_local + flat_win // k
         l = flat_win % k
-        # Broadcast the winning row (owner psum).
+        # Broadcast the winning row (owner psum), then repair the
+        # replicated top-2 state incrementally — identical floats on every
+        # shard since the inputs are replicated.
         owns, li = _owner_select(i_glob, row_offset, n_local)
-        row = jnp.where(owns, d_local[li], 0.0)
+        row = jnp.where(owns, d_local[li].astype(jnp.float32), 0.0)
         row = jax.lax.psum(row, axes)
         # Same acceptance rule as solve_batched: d1 is replicated, so the
         # eps threshold is identical on every shard.
         improved = best_all > eps * jnp.sum(d1)
-        new_rows = med_rows.at[l].set(row)
-        nd1, nd2, nnear = solver._top2(new_rows)
+        new_rows, nd1, nd2, nnear, nnear2 = solver._repair_top2(
+            med_rows, d1, d2, near, near2, row, l)
         new_state = (idx.at[l].set(i_glob.astype(jnp.int32)), new_rows,
-                     nd1, nd2, nnear, t + 1, done)
-        old_state = (idx, med_rows, d1, d2, near, t, jnp.bool_(True))
+                     nd1, nd2, nnear, nnear2, t + 1, done)
+        old_state = (idx, med_rows, d1, d2, near, near2, t, jnp.bool_(True))
         return jax.tree.map(
             lambda a, b: jnp.where(improved, a, b), new_state, old_state)
 
     state = jax.lax.while_loop(cond, body, state)
-    idx, _, d1, _, _, t, done = state
+    idx, _, d1, _, _, _, t, done = state
     return solver.SolveResult(idx, t, jnp.mean(d1), done)
 
 
@@ -192,7 +207,8 @@ def _gather_batch_rows(x_local, batch_idx, off, axes):
 def make_distributed_obp(mesh, *, k: int, metric: str = "l1",
                          max_swaps: int = 500, eps: float = 0.0,
                          backend: str = "auto",
-                         chunk_size: int | None = None):
+                         chunk_size: int | None = None,
+                         block_dtype: str | None = None):
     """Build a jit-able distributed OneBatchPAM solve function.
 
     Returns fn(x, batch_idx, weights, init_idx) -> SolveResult, where
@@ -203,9 +219,13 @@ def make_distributed_obp(mesh, *, k: int, metric: str = "l1",
     Weights are caller-supplied (precomputed variant weights); use
     :func:`make_distributed_obp_e2e` to also build them in-mesh.
     ``chunk_size`` streams each device's local block build (DESIGN.md §4).
-    Both factories are memoised on their (mesh, options) key, so repeated
-    calls (a seed sweep, MedoidSelector.fit in a loop) reuse the traced +
-    compiled program instead of paying shard_map retracing per call.
+    ``block_dtype`` (a dtype *name*, e.g. "bfloat16", to keep the memo key
+    hashable) narrows each shard's stored block after the feature reduce,
+    mirroring the host path's cast order so the sharded sweep stays
+    bit-for-bit with the single-device one. Both factories are memoised on
+    their (mesh, options) key, so repeated calls (a seed sweep,
+    MedoidSelector.fit in a loop) reuse the traced + compiled program
+    instead of paying shard_map retracing per call.
     """
     batch_axes = _batch_axes(mesh)
     has_model = "model" in mesh.axis_names
@@ -248,7 +268,15 @@ def make_distributed_obp(mesh, *, k: int, metric: str = "l1",
                 raw = jax.lax.psum(raw, "model")
             else:
                 raw = jax.lax.pmax(raw, "model")
-        d = spec.finalize(raw) * weights[None, :]
+        # Cast order mirrors the host build_batch: distances round to the
+        # block dtype first, the f32 weight multiply re-promotes, and the
+        # stored product rounds once — elementwise, so shard == host bits.
+        d = spec.finalize(raw)
+        if block_dtype is not None:
+            d = d.astype(block_dtype)
+        d = d * weights[None, :]
+        if block_dtype is not None:
+            d = d.astype(block_dtype)
         return solve_sharded(d, init_idx, axes=solve_axes,
                              max_swaps=max_swaps, eps=eps,
                              backend=backend, axis_sizes=sizes)
@@ -261,7 +289,8 @@ def make_distributed_obp_e2e(mesh, *, k: int, metric: str = "l1",
                              variant: str = "unif",
                              max_swaps: int = 500, eps: float = 0.0,
                              backend: str = "auto",
-                             chunk_size: int | None = None):
+                             chunk_size: int | None = None,
+                             block_dtype: str | None = None):
     """Distributed OneBatchPAM with the batch build fused into the mesh.
 
     Returns fn(x, batch_idx, init_idx) -> (SolveResult, weights (m,)).
@@ -317,14 +346,20 @@ def make_distributed_obp_e2e(mesh, *, k: int, metric: str = "l1",
             collective = (jax.lax.psum if spec.reduce == "sum"
                           else jax.lax.pmax)
             d = spec.finalize(collective(raw, "model"))
+            # Counts come off the f32 distances (before any block_dtype
+            # cast) so nniw weights are storage-dtype-independent, exactly
+            # like the host path's fused histogram.
             local_counts = (jnp.zeros((m,), jnp.float32).at[
                 jnp.argmin(d, axis=1)].add(1.0)
                 if variant == "nniw" else None)
+            if block_dtype is not None:
+                d = d.astype(block_dtype)
         else:
             sb = streaming.stream_block(x_local, b, metric=metric,
                                         backend=backend,
                                         chunk_size=chunk_size,
-                                        count_nn=want_fused)
+                                        count_nn=want_fused,
+                                        block_dtype=block_dtype)
             d = sb.d
             local_counts = sb.nn_counts if want_fused else None
 
@@ -343,7 +378,9 @@ def make_distributed_obp_e2e(mesh, *, k: int, metric: str = "l1",
             d = d.at[safe, cols].set(
                 jnp.where(mine, LARGE, d[safe, cols]))
 
-        d = d * weights[None, :]
+        d = d * weights[None, :]   # block_dtype * f32 promotes to f32
+        if block_dtype is not None:
+            d = d.astype(block_dtype)
         res = solve_sharded(d, init_idx, axes=batch_axes,
                             max_swaps=max_swaps, eps=eps,
                             backend=backend, axis_sizes=sizes)

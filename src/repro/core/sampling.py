@@ -37,7 +37,7 @@ class Batch(NamedTuple):
     """The single batch of OneBatchPAM."""
     idx: jnp.ndarray      # (m,) int32 indices into X_n
     weights: jnp.ndarray  # (m,) f32 importance weights (mean ~ 1)
-    d: jnp.ndarray        # (n, m) f32 weighted distance block
+    d: jnp.ndarray        # (n, m) weighted distance block (f32 or block_dtype)
 
 
 def _uniform_idx(key: jax.Array, n: int, m: int) -> jnp.ndarray:
@@ -59,11 +59,16 @@ def build_batch(
     metric: str = "l1",
     backend: str = "auto",
     chunk_size: int | None = None,
+    block_dtype: str | jnp.dtype | None = None,
 ) -> Batch:
     """Sample the batch, compute the (n, m) block, apply the variant.
 
     ``chunk_size`` streams the n axis through the distance kernels in row
     chunks (exact; see streaming.py). None computes the block in one shot.
+    ``block_dtype`` stores the block in a narrower dtype (e.g.
+    ``"bfloat16"``): distances and weights are computed in f32, the weight
+    multiply runs in f32 via promotion, and only the stored block rounds —
+    so ``Batch.weights`` is identical to the f32 path (DESIGN.md §2).
     """
     n = x.shape[0]
     if variant not in VARIANTS:
@@ -83,7 +88,8 @@ def build_batch(
 
     sb = streaming.stream_block(x, x[idx], metric=metric, backend=backend,
                                 chunk_size=chunk_size,
-                                count_nn=(variant == "nniw"))
+                                count_nn=(variant == "nniw"),
+                                block_dtype=block_dtype)
     d = sb.d
 
     if variant == "nniw":
@@ -91,7 +97,12 @@ def build_batch(
     if variant == "debias":
         d = d.at[idx, jnp.arange(m)].set(LARGE)
 
-    return Batch(idx=idx, weights=w, d=d * w[None, :])
+    # bf16 block x f32 weights promotes to f32, so the weighted product is
+    # computed full-precision and rounds once on the final store.
+    dw = d * w[None, :]
+    if block_dtype is not None:
+        dw = dw.astype(block_dtype)
+    return Batch(idx=idx, weights=w, d=dw)
 
 
 def weighted_block(d_raw: jnp.ndarray, batch: Batch) -> jnp.ndarray:

@@ -29,9 +29,12 @@ class MedoidSelector:
     max_swaps: int = 500
     seed: int = 0
     backend: str = "auto"
-    # Streaming / sharding knobs (DESIGN.md §4-§5): chunk_size bounds peak
-    # intermediate memory to O(chunk * m); mesh shards the n axis.
+    # Streaming / sharding / storage knobs (DESIGN.md §2, §4-§5):
+    # chunk_size bounds peak intermediate memory to O(chunk * m); mesh
+    # shards the n axis; block_dtype (e.g. "bfloat16") halves the resident
+    # block and the sweep's HBM traffic (accumulation stays f32).
     chunk_size: int | None = None
+    block_dtype: str | None = None
     mesh: object = None
 
     medoid_indices_: np.ndarray | None = None
@@ -45,7 +48,8 @@ class MedoidSelector:
             jax.random.PRNGKey(self.seed), x, self.k, m=self.m,
             variant=self.variant, metric=self.metric, strategy=self.strategy,
             max_swaps=self.max_swaps, backend=self.backend,
-            chunk_size=self.chunk_size, mesh=self.mesh)
+            chunk_size=self.chunk_size, block_dtype=self.block_dtype,
+            mesh=self.mesh)
         self.medoid_indices_ = np.asarray(res.medoid_idx)
         self.medoids_ = np.asarray(x[res.medoid_idx])
         self.est_objective_ = float(res.est_objective)

@@ -1,20 +1,28 @@
 """OneBatchPAM local-search solver (the paper's core contribution, in JAX).
 
-Two strategies over identical swap math (DESIGN.md §2):
+Three strategies over identical swap math (DESIGN.md §2):
 
   * ``eager``   — Algorithm 2 of the paper: scan candidates i = 1..n in
       order, swap as soon as the batch-estimated gain is positive
       (first-improvement, FasterPAM semantics). Serial; the faithful
-      baseline we validate against the paper's claims.
-  * ``batched`` — TPU-native steepest descent: evaluate the full (n, k)
-      gain matrix with one fused kernel pass (relu row-sum + clipped
-      correction matmul on the MXU), take the globally best swap, repeat
-      inside a single ``lax.while_loop``. Beyond-paper optimisation; same
-      local-search family, one compiled XLA program, no host round trips.
+      baseline we validate against the paper's claims. Backend-free: the
+      scan evaluates gains in pure jnp, no kernel dispatch.
+  * ``batched`` (:func:`solve_batched`) — TPU-native steepest descent with
+      the *fused* swap-select sweep: one O(nm) kernel pass per iteration
+      reduces the gain tiles on-chip to O(n/TN) partials (``ops.swap_select``),
+      so the (n, k) gain matrix never reaches HBM, and the d1/d2/near state
+      is repaired incrementally after each accepted swap (FasterPAM-style,
+      O(m) expected) instead of recomputed from the full (k, m) view.
+  * :func:`solve_batched_naive` — the pre-fusion batched solver
+      (materialise (n, k) gains, host argmax, full top-2 recompute). Kept
+      as the equivalence oracle for the fused path and as the "naive"
+      column of the sweep benchmarks; same swaps, same floats.
 
 The solver is batch-size agnostic: pass the n x m OneBatch block for OBP, or
 the full n x n matrix to recover exact (Fast)PAM — tests exploit this
 equivalence (m = n  =>  same swaps as FasterPAM, Theorem 1's limit case).
+The block may be stored in bf16 (``block_dtype`` in sampling/streaming);
+all solver state and gain accumulation stay f32.
 """
 from __future__ import annotations
 
@@ -26,9 +34,9 @@ import jax.numpy as jnp
 
 from repro.core import sampling
 from repro.kernels import ops
+from repro.kernels.ref import NEG  # noqa: F401  (re-exported; distributed.py)
 
 BIG = jnp.float32(1e30)  # sentinel for "no second medoid" / masked entries
-NEG = jnp.float32(-1e30)
 
 
 class SolveResult(NamedTuple):
@@ -39,49 +47,104 @@ class SolveResult(NamedTuple):
 
 
 def _top2(med_rows: jnp.ndarray):
-    """d1/d2/near from the (k, m) medoid-to-batch distance view."""
+    """d1/d2/near/near2 from the (k, m) medoid-to-batch distance view."""
     k, m = med_rows.shape
     near = jnp.argmin(med_rows, axis=0)                       # (m,)
     d1 = jnp.take_along_axis(med_rows, near[None, :], axis=0)[0]
     masked = jnp.where(jax.nn.one_hot(near, k, axis=0, dtype=bool), BIG, med_rows)
-    d2 = jnp.min(masked, axis=0)
-    return d1, d2, near
+    near2 = jnp.argmin(masked, axis=0)                        # (m,)
+    d2 = jnp.take_along_axis(masked, near2[None, :], axis=0)[0]
+    return d1, d2, near, near2
+
+
+def _repair_top2(med_rows, d1, d2, near, near2, r, l):
+    """Incremental top-2 repair after medoid slot ``l`` is replaced by a
+    candidate whose (weighted) batch row is ``r`` (FasterPAM-style;
+    DESIGN.md §2). Returns ``(med_rows', d1', d2', near', near2')``.
+
+    Value-exact with a full :func:`_top2` recompute: every output is a copy
+    or a min of existing floats, so the fused solver's trajectory is
+    bit-for-bit the naive solver's. Slot choices (near/near2) may differ
+    from argmin's on exact distance ties, but a tie means d1 == d2, which
+    zeroes the removal correction r_ij — slot identity never reaches the
+    gains (tests/test_fused_solver.py pins the value invariant).
+
+    Cost: O(m) for every column except the *hard* case — the removed slot
+    was in the column's top-2 and the new row does not re-enter it — which
+    needs the third-nearest distance. Those columns (expected fraction
+    ~2/k) fall back to one masked min over the cached (k, m) rows, gated
+    behind ``lax.cond`` so swap steps with no hard column skip it.
+    """
+    k = med_rows.shape[0]
+    new_rows = med_rows.at[l].set(r)
+    was1 = near == l
+    surv = jnp.where(was1, near2, near)        # best surviving old slot
+    s = jnp.where(was1, d2, d1)                # its distance
+    closer = r < s
+    d1n = jnp.minimum(r, s)
+    nearn = jnp.where(closer, l, surv)
+    hard = was1 | (near2 == l)
+    need = hard & (r > d2)
+    # Easy path: the removed slot was outside the top-2 (its distance was
+    # >= d2, so top-2 of {r, s, d2} is exact), or the new row re-enters.
+    d2e = jnp.minimum(jnp.maximum(r, s), d2)
+    near2e = jnp.where(closer, surv, l)
+    near2e = jnp.where(~hard & (r >= d2), near2, near2e)
+
+    def recompute(_):
+        slot = jnp.arange(k, dtype=nearn.dtype)[:, None]
+        masked = jnp.where(slot == nearn[None, :], BIG, new_rows)
+        n2 = jnp.argmin(masked, axis=0)
+        return jnp.take_along_axis(masked, n2[None, :], axis=0)[0], n2
+
+    d2r, near2r = jax.lax.cond(
+        jnp.any(need), recompute, lambda _: (d2e, near2e), None)
+    return (new_rows, d1n, jnp.where(need, d2r, d2e), nearn,
+            jnp.where(need, near2r, near2e))
 
 
 class _State(NamedTuple):
     medoid_idx: jnp.ndarray  # (k,)
-    med_rows: jnp.ndarray    # (k, m)
+    med_rows: jnp.ndarray    # (k, m) f32 (cast from the block's dtype)
     d1: jnp.ndarray          # (m,)
     d2: jnp.ndarray          # (m,)
     near: jnp.ndarray        # (m,)
+    near2: jnp.ndarray       # (m,)
     t: jnp.ndarray           # swaps performed
     done: jnp.ndarray        # bool
 
 
 def _init_state(d: jnp.ndarray, init_idx: jnp.ndarray) -> _State:
-    med_rows = d[init_idx]
-    d1, d2, near = _top2(med_rows)
-    return _State(init_idx.astype(jnp.int32), med_rows, d1, d2, near,
+    med_rows = d[init_idx].astype(jnp.float32)
+    d1, d2, near, near2 = _top2(med_rows)
+    return _State(init_idx.astype(jnp.int32), med_rows, d1, d2, near, near2,
                   jnp.int32(0), jnp.bool_(False))
 
 
 def _apply_swap(state: _State, d: jnp.ndarray, i: jnp.ndarray, l: jnp.ndarray) -> _State:
-    med_rows = state.med_rows.at[l].set(d[i])
-    d1, d2, near = _top2(med_rows)
+    """Full-recompute swap application (naive/eager paths)."""
+    med_rows = state.med_rows.at[l].set(d[i].astype(jnp.float32))
+    d1, d2, near, near2 = _top2(med_rows)
     return _State(state.medoid_idx.at[l].set(i.astype(jnp.int32)),
-                  med_rows, d1, d2, near, state.t + 1, state.done)
+                  med_rows, d1, d2, near, near2, state.t + 1, state.done)
 
 
 @functools.partial(jax.jit, static_argnames=("max_swaps", "backend"))
 def solve_batched(
-    d: jnp.ndarray,            # (n, m) weighted distance block
+    d: jnp.ndarray,            # (n, m) weighted distance block (f32 or bf16)
     init_idx: jnp.ndarray,     # (k,) initial medoids
     *,
     max_swaps: int = 500,
     eps: float = 0.0,
     backend: str = "auto",
 ) -> SolveResult:
-    """Steepest-descent local search on the batch objective."""
+    """Steepest-descent local search with the fused swap-select sweep.
+
+    Per iteration: one ``ops.swap_select`` pass (O(nm) block read, O(n/TN)
+    partials written — the (n, k) gain matrix never materialises), then an
+    incremental ``_repair_top2`` state update for the accepted swap.
+    Bit-for-bit the same swaps as :func:`solve_batched_naive`.
+    """
     n, m = d.shape
     k = init_idx.shape[0]
     state = _init_state(d, init_idx)
@@ -91,8 +154,54 @@ def solve_batched(
 
     def body(state):
         nh = jax.nn.one_hot(state.near, k, dtype=jnp.float32)
-        gain = ops.swap_gain(d, state.d1, state.d2, nh, backend=backend)  # (n, k)
-        # Current medoids are not swap candidates.
+        # Current medoids are not swap candidates: O(n) mask instead of the
+        # former O(nk) scatter into the materialised gain matrix.
+        row_mask = jnp.ones((n,), jnp.float32).at[state.medoid_idx].set(0.0)
+        best, i, l = ops.swap_select(d, state.d1, state.d2, nh,
+                                     row_mask=row_mask, backend=backend)
+        improved = best > eps * jnp.sum(state.d1)
+        r = d[i].astype(jnp.float32)
+        med_rows, d1, d2, near, near2 = _repair_top2(
+            state.med_rows, state.d1, state.d2, state.near, state.near2, r, l)
+        new_state = _State(state.medoid_idx.at[l].set(i.astype(jnp.int32)),
+                           med_rows, d1, d2, near, near2,
+                           state.t + 1, state.done)
+        return jax.tree.map(
+            lambda a, b: jnp.where(improved, a, b), new_state,
+            state._replace(done=jnp.bool_(True)))
+
+    state = jax.lax.while_loop(cond, body, state)
+    return SolveResult(state.medoid_idx, state.t,
+                       jnp.mean(state.d1), state.done)
+
+
+@functools.partial(jax.jit, static_argnames=("max_swaps", "backend"))
+def solve_batched_naive(
+    d: jnp.ndarray,
+    init_idx: jnp.ndarray,
+    *,
+    max_swaps: int = 500,
+    eps: float = 0.0,
+    backend: str = "auto",
+) -> SolveResult:
+    """Pre-fusion batched solver: materialise the (n, k) gain matrix, argmax
+    it, recompute the full top-2 state after every swap.
+
+    Kept as the equivalence oracle (`tests/test_fused_solver.py` pins
+    identical trajectories against :func:`solve_batched`) and as the
+    "naive" column of the sweep benchmarks. O(nk) HBM write + read per
+    iteration that the fused path avoids.
+    """
+    n, m = d.shape
+    k = init_idx.shape[0]
+    state = _init_state(d, init_idx)
+
+    def cond(state):
+        return jnp.logical_and(~state.done, state.t < max_swaps)
+
+    def body(state):
+        nh = jax.nn.one_hot(state.near, k, dtype=jnp.float32)
+        gain = ops.swap_gain(d, state.d1, state.d2, nh, backend=backend)
         gain = gain.at[state.medoid_idx].set(NEG)
         flat = jnp.argmax(gain)
         i, l = flat // k, flat % k
@@ -121,7 +230,8 @@ def solve_eager(
     One "pass" visits all n candidates in index order, swapping eagerly.
     Terminates when a full pass performs no swap (local minimum) or after
     max_passes. Serial by construction — this is the CPU algorithm the
-    paper ships; kept as the validation baseline.
+    paper ships; kept as the validation baseline. Backend-free: gains are
+    evaluated in pure jnp, so there is no ``backend=`` knob here.
     """
     n, m = d.shape
     k = init_idx.shape[0]
@@ -129,7 +239,7 @@ def solve_eager(
 
     def candidate_step(i, carry):
         state, swapped = carry
-        row = d[i]                                            # (m,)
+        row = d[i].astype(jnp.float32)                        # (m,)
         g = jnp.sum(jnp.maximum(state.d1 - row, 0.0))
         r = state.d1 - jnp.minimum(jnp.maximum(row, state.d1), state.d2)
         big_r = jnp.zeros((k,), jnp.float32).at[state.near].add(r)
@@ -183,6 +293,7 @@ def one_batch_pam(
     eps: float = 0.0,
     backend: str = "auto",
     chunk_size: int | None = None,
+    block_dtype: str | jnp.dtype | None = None,
     mesh=None,
 ) -> tuple[SolveResult, sampling.Batch]:
     """End-to-end OneBatchPAM (Algorithm 1).
@@ -190,6 +301,9 @@ def one_batch_pam(
     Returns the solve result plus the batch (for inspection / reuse).
 
     ``chunk_size`` streams the distance build in row chunks (DESIGN.md §4).
+    ``block_dtype`` stores the (n, m) block in a narrower dtype (e.g.
+    ``"bfloat16"``) — gain accumulation stays f32, HBM traffic on the
+    memory-bound sweep halves (DESIGN.md §2).
     ``mesh`` (a ``jax.sharding.Mesh``) shards the n axis across its batch
     axes and runs the whole batch build + swap sweep data-parallel under
     shard_map (DESIGN.md §5); the returned batch then has ``d=None`` since
@@ -209,13 +323,15 @@ def one_batch_pam(
         batch_idx = sampling._uniform_idx(key_b, n, m)
         run = distributed.make_distributed_obp_e2e(
             mesh, k=k, metric=metric, variant=variant, chunk_size=chunk_size,
-            max_swaps=max_swaps, eps=eps, backend=backend)
+            max_swaps=max_swaps, eps=eps, backend=backend,
+            block_dtype=_dtype_name(block_dtype))
         res, weights = run(distributed.shard_over_batch(mesh, x), batch_idx,
                            init_idx)
         return res, sampling.Batch(idx=batch_idx, weights=weights, d=None)
 
     batch = sampling.build_batch(key_b, x, m, variant=variant, metric=metric,
-                                 backend=backend, chunk_size=chunk_size)
+                                 backend=backend, chunk_size=chunk_size,
+                                 block_dtype=block_dtype)
     if strategy == "batched":
         res = solve_batched(batch.d, init_idx, max_swaps=max_swaps, eps=eps,
                             backend=backend)
@@ -227,6 +343,12 @@ def one_batch_pam(
     return res, batch
 
 
+def _dtype_name(block_dtype) -> str | None:
+    """Normalise a block dtype to a hashable name for the lru_cached
+    distributed factories (None stays None)."""
+    return None if block_dtype is None else jnp.dtype(block_dtype).name
+
+
 def fasterpam(
     key: jax.Array,
     x: jnp.ndarray,
@@ -235,13 +357,23 @@ def fasterpam(
     metric: str = "l1",
     strategy: str = "eager",
     max_swaps: int = 500,
+    eps: float = 0.0,
     backend: str = "auto",
 ) -> SolveResult:
     """Exact FasterPAM baseline: the same solver fed the full n x n matrix
-    with random init (Schubert & Rousseeuw 2021 recommend random init)."""
+    with random init (Schubert & Rousseeuw 2021 recommend random init).
+
+    ``eps`` is the relative acceptance threshold and reaches both
+    strategies (the eager path used to drop it). ``backend`` selects the
+    distance-build and batched-sweep kernels only — :func:`solve_eager` is
+    backend-free by construction (pure-jnp candidate scan), so it is *not*
+    forwarded there.
+    """
     n = x.shape[0]
     d = ops.pairwise_distance(x, x, metric=metric, backend=backend)
     init_idx = jax.random.choice(key, n, shape=(k,), replace=False)
     if strategy == "eager":
-        return solve_eager(d, init_idx, max_passes=max(2, max_swaps // max(k, 1)))
-    return solve_batched(d, init_idx, max_swaps=max_swaps, backend=backend)
+        return solve_eager(d, init_idx,
+                           max_passes=max(2, max_swaps // max(k, 1)), eps=eps)
+    return solve_batched(d, init_idx, max_swaps=max_swaps, eps=eps,
+                         backend=backend)

@@ -87,6 +87,7 @@ def stream_block(
     chunk_size: int | None = None,
     count_nn: bool = False,
     raw: bool = False,
+    block_dtype: str | jnp.dtype | None = None,
 ) -> StreamedBlock:
     """The (n, m) distance block, swept in row chunks.
 
@@ -98,9 +99,22 @@ def stream_block(
     distances (see ops.pairwise_raw): the distributed path reduces raw
     partials across feature shards before finalizing. ``count_nn`` is not
     meaningful on raw partials, so the two flags are mutually exclusive.
+
+    ``block_dtype`` (e.g. ``"bfloat16"``) narrows the *stored* block: each
+    chunk's distances are computed in f32 and cast before they join the
+    output, so the resident block halves while every per-row statistic
+    (nniw argmin included) is still taken on the f32 values — weights are
+    block_dtype-independent (DESIGN.md §2). Raw partials stay f32 because
+    they still have a feature-shard reduction ahead of them, so the two
+    flags are mutually exclusive; the distributed path casts after its
+    ``reduce`` collective instead.
     """
     if raw and count_nn:
         raise ValueError("count_nn requires finalized distances (raw=False)")
+    if raw and block_dtype is not None:
+        raise ValueError(
+            "block_dtype applies to finalized distances; raw partials must "
+            "stay f32 until after the feature-shard reduce (DESIGN.md §5)")
     _check_chunk(chunk_size)
     n = x.shape[0]
     m = b.shape[0]
@@ -110,6 +124,9 @@ def stream_block(
         r = ops.pairwise_raw(xi, bi, metric=metric, backend=backend,
                              skip_prepare=True)
         return r if raw else spec.finalize(r)
+
+    def cast(di):
+        return di if block_dtype is None else di.astype(block_dtype)
 
     # Apply the metric's row transform once, outside the chunk loop: it is
     # row-local (chunking cannot change it) and b is loop-invariant, so
@@ -124,7 +141,7 @@ def stream_block(
             counts = jnp.zeros((m,), jnp.float32).at[jnp.argmin(d, axis=1)].add(1.0)
         else:
             counts = jnp.zeros((m,), jnp.float32)
-        return StreamedBlock(d=d, nn_counts=counts)
+        return StreamedBlock(d=cast(d), nn_counts=counts)
 
     xc, valid = _chunk_rows(x, chunk_size)
 
@@ -136,7 +153,9 @@ def stream_block(
                 vi.astype(jnp.float32))
         else:
             ci = jnp.zeros((m,), jnp.float32)
-        return di, ci
+        # Cast inside the sweep so the stacked output (the resident block)
+        # is narrow from the start, not materialised f32 then converted.
+        return cast(di), ci
 
     d, counts = jax.lax.map(sweep, (xc, valid))
     return StreamedBlock(d=d.reshape(-1, m)[:n], nn_counts=counts.sum(axis=0))

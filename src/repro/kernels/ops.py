@@ -116,3 +116,51 @@ def swap_gain(
     nhp = _pad_to(_pad_to(near_onehot, 0, tm), 1, 128)
     out = swap_gain_mod.swap_gain(dp, d1p, d2p, nhp, interpret=interpret)
     return out[:n, :k]
+
+
+def swap_select(
+    d: jnp.ndarray,
+    d1: jnp.ndarray,
+    d2: jnp.ndarray,
+    near_onehot: jnp.ndarray,
+    *,
+    row_mask: jnp.ndarray | None = None,
+    backend: str = "auto",
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused swap selection: ``(best_gain, i, l)`` without the (n, k) matrix.
+
+    Semantically ``argmax(swap_gain(...))`` with rows where ``row_mask``
+    is 0 excluded (first-flat-index tie-break, exactly ``jnp.argmax``).
+    On the kernel path the (n, k) gain matrix never reaches HBM: the
+    Pallas kernel reduces each (SG_TN, k) tile on-chip to a
+    ``(best_gain, best_flat)`` partial and only the O(n/SG_TN) partials
+    are written, then tree-reduced here (``jnp.argmax`` over the tile
+    maxima keeps the first-tile tie-break, so the composition equals the
+    global first-flat-index argmax). ``d`` may be bf16 (DESIGN.md §2);
+    accumulation is always f32.
+    """
+    from . import ref
+
+    backend = _resolve(backend)
+    if backend == "ref":
+        return ref.swap_select(d, d1, d2, near_onehot, row_mask)
+
+    interpret = backend == "interpret"
+    n, m = d.shape
+    k = near_onehot.shape[1]
+    tn, tm = swap_gain_mod.SG_TN, swap_gain_mod.SG_TM
+    if row_mask is None:
+        row_mask = jnp.ones((n,), jnp.float32)
+    dp = _pad_to(_pad_to(d, 0, tn), 1, tm)
+    d1p = _pad_to(d1, 0, tm)
+    d2p = _pad_to(d2, 0, tm)
+    nhp = _pad_to(_pad_to(near_onehot, 0, tm), 1, 128)
+    # Padded rows get mask 0 => NEG inside the kernel, so they never win;
+    # padded k columns are masked by the kernel's col < k_true check.
+    maskp = _pad_to(row_mask.astype(jnp.float32), 0, tn)
+    gains, flats = swap_gain_mod.swap_select(dp, d1p, d2p, nhp, maskp,
+                                             k_true=k, interpret=interpret)
+    t = jnp.argmax(gains[:, 0])          # first maximal tile = minimal i
+    flat = flats[t, 0]
+    return (gains[t, 0], (t * tn + flat // k).astype(jnp.int32),
+            (flat % k).astype(jnp.int32))

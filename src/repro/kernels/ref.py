@@ -10,6 +10,8 @@ All math here mirrors the paper exactly:
     oracle per registered metric (DESIGN.md §3).
   * swap_gain: the vectorised form of Algorithm 2 lines 6-18 (see
     DESIGN.md §2 for the derivation).
+  * swap_select: the fused selection contract — argmax over swap_gain with
+    row masking — that the on-chip Pallas reduction must match exactly.
 
 The ``*_auto`` variants switch to the lax.scan-tiled implementation when
 the naive (n, m, p) broadcast would exceed ~1 GiB of intermediate memory —
@@ -22,6 +24,10 @@ import jax.numpy as jnp
 # Finite stand-in for the paper's ``d_jj = +inf`` debias trick: +inf would
 # produce inf - inf = nan inside the gain computation.
 LARGE = jnp.float32(1e15)
+
+# Sentinel for masked swap candidates (current medoids, padded rows): far
+# below any real gain, so masked entries can never win the argmax.
+NEG = jnp.float32(-1e30)
 
 
 def pairwise_l1(x: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
@@ -144,3 +150,28 @@ def swap_gain(
     r = d1 - jnp.minimum(jnp.maximum(d, d1), d2)                # (n, m)
     big_r = r @ near_onehot.astype(jnp.float32)                 # (n, k)
     return g[:, None] + big_r
+
+
+def swap_select(
+    d: jnp.ndarray,
+    d1: jnp.ndarray,
+    d2: jnp.ndarray,
+    near_onehot: jnp.ndarray,
+    row_mask: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused swap selection oracle: ``argmax`` over :func:`swap_gain`.
+
+    Returns ``(best_gain, i, l)`` scalars — the best masked swap and its
+    (candidate, slot) coordinates, with ``jnp.argmax`` first-flat-index
+    tie-break. ``row_mask`` (n,) zeroes out rows that must not be selected
+    (current medoids; the Pallas path also uses it for tile padding). This
+    is the semantic contract the on-chip kernel reduction must match
+    exactly, ties included (tests/test_kernels.py pins it).
+    """
+    gain = swap_gain(d, d1, d2, near_onehot)
+    if row_mask is not None:
+        gain = jnp.where(row_mask[:, None] > 0, gain, NEG)
+    k = near_onehot.shape[1]
+    flat = jnp.argmax(gain)
+    return (gain.reshape(-1)[flat],
+            (flat // k).astype(jnp.int32), (flat % k).astype(jnp.int32))

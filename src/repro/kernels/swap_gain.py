@@ -1,4 +1,4 @@
-"""Fused Pallas kernel for the OneBatchPAM swap-gain matrix.
+"""Fused Pallas kernels for the OneBatchPAM swap sweep.
 
 Evaluates Algorithm 2 (lines 6-18) of the paper for all n candidates and all
 k medoid slots in one pass over the (n, m) distance block:
@@ -7,11 +7,21 @@ k medoid slots in one pass over the (n, m) distance block:
     g_i  = sum_j relu(d1_j - D_ij)
     r_ij = d1_j - min(max(D_ij, d1_j), d2_j)
 
-The naive jnp version reads D three times from HBM (relu term, clip term,
-matmul operand). The kernel reads each (TN, TM) tile of D once from VMEM and
-produces both the VPU row-sum and the MXU matmul contribution, accumulating
-the (TN, K) output tile across the m grid. This is the memory-bound hot loop
-of the solver (O(nm) bytes per sweep), so the single-read fusion is the win.
+Two kernels share the gain math (DESIGN.md §2):
+
+  * ``swap_gain`` — materialises the full (n, k) gain matrix. The naive jnp
+    version reads D three times from HBM (relu term, clip term, matmul
+    operand); this kernel reads each (TN, TM) tile of D once from VMEM and
+    produces both the VPU row-sum and the MXU matmul contribution,
+    accumulating the (TN, K) output tile across the m grid.
+  * ``swap_select`` — the fused swap-*selection* sweep: the same gain
+    accumulation runs into a VMEM scratch tile that never leaves the chip,
+    and at the last m grid step the (TN, K) tile is reduced on-chip to one
+    ``(best_gain, best_flat)`` partial per row tile (first-flat-index
+    tie-break, matching ``jnp.argmax`` on the full matrix). Per sweep the
+    kernel writes O(n/TN) scalars to HBM instead of the O(nk) gain matrix —
+    selection costs one read of D and nothing else. D tiles may be bf16
+    (accumulation is always f32), halving sweep HBM traffic.
 
 k is padded to a 128 lane multiple and kept whole per tile (k <= ~1024 in
 all paper settings); m is swept by the grid.
@@ -23,9 +33,14 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 SG_TN = 256   # candidate rows per tile
 SG_TM = 256   # batch columns per grid step
+
+# Masked-entry sentinel inside the select kernel. A python float on purpose:
+# jnp constants cannot be closed over by a Pallas kernel body.
+_NEG = -1e30
 
 
 def _swap_gain_kernel(d_ref, d1_ref, d2_ref, nh_ref, o_ref):
@@ -75,3 +90,103 @@ def swap_gain(
         out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
         interpret=interpret,
     )(d, d1.reshape(1, m), d2.reshape(1, m), near_onehot)
+
+
+def _swap_select_kernel(d_ref, d1_ref, d2_ref, nh_ref, mask_ref,
+                        g_ref, f_ref, acc_ref, *, k_true, m_steps):
+    """Gain accumulation fused with on-chip per-tile argmax.
+
+    The (TN, K) gain tile lives in the ``acc_ref`` VMEM scratch across the
+    m grid; at the last m step it is reduced to (best_gain, best_flat) and
+    only those two scalars reach HBM. ``flat = row * k_true + l`` uses the
+    *unpadded* k so the host-side reduce recovers global (i, l) directly.
+    """
+    jk = pl.program_id(1)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    d = d_ref[...].astype(jnp.float32)            # (TN, TM)
+    d1 = d1_ref[...].astype(jnp.float32)          # (1, TM)
+    d2 = d2_ref[...].astype(jnp.float32)          # (1, TM)
+    nh = nh_ref[...].astype(jnp.float32)          # (TM, K)
+
+    g = jnp.maximum(d1 - d, 0.0).sum(axis=1)      # (TN,)  VPU
+    r = d1 - jnp.minimum(jnp.maximum(d, d1), d2)  # (TN, TM) VPU
+    big_r = jax.lax.dot_general(                  # (TN, K) MXU
+        r, nh, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    acc_ref[...] += big_r + g[:, None]
+
+    @pl.when(jk == m_steps - 1)
+    def _reduce():
+        tn, kp = acc_ref.shape
+        gain = acc_ref[...]
+        col = jax.lax.broadcasted_iota(jnp.int32, (tn, kp), 1)
+        rmask = mask_ref[...]                     # (TN, 1), no relayout
+        gain = jnp.where((col < k_true) & (rmask > 0), gain, _NEG)
+        # First-flat-index tie-break, exactly jnp.argmax semantics: the
+        # first row attaining the tile max, then the first column within
+        # that row attaining the row max.
+        rmax = jnp.max(gain, axis=1, keepdims=True)            # (TN, 1)
+        l_row = jnp.min(jnp.where(gain == rmax, col, kp),
+                        axis=1, keepdims=True)                 # (TN, 1)
+        tmax = jnp.max(gain)
+        rows = jax.lax.broadcasted_iota(jnp.int32, (tn, 1), 0)
+        brow = jnp.min(jnp.where(rmax == tmax, rows, tn))
+        bl = jnp.min(jnp.where(rows == brow, l_row, kp))
+        g_ref[0, 0] = tmax
+        f_ref[0, 0] = brow * k_true + bl
+
+
+@functools.partial(jax.jit, static_argnames=("k_true", "interpret"))
+def swap_select(
+    d: jnp.ndarray,            # (n, m) f32 or bf16
+    d1: jnp.ndarray,           # (m,)
+    d2: jnp.ndarray,           # (m,)
+    near_onehot: jnp.ndarray,  # (m, k_pad)
+    row_mask: jnp.ndarray,     # (n,) f32, 0 = row excluded (medoid / padding)
+    *,
+    k_true: int,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row-tile swap-selection partials.
+
+    Returns ``(best_gain, best_flat)`` of shape (n // SG_TN, 1) each: the
+    maximum masked gain within each (SG_TN, k_true) row tile and its local
+    flat index ``row * k_true + l``. n, m must be (SG_TN, SG_TM)-aligned
+    and the one-hot width a 128 multiple; ops.py pads, masks the padded
+    rows via ``row_mask``, and tree-reduces the partials.
+    """
+    n, m = d.shape
+    kp = near_onehot.shape[1]
+    grid = (n // SG_TN, m // SG_TM)
+    return pl.pallas_call(
+        functools.partial(_swap_select_kernel, k_true=k_true,
+                          m_steps=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((SG_TN, SG_TM), lambda i, jk: (i, jk)),
+            pl.BlockSpec((1, SG_TM), lambda i, jk: (0, jk)),
+            pl.BlockSpec((1, SG_TM), lambda i, jk: (0, jk)),
+            pl.BlockSpec((SG_TM, kp), lambda i, jk: (jk, 0)),
+            # (n, 1) column layout: the kernel reads a (TN, 1) tile
+            # directly — a (1, TN) row would need a lane->sublane reshape
+            # in-kernel, a relayout class Mosaic often refuses to lower.
+            pl.BlockSpec((SG_TN, 1), lambda i, jk: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, jk: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i, jk: (i, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n // SG_TN, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n // SG_TN, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((SG_TN, kp), jnp.float32)],
+        interpret=interpret,
+    )(d, d1.reshape(1, m), d2.reshape(1, m), near_onehot,
+      row_mask.reshape(n, 1))

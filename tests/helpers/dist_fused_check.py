@@ -1,0 +1,68 @@
+"""Subprocess body: the fused sharded sweep (swap_select partials + scalar
+election + incremental repair) on 2 fake host devices must be bit-for-bit
+identical to the single-device fused solver — same medoid array (same slot
+order, not just the same set), same swap count, same estimated objective —
+including on tie-heavy quantized instances and with a bf16 block. Invoked
+by tests/test_distributed.py with
+XLA_FLAGS=--xla_force_host_platform_device_count=2 in the environment."""
+import os
+
+assert "--xla_force_host_platform_device_count=2" in os.environ.get("XLA_FLAGS", "")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import solver  # noqa: E402
+from repro.core.distributed import make_distributed_obp, shard_over_batch  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+
+
+def _host_block(x, batch_idx, weights, block_dtype):
+    """Single-device block with the cast order the mesh path mirrors."""
+    d = ops.pairwise_distance(x, x[batch_idx], metric="l1")
+    if block_dtype is not None:
+        d = d.astype(block_dtype)
+    d = d * weights[None, :]
+    return d.astype(block_dtype) if block_dtype is not None else d
+
+
+def main() -> None:
+    assert jax.device_count() == 2, jax.device_count()
+    mesh = jax.make_mesh((2,), ("data",))
+
+    rng = np.random.default_rng(0)
+    n, p, k, m = 256, 8, 6, 32
+
+    for case, quantize, block_dtype in (
+            ("plain", None, None),
+            ("ties", 2, None),          # coarse grid -> duplicate gains
+            ("bf16", None, "bfloat16")):
+        xv = rng.normal(size=(n, p)).astype(np.float32)
+        if quantize:
+            xv = np.round(xv * quantize) / quantize
+        x = jnp.asarray(xv)
+        batch_idx = jnp.asarray(rng.choice(n, size=m, replace=False))
+        weights = jnp.asarray(rng.uniform(0.5, 1.5, size=m).astype(np.float32))
+        init_idx = jnp.asarray(rng.choice(n, size=k, replace=False))
+
+        ref = solver.solve_batched(
+            _host_block(x, batch_idx, weights, block_dtype), init_idx)
+
+        run = make_distributed_obp(mesh, k=k, metric="l1",
+                                   block_dtype=block_dtype)
+        got = run(shard_over_batch(mesh, x), batch_idx, weights, init_idx)
+
+        # Bitwise: identical slot-for-slot medoid array, swap count, and
+        # estimated objective — not just the same medoid set.
+        np.testing.assert_array_equal(np.asarray(ref.medoid_idx),
+                                      np.asarray(got.medoid_idx))
+        assert int(got.n_swaps) == int(ref.n_swaps), case
+        np.testing.assert_array_equal(np.float32(ref.est_objective),
+                                      np.float32(got.est_objective))
+        print(f"OK {case} swaps={int(got.n_swaps)} "
+              f"obj={float(got.est_objective):.6f}")
+
+
+if __name__ == "__main__":
+    main()

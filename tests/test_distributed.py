@@ -37,6 +37,16 @@ def test_sharded_e2e_bitwise_matches_single_device():
     assert "OK one_batch_pam mesh path" in out
 
 
+def test_fused_sharded_sweep_bitwise_matches_single_device():
+    """Fused swap_select partials + scalar election + incremental repair on
+    2 devices == the single-device fused solver, bit-for-bit — slot-exact
+    medoid array, swap count, objective — on plain, tie-heavy, and bf16
+    blocks (ISSUE 2)."""
+    out = _run("dist_fused_check.py", devices=2)
+    for case in ("plain", "ties", "bf16"):
+        assert f"OK {case}" in out
+
+
 def test_compressed_crosspod_psum():
     out = _run("dist_compression_check.py")
     assert "one-shot ok" in out

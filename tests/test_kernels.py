@@ -87,6 +87,104 @@ def test_swap_gain_interpret_matches_ref(n, m, k):
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
 
 
+def _select_fixture(n, m, k, seed=0, quantize=None, d2_eq_d1=False):
+    """Consistent (d, d1, d2, nh) swap-sweep inputs; ``quantize`` rounds the
+    distances to a coarse grid to force duplicate gains (tie coverage)."""
+    ks = jax.random.split(jax.random.fold_in(KEY, seed * 1_000_003 + n), 3)
+    d = jax.random.uniform(ks[0], (n, m), minval=0.0, maxval=10.0)
+    a = jax.random.uniform(ks[1], (m,), minval=0.0, maxval=10.0)
+    gap = jax.random.uniform(jax.random.fold_in(ks[1], 1), (m,),
+                             minval=0.0, maxval=5.0)
+    if quantize:
+        d = jnp.round(d * quantize) / quantize
+        a = jnp.round(a * quantize) / quantize
+        gap = jnp.round(gap * quantize) / quantize
+    d1, d2 = a, (a if d2_eq_d1 else a + gap)
+    near = jax.random.randint(ks[2], (m,), 0, k)
+    return d, d1, d2, jax.nn.one_hot(near, k, dtype=jnp.float32)
+
+
+def _select_oracle(d, d1, d2, nh, row_mask, backend):
+    """argmax over the same backend's gain matrix — the exact contract."""
+    gain = ops.swap_gain(d, d1, d2, nh, backend=backend)
+    if row_mask is not None:
+        gain = jnp.where(row_mask[:, None] > 0, gain, ref.NEG)
+    k = nh.shape[1]
+    flat = int(jnp.argmax(gain))
+    return np.float32(gain.reshape(-1)[flat]), flat // k, flat % k
+
+
+# Seeded property grid over n, m, k: tile-aligned, sub-tile, ragged
+# overhang, k over one lane tile — plus per-seed random masks.
+SELECT_SHAPES = [
+    (256, 256, 128),   # exact tiles
+    (256, 256, 4),     # tiny k (pad to 128 lanes)
+    (100, 33, 7),      # ragged everything
+    (300, 260, 130),   # k overhangs one lane tile
+    (513, 40, 6),      # n overhangs two row tiles
+    (24, 8, 2),        # tiny
+]
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+@pytest.mark.parametrize("n,m,k", SELECT_SHAPES)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_swap_select_matches_argmax_swap_gain(backend, n, m, k, seed):
+    """swap_select == argmax(swap_gain) exactly (value and coordinates),
+    per backend, with and without a row mask."""
+    d, d1, d2, nh = _select_fixture(n, m, k, seed=seed)
+    km = jax.random.fold_in(KEY, seed + 17)
+    mask = (jax.random.uniform(km, (n,)) > 0.2).astype(jnp.float32)
+    for rm in (None, mask):
+        got_g, got_i, got_l = ops.swap_select(d, d1, d2, nh, row_mask=rm,
+                                              backend=backend)
+        want_g, want_i, want_l = _select_oracle(d, d1, d2, nh, rm, backend)
+        assert (int(got_i), int(got_l)) == (want_i, want_l)
+        np.testing.assert_array_equal(np.float32(got_g), want_g)
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+@pytest.mark.parametrize("seed", range(6))
+def test_swap_select_tie_break_on_duplicate_gains(backend, seed):
+    """Coarsely quantized distances produce exact duplicate gains; the
+    selection must still be the first flat index, matching jnp.argmax."""
+    rng = np.random.default_rng(seed)
+    n, m, k = int(rng.integers(40, 600)), int(rng.integers(5, 80)), int(rng.integers(2, 12))
+    d, d1, d2, nh = _select_fixture(n, m, k, seed=seed, quantize=2)
+    got_g, got_i, got_l = ops.swap_select(d, d1, d2, nh, backend=backend)
+    want_g, want_i, want_l = _select_oracle(d, d1, d2, nh, None, backend)
+    assert (int(got_i), int(got_l)) == (want_i, want_l)
+    np.testing.assert_array_equal(np.float32(got_g), want_g)
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_swap_select_all_slots_tied_picks_first(backend):
+    """d1 == d2 zeroes every removal correction, so each row ties across
+    all k slots; identical rows tie across rows too -> flat index 0."""
+    n, m, k = 300, 33, 7
+    d, d1, d2, nh = _select_fixture(1, m, k, d2_eq_d1=True)
+    d = jnp.tile(d, (n, 1))
+    _, i, l = ops.swap_select(d, d1, d2, nh, backend=backend)
+    assert (int(i), int(l)) == (0, 0)
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_swap_select_row_mask_excludes_winner(backend):
+    """Masking the winning row must move the selection to the runner-up;
+    padded tile rows (mask 0 via ops padding) must never win."""
+    n, m, k = 130, 20, 3   # n deliberately not a tile multiple
+    d, d1, d2, nh = _select_fixture(n, m, k, seed=3)
+    _, i0, l0 = ops.swap_select(d, d1, d2, nh, backend=backend)
+    mask = jnp.ones((n,), jnp.float32).at[i0].set(0.0)
+    got_g, i1, l1 = ops.swap_select(d, d1, d2, nh, row_mask=mask,
+                                    backend=backend)
+    assert int(i1) != int(i0)
+    want_g, want_i, want_l = _select_oracle(d, d1, d2, nh, mask, backend)
+    assert (int(i1), int(l1)) == (want_i, want_l)
+    np.testing.assert_array_equal(np.float32(got_g), want_g)
+    assert 0 <= int(i1) < n, "padded rows must be masked out"
+
+
 def test_pairwise_l1_known_values():
     x = jnp.array([[0.0, 0.0], [1.0, 2.0]])
     b = jnp.array([[1.0, 1.0]])
