@@ -40,7 +40,8 @@ def _parse_record(line: str) -> dict:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,table3,fig1,pareto,kernel,roofline")
+                    help="comma list: table1,table3,fig1,pareto,kernel,"
+                         "roofline,restarts")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write records as structured JSON (e.g. "
                          "BENCH_PR2.json)")
@@ -50,8 +51,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig1_scaling, kernel_bench, pareto,
-                            roofline_report, table1_complexity,
-                            table3_quality, theorem1)
+                            restart_bench, roofline_report,
+                            table1_complexity, table3_quality, theorem1)
     suites = {
         "table1": table1_complexity.run,
         "table3": table3_quality.run,
@@ -60,6 +61,7 @@ def main() -> None:
         "theorem1": theorem1.run,
         "kernel": kernel_bench.run,
         "roofline": roofline_report.run,
+        "restarts": restart_bench.run,
     }
     selected = (args.only.split(",") if args.only else list(suites))
     print("name,us_per_call,derived")

@@ -5,6 +5,8 @@ batch variants with a streamed distance build, plus the distributed
     PYTHONPATH=src python examples/cluster_embeddings.py
     # bound peak intermediate memory to ~chunk x m floats:
     PYTHONPATH=src python examples/cluster_embeddings.py --chunk-size 8192
+    # best-of-8 vmapped restarts with held-out election (DESIGN.md §2a):
+    PYTHONPATH=src python examples/cluster_embeddings.py --restarts 8
     # distributed path (8 forced host devices), n sharded over the mesh:
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/cluster_embeddings.py --distributed
@@ -22,12 +24,15 @@ from repro.data import heavy_tail
 N, P, K = 200_000, 24, 64
 
 
-def single_process(chunk_size: int | None):
+def single_process(chunk_size: int | None, restarts: int = 1):
     x = heavy_tail(N, P, seed=0)
     print(f"== OneBatchPAM variants on {N} x {P} (k={K}) ==")
     m = sampling.default_batch_size(N, K)
     print(f"batch size m = 100*log(k*n) = {m}  "
           f"({N * m:,} distance evals vs n^2 = {N * N:,})")
+    if restarts > 1:
+        print(f"restarts: R={restarts} vmapped searches on one pooled "
+              f"R*m column sample, held-out election (DESIGN.md §2a)")
     if chunk_size:
         # Per-chunk f32 working set: (chunk, m) output on the TPU kernel
         # path; the CPU ref path's broadcast slab is larger (up to a
@@ -39,10 +44,12 @@ def single_process(chunk_size: int | None):
     for variant in sampling.VARIANTS:
         t0 = time.perf_counter()
         sel = MedoidSelector(k=K, variant=variant, seed=0,
-                             chunk_size=chunk_size).fit(x)
+                             chunk_size=chunk_size, restarts=restarts).fit(x)
         dt = time.perf_counter() - t0
+        extra = (f" restart={sel.best_restart_}/{restarts}"
+                 if restarts > 1 else "")
         print(f"{variant:7s}: obj={sel.objective(x):.4f} time={dt:5.1f}s "
-              f"swaps={sel.n_swaps_}")
+              f"swaps={sel.n_swaps_}{extra}")
 
 
 def distributed(chunk_size: int | None):
@@ -78,8 +85,10 @@ if __name__ == "__main__":
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--chunk-size", type=int, default=None,
                     help="stream the n axis in row chunks of this size")
+    ap.add_argument("--restarts", type=int, default=1,
+                    help="vmapped multi-restart best-of-R (DESIGN.md §2a)")
     args = ap.parse_args()
     if args.distributed:
         distributed(args.chunk_size)
     else:
-        single_process(args.chunk_size)
+        single_process(args.chunk_size, args.restarts)

@@ -29,6 +29,14 @@ def main():
           f"swaps={sel.n_swaps_}  (distance evals ~ n*m = "
           f"{N * (sel.m or 0) if sel.m else 'n*100log(kn)'})")
 
+    # Best-of-8: one pooled column sample, 8 vmapped local searches, the
+    # winner elected on a held-out batch (DESIGN.md §2a).
+    t0 = time.perf_counter()
+    sel8 = MedoidSelector(k=K, variant="nniw", seed=0, restarts=8).fit(x)
+    t8 = time.perf_counter() - t0
+    print(f"OneBatchPAM R=8  : obj={sel8.objective(x):.4f}  time={t8:.2f}s  "
+          f"elected restart {sel8.best_restart_} of 8 on held-out batch")
+
     # competitors (FasterPAM on a subsample — full 20k^2 is the point of
     # the paper: it would need 3.2 GB and minutes)
     sub = x[np.random.default_rng(0).choice(N, 4000, replace=False)]

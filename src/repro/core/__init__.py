@@ -2,15 +2,19 @@
 
 Public API:
   one_batch_pam / fasterpam / objective   (solver.py)
+  one_batch_pam_restarts, RestartResult   (restarts.py — vmapped multi-restart)
   build_batch, Batch, VARIANTS            (sampling.py)
   stream_block / stream_assign            (streaming.py)
   MedoidSelector                          (selector.py)
-  make_distributed_obp / _e2e             (distributed.py)
+  make_distributed_obp / _e2e / _restarts (distributed.py)
+  trace_batched / trace_eager             (trace.py — swap-sequence replay)
   baselines.ALL_BASELINES                 (paper competitors, counted)
 """
+from .restarts import Pool, RestartResult, one_batch_pam_restarts  # noqa: F401
 from .sampling import Batch, VARIANTS, build_batch, default_batch_size  # noqa: F401
 from .selector import MedoidSelector  # noqa: F401
 from .streaming import StreamedBlock, stream_assign, stream_block  # noqa: F401
+from .trace import Trajectory, trace_batched, trace_eager  # noqa: F401
 from .solver import (  # noqa: F401
     SolveResult,
     fasterpam,

@@ -21,6 +21,43 @@ import time
 import numpy as np
 
 
+def _np_l1(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return np.abs(a[:, None, :] - b[None, :, :]).sum(-1)
+
+
+def _np_sqeuclidean(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    sq = (a * a).sum(1)[:, None] + (b * b).sum(1)[None, :] - 2 * a @ b.T
+    return np.maximum(sq, 0.0)
+
+
+def _np_l2(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return np.sqrt(_np_sqeuclidean(a, b))
+
+
+def _np_cosine(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    # Mirrors kernels/metrics.py: L2 row-normalise (eps-guarded), 1 - dot,
+    # clip >= 0 — so zero rows behave like the jax registry's.
+    an = a / np.maximum(np.linalg.norm(a, axis=1, keepdims=True), 1e-12)
+    bn = b / np.maximum(np.linalg.norm(b, axis=1, keepdims=True), 1e-12)
+    return np.maximum(1.0 - an @ bn.T, 0.0)
+
+
+def _np_chebyshev(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return np.abs(a[:, None, :] - b[None, :, :]).max(-1)
+
+
+# numpy mirror of the kernels/metrics.py registry: every metric the jax
+# pipeline accepts works in the counted baselines too
+# (tests/test_baseline_metrics.py pins agreement with ops.pairwise_distance).
+NP_METRICS = {
+    "l1": _np_l1,
+    "sqeuclidean": _np_sqeuclidean,
+    "l2": _np_l2,
+    "cosine": _np_cosine,
+    "chebyshev": _np_chebyshev,
+}
+
+
 @dataclasses.dataclass
 class Oracle:
     """Dataset + metric wrapper counting pairwise dissimilarity evaluations."""
@@ -30,6 +67,10 @@ class Oracle:
 
     def __post_init__(self):
         self.x = np.asarray(self.x, np.float32)
+        if self.metric not in NP_METRICS:
+            raise ValueError(
+                f"unknown metric {self.metric!r}; "
+                f"options {tuple(NP_METRICS)}")
 
     @property
     def n(self) -> int:
@@ -39,13 +80,7 @@ class Oracle:
         """(len(rows), len(cols)) distance block; counts len(rows)*len(cols)."""
         a, b = self.x[rows], self.x[cols]
         self.count += a.shape[0] * b.shape[0]
-        if self.metric == "l1":
-            return np.abs(a[:, None, :] - b[None, :, :]).sum(-1)
-        if self.metric in ("l2", "sqeuclidean"):
-            sq = (a * a).sum(1)[:, None] + (b * b).sum(1)[None, :] - 2 * a @ b.T
-            sq = np.maximum(sq, 0.0)
-            return sq if self.metric == "sqeuclidean" else np.sqrt(sq)
-        raise ValueError(self.metric)
+        return NP_METRICS[self.metric](a, b)
 
     def to_all(self, cols: np.ndarray) -> np.ndarray:
         return self.block(np.arange(self.n), cols)
@@ -180,8 +215,9 @@ def alternate(rng: np.random.Generator, oracle: Oracle, k: int,
 
 
 def _dist_power(oracle: Oracle) -> float:
-    # k-means++ samples proportional to d^p for an l_p metric.
-    return 1.0 if oracle.metric == "l1" else 2.0
+    # k-means++ samples proportional to d^p for an l_p metric; the
+    # max-norm and the bounded cosine distance behave like p = 1.
+    return 1.0 if oracle.metric in ("l1", "chebyshev", "cosine") else 2.0
 
 
 @_timed

@@ -285,6 +285,143 @@ def make_distributed_obp(mesh, *, k: int, metric: str = "l1",
 
 
 @functools.lru_cache(maxsize=32)
+def make_distributed_obp_restarts(mesh, *, k: int, restarts: int,
+                                  metric: str = "l1", variant: str = "unif",
+                                  max_swaps: int = 500, eps: float = 0.0,
+                                  backend: str = "auto",
+                                  chunk_size: int | None = None,
+                                  block_dtype: str | None = None):
+    """Multi-restart OneBatchPAM with the restart axis composed with the
+    shard axis (DESIGN.md §2a/§5).
+
+    Returns fn(x, pool_idx, eval_idx, init_idx) ->
+        (SolveResult stacked over R, best_restart, eval_objectives (R,),
+         weights (R, m)), where
+      x: (n, p) sharded P(batch_axes, "model"),
+      pool_idx: (R*m,) replicated pooled columns,
+      eval_idx: (eval_m,) replicated held-out evaluation columns,
+      init_idx: (R, k) replicated per-restart initial medoids.
+
+    Dataflow per shard: ONE streaming sweep builds the local (n_local,
+    R·m) pooled block (per-restart nniw histograms fused via grouped
+    argmin, completed with a single (R·m,)-float psum), the block slices
+    into R (n_local, m) views, and ``vmap(solve_sharded)`` runs all R
+    fused sweeps at once — per swap step each shard emits one
+    (best_gain, best_flat) partial *per restart* and the three-scalar
+    election collectives batch over the restart axis. The cross-restart
+    election gathers the R·k winning medoid rows with one psum, scores
+    every restart on the replicated eval batch (bf16-aware, f32
+    accumulation), and argmins — identical floats on every shard.
+    Bit-for-bit with the host engine (core/restarts.py) on the same
+    draws: ``tests/helpers/dist_restart_check.py`` pins it.
+    """
+    if variant not in ("unif", "debias", "nniw"):
+        raise ValueError(
+            f"variant {variant!r} not supported in-mesh; run restarts "
+            "host-side (mesh=None) for lwcs")
+    batch_axes = _batch_axes(mesh)
+    has_model = "model" in mesh.axis_names
+    sizes = dict(mesh.shape)
+    spec = metrics.get(metric)
+    if has_model and spec.reduce is None:
+        raise ValueError(
+            f"metric {metric!r} cannot be feature-sharded; drop the model axis")
+
+    result_spec = solver.SolveResult(P(), P(), P(), P())
+
+    @functools.partial(
+        _shard_map, mesh=mesh,
+        in_specs=(P(batch_axes, "model" if has_model else None),
+                  P(), P(), P()),
+        out_specs=(result_spec, P(), P(), P()),
+        check_vma=False,
+    )
+    def run(x_local, pool_idx, eval_idx, init_idx):
+        n_local = x_local.shape[0]
+        rm = pool_idx.shape[0]
+        m = rm // restarts
+        off = _shard_offset(batch_axes, n_local, sizes)
+        b = _gather_batch_rows(x_local, pool_idx, off, batch_axes)
+        eval_rows = _gather_batch_rows(x_local, eval_idx, off, batch_axes)
+        want_fused = variant == "nniw" and not has_model
+        if has_model:
+            raw = streaming.stream_block(x_local, b, metric=metric,
+                                         backend=backend,
+                                         chunk_size=chunk_size, raw=True).d
+            collective = (jax.lax.psum if spec.reduce == "sum"
+                          else jax.lax.pmax)
+            d = spec.finalize(collective(raw, "model"))
+            if variant == "nniw":
+                # Grouped second pass over the reduced f32 block — the
+                # restart-sliced mirror of the e2e path's count pass.
+                win = jnp.argmin(d.reshape(n_local, restarts, m), axis=2)
+                flat = win + (jnp.arange(restarts) * m)[None, :]
+                local_counts = jnp.zeros((rm,), jnp.float32).at[
+                    flat.reshape(-1)].add(1.0)
+            else:
+                local_counts = None
+            if block_dtype is not None:
+                d = d.astype(block_dtype)
+        else:
+            sb = streaming.stream_block(x_local, b, metric=metric,
+                                        backend=backend,
+                                        chunk_size=chunk_size,
+                                        count_nn=want_fused,
+                                        count_groups=restarts,
+                                        block_dtype=block_dtype)
+            d = sb.d
+            local_counts = sb.nn_counts if want_fused else None
+
+        n_global = n_local
+        for ax in batch_axes:
+            n_global = n_global * sizes[ax]
+
+        if variant == "nniw":
+            counts = jax.lax.psum(local_counts, batch_axes)  # one (R·m,) psum
+            weights = counts.reshape(restarts, m) * (m / n_global)
+        else:
+            weights = jnp.ones((restarts, m), jnp.float32)
+        if variant == "debias":
+            mine, safe = _owner_select(pool_idx, off, n_local)
+            cols = jnp.arange(rm)
+            d = d.at[safe, cols].set(jnp.where(mine, LARGE, d[safe, cols]))
+
+        d = d * weights.reshape(-1)[None, :]   # block_dtype * f32 -> f32
+        if block_dtype is not None:
+            d = d.astype(block_dtype)
+        d_pool = jnp.moveaxis(d.reshape(n_local, restarts, m), 1, 0)
+
+        results = jax.vmap(
+            lambda dd, ii: solve_sharded(dd, ii, axes=batch_axes,
+                                         max_swaps=max_swaps, eps=eps,
+                                         backend=backend, axis_sizes=sizes)
+        )(d_pool, init_idx)
+
+        # Election: one psum gathers the R·k winning medoid rows; scoring
+        # then runs replicated (identical floats on every shard).
+        med_rows = _gather_batch_rows(x_local, results.medoid_idx.reshape(-1),
+                                      off, batch_axes)
+        if has_model:
+            raw = ops.pairwise_raw(eval_rows, med_rows, metric=metric,
+                                   backend=backend)
+            collective = (jax.lax.psum if spec.reduce == "sum"
+                          else jax.lax.pmax)
+            d_eval = spec.finalize(collective(raw, "model"))
+        else:
+            d_eval = ops.pairwise_distance(eval_rows, med_rows,
+                                           metric=metric, backend=backend)
+        if block_dtype is not None:
+            d_eval = d_eval.astype(block_dtype)
+        # Shared scoring contract (restarts.score_restarts): host == mesh
+        # by construction, not by parallel maintenance.
+        from repro.core.restarts import score_restarts
+        best_r, evals = score_restarts(d_eval, restarts, k)
+        return results, best_r, evals, weights
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=32)
 def make_distributed_obp_e2e(mesh, *, k: int, metric: str = "l1",
                              variant: str = "unif",
                              max_swaps: int = 500, eps: float = 0.0,

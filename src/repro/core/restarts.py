@@ -1,0 +1,328 @@
+"""Parallel multi-restart OneBatchPAM (DESIGN.md §2a).
+
+OneBatchPAM's premise — a single m = O(log n) batch estimates the
+k-medoids objective well — makes R independent restarts nearly free:
+R·m ≪ n reference columns still cost one streaming pass over X, and the
+R local searches are the same fused swap-select sweep with a leading
+restart axis. This is the quality/robustness axis CLARA/FasterCLARA
+(Schubert & Rousseeuw 2019) and BanditPAM++ buy with repeated
+subsampling, grafted onto the one-batch estimator. Three stages, each a
+single XLA program:
+
+  1. **Pooled sampling** (:func:`build_pool`): draw one column pool of
+     size R·m (plus a held-out evaluation batch of ``eval_m`` columns),
+     build the (n, R·m) block in ONE streaming sweep over X
+     (``stream_block``; O(chunk · R·m) peak intermediates), with the
+     per-restart nniw histograms fused into that same sweep via grouped
+     argmin (``count_groups=R`` — no second pass over the block). The
+     pool then slices into R per-restart (n, m) blocks with per-restart
+     weights.
+  2. **Vmapped solve** (:func:`solve_restarts`): ``jax.vmap`` of the
+     fused :func:`solver.solve_batched` sweep over the restart axis —
+     all R steepest-descent searches run as one batched kernel program
+     (a batched ``lax.while_loop``: lanes that converge early freeze
+     while the stragglers finish).
+  3. **Election** (:func:`elect`): every restart's medoid set is
+     re-scored on the SAME held-out evaluation batch — streamed,
+     bf16-aware (the eval block is stored in ``block_dtype``, the
+     min/mean accumulates in f32) — and the argmin wins. Ties elect the
+     lowest restart index (``jnp.argmin`` semantics), deterministically.
+
+The election invariant (DESIGN.md §2a): all restarts are scored on one
+shared evaluation batch, so their scores are exchangeable estimates of
+the true objective and the argmin is an unbiased best-of-R selection;
+scoring each restart on its *own* training batch would reward estimator
+noise (the batch it overfit), not objective quality.
+
+``restarts=1`` through :func:`solver.one_batch_pam` never enters this
+module — the single-restart trajectory stays bit-for-bit the historical
+one. The distributed composition (restart axis × shard axis) lives in
+``core/distributed.make_distributed_obp_restarts`` and is reached via
+``mesh=``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sampling, solver, streaming
+from repro.kernels.ref import LARGE
+
+
+class Pool(NamedTuple):
+    """The pooled column sample: R per-restart batches + held-out eval."""
+    idx: jnp.ndarray       # (R, m) int32 column indices into X_n
+    weights: jnp.ndarray   # (R, m) f32 per-restart variant weights (mean ~ 1)
+    d: jnp.ndarray | None  # (R, n, m) weighted blocks (None on the mesh path)
+    eval_idx: jnp.ndarray  # (eval_m,) int32 held-out evaluation columns
+
+
+class RestartResult(NamedTuple):
+    """Outcome of a multi-restart run."""
+    best: solver.SolveResult        # the elected restart's solve result
+    best_restart: jnp.ndarray       # int32 index of the winner
+    eval_objectives: jnp.ndarray    # (R,) f32 held-out objective estimates
+    results: solver.SolveResult     # all R results, fields stacked over R
+
+
+def _pool_draws(key: jax.Array, n: int, m: int, restarts: int, eval_m: int):
+    """Canonical uniform pool + held-out eval draw: one permutation of n.
+
+    The first R·m entries form the pool (without replacement, so the R
+    per-restart batches are disjoint) and the next ``eval_m`` entries the
+    evaluation batch — truly held out whenever R·m + eval_m <= n. When n
+    is too small for disjoint eval columns, the eval batch falls back to
+    an independent uniform draw (overlap with the pool possible, still
+    without replacement within itself). Shared verbatim by the host and
+    mesh paths so both see identical draws.
+    """
+    key_pool, key_eval = jax.random.split(key)
+    rm = restarts * m
+    perm = jax.random.permutation(key_pool, n)
+    pool_flat = perm[:rm]
+    if rm + eval_m <= n:
+        eval_idx = perm[rm:rm + eval_m]
+    else:
+        eval_idx = jax.random.choice(key_eval, n, shape=(eval_m,),
+                                     replace=False)
+    return pool_flat.astype(jnp.int32), eval_idx.astype(jnp.int32)
+
+
+def _check_pool_shape(n: int, m: int, restarts: int) -> None:
+    if restarts < 1:
+        raise ValueError(f"restarts must be >= 1, got {restarts}")
+    if m < 1:
+        raise ValueError(f"pooled batch size m must be >= 1, got {m}")
+    if restarts * m > n:
+        raise ValueError(
+            f"pooled sample R*m = {restarts}*{m} exceeds n = {n}; lower "
+            "m or restarts (one_batch_pam clamps m to n // restarts)")
+
+
+def build_pool(
+    key: jax.Array,
+    x: jnp.ndarray,
+    m: int,
+    restarts: int,
+    *,
+    eval_m: int | None = None,
+    variant: str = "nniw",
+    metric: str = "l1",
+    backend: str = "auto",
+    chunk_size: int | None = None,
+    block_dtype: str | jnp.dtype | None = None,
+) -> Pool:
+    """Sample the pooled R·m columns + eval batch and build all R blocks
+    in one O(n · R·m) streaming sweep over X.
+
+    Variant semantics per restart slice mirror ``sampling.build_batch``:
+    unit weights for ``unif``; owner-diagonal LARGE for ``debias``; for
+    ``nniw`` the per-restart nearest-neighbour histograms come out of the
+    same sweep via grouped argmin (``count_groups=R`` — each restart's
+    counts are argmins over *its own* m columns); for ``lwcs`` the pool
+    is drawn from the lightweight-coreset distribution and each slice's
+    inverse-probability weights are normalised to mean 1 per restart.
+    ``block_dtype`` narrows the stored (R, n, m) pool with the same cast
+    order as ``build_batch`` (f32 distances and weights, one rounding on
+    the stored product), so weights are storage-dtype-independent.
+    """
+    n = x.shape[0]
+    _check_pool_shape(n, m, restarts)
+    if variant not in sampling.VARIANTS:
+        raise ValueError(
+            f"unknown variant {variant!r}; options {sampling.VARIANTS}")
+    rm = restarts * m
+    eval_m = m if eval_m is None else eval_m
+    eval_m = max(1, min(eval_m, n))
+
+    if variant == "lwcs":
+        key_pool, key_eval = jax.random.split(key)
+        mean = jnp.mean(x, axis=0, keepdims=True)
+        dmean = streaming.stream_block(
+            x, mean, metric=metric, backend=backend,
+            chunk_size=chunk_size).d[:, 0]
+        q = 0.5 / n + 0.5 * (dmean**2) / jnp.maximum(jnp.sum(dmean**2), 1e-30)
+        pool_flat = jax.random.choice(key_pool, n, shape=(rm,),
+                                      replace=False, p=q).astype(jnp.int32)
+        eval_idx = jax.random.choice(key_eval, n, shape=(eval_m,),
+                                     replace=False).astype(jnp.int32)
+        w = (1.0 / (m * q[pool_flat])).reshape(restarts, m)
+        w = w * (m / jnp.sum(w, axis=1, keepdims=True))  # mean 1 per restart
+    else:
+        pool_flat, eval_idx = _pool_draws(key, n, m, restarts, eval_m)
+        w = jnp.ones((restarts, m), jnp.float32)
+
+    sb = streaming.stream_block(x, x[pool_flat], metric=metric,
+                                backend=backend, chunk_size=chunk_size,
+                                count_nn=(variant == "nniw"),
+                                count_groups=restarts,
+                                block_dtype=block_dtype)
+    if variant == "nniw":
+        w = sb.nn_counts.reshape(restarts, m) * (m / n)     # mean 1 per slice
+    d_pool = _finalize_pool(sb.d, pool_flat, w, restarts=restarts,
+                            debias=(variant == "debias"),
+                            block_dtype=solver._dtype_name(block_dtype))
+    return Pool(idx=pool_flat.reshape(restarts, m), weights=w, d=d_pool,
+                eval_idx=eval_idx)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("restarts", "debias", "block_dtype"))
+def _finalize_pool(d, pool_flat, w, *, restarts, debias, block_dtype):
+    """(n, R·m) streamed block -> weighted (R, n, m) pool, in ONE fused
+    program. jit matters here for memory, not speed: eagerly, the debias
+    scatter, the weight multiply, and the restart-axis transpose would
+    each materialise their own (n, R·m) copy — tripling the pool's
+    already R× resident footprint at exactly the scale the engine
+    targets. Fused, XLA produces the single (R, n, m) output buffer next
+    to the input block. The cast order mirrors build_batch: block_dtype *
+    f32 promotes, the weighted product computes in f32 and rounds once on
+    the final store.
+    """
+    n = d.shape[0]
+    rm = pool_flat.shape[0]
+    if debias:
+        d = d.at[pool_flat, jnp.arange(rm)].set(LARGE)
+    dw = d * w.reshape(-1)[None, :]
+    if block_dtype is not None:
+        dw = dw.astype(block_dtype)
+    return jnp.moveaxis(dw.reshape(n, restarts, rm // restarts), 1, 0)
+
+
+def solve_restarts(
+    d_pool: jnp.ndarray,    # (R, n, m) per-restart weighted blocks
+    init_idx: jnp.ndarray,  # (R, k) per-restart initial medoids
+    *,
+    max_swaps: int = 500,
+    eps: float = 0.0,
+    backend: str = "auto",
+) -> solver.SolveResult:
+    """All R fused steepest-descent searches as one vmapped program.
+
+    Each lane is exactly :func:`solver.solve_batched` (same swap-select
+    kernel, same incremental repair); the batched ``while_loop`` freezes
+    converged lanes until the slowest restart finishes. Returns a
+    SolveResult whose fields carry a leading restart axis.
+    """
+    return jax.vmap(
+        lambda d, i: solver.solve_batched(d, i, max_swaps=max_swaps,
+                                          eps=eps, backend=backend)
+    )(d_pool, init_idx)
+
+
+def elect(
+    x: jnp.ndarray,
+    medoid_idx: jnp.ndarray,  # (R, k) medoid sets, indices into X_n
+    eval_idx: jnp.ndarray,    # (eval_m,) held-out evaluation columns
+    *,
+    metric: str = "l1",
+    backend: str = "auto",
+    chunk_size: int | None = None,
+    block_dtype: str | jnp.dtype | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Cross-restart election on the shared held-out batch.
+
+    Scores restart r as mean_j min_l d(x_eval_j, medoid_rl) — the exact
+    objective estimator, uniform over the eval batch — and returns
+    ``(argmin restart, (R,) scores)``. The (eval_m, R·k) eval block is
+    built through the streaming pipeline (``chunk_size`` bounds peak
+    intermediates) and stored in ``block_dtype`` when set (bf16-aware:
+    the min/mean reduction always accumulates in f32). Score ties elect
+    the lowest restart index, deterministically.
+    """
+    restarts, k = medoid_idx.shape
+    deval = streaming.stream_block(
+        x[eval_idx], x[medoid_idx.reshape(-1)], metric=metric,
+        backend=backend, chunk_size=chunk_size, block_dtype=block_dtype).d
+    return score_restarts(deval, restarts, k)
+
+
+def score_restarts(d_eval: jnp.ndarray, restarts: int, k: int):
+    """The election scoring contract, in one place: per-restart
+    mean-of-min over the (eval_m, R·k) eval block, f32 accumulation,
+    argmin with lowest-restart tie-break. Shared by the host
+    :func:`elect` and the mesh election
+    (``distributed.make_distributed_obp_restarts``) so the bit-for-bit
+    host == mesh guarantee cannot drift out from under
+    ``tests/helpers/dist_restart_check.py``.
+    """
+    per_restart = d_eval.astype(jnp.float32).reshape(-1, restarts, k)
+    evals = per_restart.min(axis=2).mean(axis=0)             # (R,)
+    return jnp.argmin(evals).astype(jnp.int32), evals
+
+
+def _init_draws(key: jax.Array, n: int, k: int, restarts: int) -> jnp.ndarray:
+    """(R, k) per-restart initial medoids, one independent draw per lane."""
+    keys = jax.random.split(key, restarts)
+    return jax.vmap(
+        lambda kk: jax.random.choice(kk, n, shape=(k,), replace=False)
+    )(keys).astype(jnp.int32)
+
+
+def one_batch_pam_restarts(
+    key: jax.Array,
+    x: jnp.ndarray,
+    k: int,
+    *,
+    restarts: int,
+    m: int | None = None,
+    eval_m: int | None = None,
+    variant: str = "nniw",
+    metric: str = "l1",
+    max_swaps: int = 500,
+    eps: float = 0.0,
+    backend: str = "auto",
+    chunk_size: int | None = None,
+    block_dtype: str | jnp.dtype | None = None,
+    mesh=None,
+) -> tuple[RestartResult, Pool]:
+    """End-to-end multi-restart OneBatchPAM: pool → vmapped solve → elect.
+
+    ``m`` defaults to the paper heuristic clamped to n // R so the pool
+    fits; ``eval_m`` defaults to m. With ``mesh=`` the whole pipeline runs
+    data-parallel under shard_map — per-shard fused swap-select partials
+    per restart and a single-psum election
+    (``distributed.make_distributed_obp_restarts``); the returned Pool
+    then has ``d=None`` since the blocks only exist shard-wise.
+    """
+    n = x.shape[0]
+    if m is None:
+        m = min(sampling.default_batch_size(n, k), max(n // restarts, 1))
+    _check_pool_shape(n, m, restarts)
+    key_b, key_i = jax.random.split(key)
+    init_idx = _init_draws(key_i, n, k, restarts)
+
+    if mesh is not None:
+        from repro.core import distributed
+        if variant == "lwcs":
+            raise ValueError(
+                "variant 'lwcs' is not supported in-mesh; run restarts "
+                "host-side (mesh=None) or pick unif/debias/nniw")
+        eval_m_eff = max(1, min(m if eval_m is None else eval_m, n))
+        pool_flat, eval_idx = _pool_draws(key_b, n, m, restarts, eval_m_eff)
+        run = distributed.make_distributed_obp_restarts(
+            mesh, k=k, restarts=restarts, metric=metric, variant=variant,
+            max_swaps=max_swaps, eps=eps, backend=backend,
+            chunk_size=chunk_size,
+            block_dtype=solver._dtype_name(block_dtype))
+        results, best_r, evals, weights = run(
+            distributed.shard_over_batch(mesh, x), pool_flat, eval_idx,
+            init_idx)
+        pool = Pool(idx=pool_flat.reshape(restarts, m), weights=weights,
+                    d=None, eval_idx=eval_idx)
+    else:
+        pool = build_pool(key_b, x, m, restarts, eval_m=eval_m,
+                          variant=variant, metric=metric, backend=backend,
+                          chunk_size=chunk_size, block_dtype=block_dtype)
+        results = solve_restarts(pool.d, init_idx, max_swaps=max_swaps,
+                                 eps=eps, backend=backend)
+        best_r, evals = elect(x, results.medoid_idx, pool.eval_idx,
+                              metric=metric, backend=backend,
+                              chunk_size=chunk_size, block_dtype=block_dtype)
+
+    best = jax.tree.map(lambda a: a[best_r], results)
+    return RestartResult(best=best, best_restart=best_r,
+                         eval_objectives=evals, results=results), pool

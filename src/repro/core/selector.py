@@ -36,20 +36,50 @@ class MedoidSelector:
     chunk_size: int | None = None
     block_dtype: str | None = None
     mesh: object = None
+    # Multi-restart knobs (DESIGN.md §2a): restarts > 1 runs R vmapped
+    # local searches on a pooled column sample and elects the winner on a
+    # held-out eval batch of eval_m columns (defaults to m). restarts=1
+    # is the original single-restart trajectory, bit for bit.
+    restarts: int = 1
+    eval_m: int | None = None
 
     medoid_indices_: np.ndarray | None = None
     medoids_: np.ndarray | None = None
     est_objective_: float | None = None
     n_swaps_: int | None = None
+    best_restart_: int | None = None
+    eval_objectives_: np.ndarray | None = None
 
     def fit(self, x) -> "MedoidSelector":
         x = jnp.asarray(x)
-        res, _ = solver.one_batch_pam(
-            jax.random.PRNGKey(self.seed), x, self.k, m=self.m,
-            variant=self.variant, metric=self.metric, strategy=self.strategy,
-            max_swaps=self.max_swaps, backend=self.backend,
-            chunk_size=self.chunk_size, block_dtype=self.block_dtype,
-            mesh=self.mesh)
+        if self.restarts > 1:
+            if self.strategy != "batched":
+                # Same contract as solver.one_batch_pam: the restart
+                # engine is the vmapped batched sweep only.
+                raise ValueError(
+                    "restarts > 1 supports strategy='batched' only")
+            from repro.core import restarts as restarts_mod
+            n = x.shape[0]
+            m = self.m
+            if m is not None:
+                m = min(m, max(n // self.restarts, 1))
+            rr, _ = restarts_mod.one_batch_pam_restarts(
+                jax.random.PRNGKey(self.seed), x, self.k,
+                restarts=self.restarts, m=m, eval_m=self.eval_m,
+                variant=self.variant, metric=self.metric,
+                max_swaps=self.max_swaps, backend=self.backend,
+                chunk_size=self.chunk_size, block_dtype=self.block_dtype,
+                mesh=self.mesh)
+            res = rr.best
+            self.best_restart_ = int(rr.best_restart)
+            self.eval_objectives_ = np.asarray(rr.eval_objectives)
+        else:
+            res, _ = solver.one_batch_pam(
+                jax.random.PRNGKey(self.seed), x, self.k, m=self.m,
+                variant=self.variant, metric=self.metric,
+                strategy=self.strategy, max_swaps=self.max_swaps,
+                backend=self.backend, chunk_size=self.chunk_size,
+                block_dtype=self.block_dtype, mesh=self.mesh)
         self.medoid_indices_ = np.asarray(res.medoid_idx)
         self.medoids_ = np.asarray(x[res.medoid_idx])
         self.est_objective_ = float(res.est_objective)

@@ -129,6 +129,61 @@ def _apply_swap(state: _State, d: jnp.ndarray, i: jnp.ndarray, l: jnp.ndarray) -
                   med_rows, d1, d2, near, near2, state.t + 1, state.done)
 
 
+def _fused_step(d: jnp.ndarray, state: _State, *, eps: float = 0.0,
+                backend: str = "auto"):
+    """One fused steepest-descent step: swap-select sweep + incremental
+    repair. Returns ``(new_state, improved, best_gain, i, l)`` — the exact
+    float sequence of :func:`solve_batched`'s loop body, factored out so
+    ``core/trace.py`` can replay the trajectory swap for swap (the caller
+    applies ``new_state`` only when ``improved``)."""
+    n, _ = d.shape
+    k = state.medoid_idx.shape[0]
+    nh = jax.nn.one_hot(state.near, k, dtype=jnp.float32)
+    # Current medoids are not swap candidates: O(n) mask instead of the
+    # former O(nk) scatter into the materialised gain matrix.
+    row_mask = jnp.ones((n,), jnp.float32).at[state.medoid_idx].set(0.0)
+    best, i, l = ops.swap_select(d, state.d1, state.d2, nh,
+                                 row_mask=row_mask, backend=backend)
+    improved = best > eps * jnp.sum(state.d1)
+    r = d[i].astype(jnp.float32)
+    med_rows, d1, d2, near, near2 = _repair_top2(
+        state.med_rows, state.d1, state.d2, state.near, state.near2, r, l)
+    new_state = _State(state.medoid_idx.at[l].set(i.astype(jnp.int32)),
+                       med_rows, d1, d2, near, near2,
+                       state.t + 1, state.done)
+    return new_state, improved, best, i, l
+
+
+def _eager_pass(d: jnp.ndarray, state: _State, *, eps: float = 0.0):
+    """One full first-improvement pass over all n candidates (Algorithm 2).
+
+    Returns ``(state, swapped, do_swap (n,), slots (n,))`` — the last two
+    record, per candidate index, whether it was swapped in and into which
+    slot, so ``core/trace.py`` recovers the swap sequence from the same
+    scan :func:`solve_eager` runs (identical floats by construction)."""
+    n, _ = d.shape
+    k = state.medoid_idx.shape[0]
+
+    def candidate_step(carry, i):
+        state, swapped = carry
+        row = d[i].astype(jnp.float32)                        # (m,)
+        g = jnp.sum(jnp.maximum(state.d1 - row, 0.0))
+        r = state.d1 - jnp.minimum(jnp.maximum(row, state.d1), state.d2)
+        big_r = jnp.zeros((k,), jnp.float32).at[state.near].add(r)
+        l = jnp.argmax(big_r)
+        gain = g + big_r[l]
+        is_medoid = jnp.any(state.medoid_idx == i)
+        do_swap = jnp.logical_and(gain > eps * jnp.sum(state.d1), ~is_medoid)
+        new_state = _apply_swap(state, d, i.astype(jnp.int32), l)
+        state = jax.tree.map(lambda a, b: jnp.where(do_swap, a, b),
+                             new_state, state)
+        return (state, jnp.logical_or(swapped, do_swap)), (do_swap, l)
+
+    (state, swapped), (flags, slots) = jax.lax.scan(
+        candidate_step, (state, jnp.bool_(False)), jnp.arange(n))
+    return state, swapped, flags, slots
+
+
 @functools.partial(jax.jit, static_argnames=("max_swaps", "backend"))
 def solve_batched(
     d: jnp.ndarray,            # (n, m) weighted distance block (f32 or bf16)
@@ -145,27 +200,14 @@ def solve_batched(
     incremental ``_repair_top2`` state update for the accepted swap.
     Bit-for-bit the same swaps as :func:`solve_batched_naive`.
     """
-    n, m = d.shape
-    k = init_idx.shape[0]
     state = _init_state(d, init_idx)
 
     def cond(state):
         return jnp.logical_and(~state.done, state.t < max_swaps)
 
     def body(state):
-        nh = jax.nn.one_hot(state.near, k, dtype=jnp.float32)
-        # Current medoids are not swap candidates: O(n) mask instead of the
-        # former O(nk) scatter into the materialised gain matrix.
-        row_mask = jnp.ones((n,), jnp.float32).at[state.medoid_idx].set(0.0)
-        best, i, l = ops.swap_select(d, state.d1, state.d2, nh,
-                                     row_mask=row_mask, backend=backend)
-        improved = best > eps * jnp.sum(state.d1)
-        r = d[i].astype(jnp.float32)
-        med_rows, d1, d2, near, near2 = _repair_top2(
-            state.med_rows, state.d1, state.d2, state.near, state.near2, r, l)
-        new_state = _State(state.medoid_idx.at[l].set(i.astype(jnp.int32)),
-                           med_rows, d1, d2, near, near2,
-                           state.t + 1, state.done)
+        new_state, improved, _, _, _ = _fused_step(d, state, eps=eps,
+                                                   backend=backend)
         return jax.tree.map(
             lambda a, b: jnp.where(improved, a, b), new_state,
             state._replace(done=jnp.bool_(True)))
@@ -233,28 +275,11 @@ def solve_eager(
     paper ships; kept as the validation baseline. Backend-free: gains are
     evaluated in pure jnp, so there is no ``backend=`` knob here.
     """
-    n, m = d.shape
-    k = init_idx.shape[0]
     state0 = _init_state(d, init_idx)
-
-    def candidate_step(i, carry):
-        state, swapped = carry
-        row = d[i].astype(jnp.float32)                        # (m,)
-        g = jnp.sum(jnp.maximum(state.d1 - row, 0.0))
-        r = state.d1 - jnp.minimum(jnp.maximum(row, state.d1), state.d2)
-        big_r = jnp.zeros((k,), jnp.float32).at[state.near].add(r)
-        l = jnp.argmax(big_r)
-        gain = g + big_r[l]
-        is_medoid = jnp.any(state.medoid_idx == i)
-        do_swap = jnp.logical_and(gain > eps * jnp.sum(state.d1), ~is_medoid)
-        new_state = _apply_swap(state, d, jnp.int32(i), l)
-        state = jax.tree.map(lambda a, b: jnp.where(do_swap, a, b), new_state, state)
-        return state, jnp.logical_or(swapped, do_swap)
 
     def pass_body(carry):
         state, p = carry
-        state, swapped = jax.lax.fori_loop(
-            0, n, candidate_step, (state, jnp.bool_(False)))
+        state, swapped, _, _ = _eager_pass(d, state, eps=eps)
         return state._replace(done=~swapped), p + 1
 
     def pass_cond(carry):
@@ -295,6 +320,8 @@ def one_batch_pam(
     chunk_size: int | None = None,
     block_dtype: str | jnp.dtype | None = None,
     mesh=None,
+    restarts: int = 1,
+    eval_m: int | None = None,
 ) -> tuple[SolveResult, sampling.Batch]:
     """End-to-end OneBatchPAM (Algorithm 1).
 
@@ -308,10 +335,33 @@ def one_batch_pam(
     axes and runs the whole batch build + swap sweep data-parallel under
     shard_map (DESIGN.md §5); the returned batch then has ``d=None`` since
     the block only ever exists shard-wise on the devices.
+    ``restarts=R > 1`` runs R independent local searches as one vmapped
+    program over a pooled R·m column sample and elects the winner on a
+    held-out evaluation batch of ``eval_m`` columns (core/restarts.py,
+    DESIGN.md §2a); the returned batch is the *winning* restart's slice of
+    the pool. ``restarts=1`` (the default) is the original single-restart
+    trajectory, bit for bit — same key splits, same draws, same sweep —
+    and ``eval_m`` is ignored (there is nothing to elect).
     """
     n = x.shape[0]
     m = m if m is not None else sampling.default_batch_size(n, k)
     m = min(m, n)
+    if restarts < 1:
+        raise ValueError(f"restarts must be >= 1, got {restarts}")
+    if restarts > 1:
+        from repro.core import restarts as restarts_mod
+        if strategy != "batched":
+            raise ValueError("restarts > 1 supports strategy='batched' only")
+        rr, pool = restarts_mod.one_batch_pam_restarts(
+            key, x, k, restarts=restarts, m=min(m, max(n // restarts, 1)),
+            eval_m=eval_m, variant=variant, metric=metric,
+            max_swaps=max_swaps, eps=eps, backend=backend,
+            chunk_size=chunk_size, block_dtype=block_dtype, mesh=mesh)
+        r = rr.best_restart
+        d_best = None if pool.d is None else pool.d[r]
+        return rr.best, sampling.Batch(idx=pool.idx[r],
+                                       weights=pool.weights[r], d=d_best)
+
     key_b, key_i = jax.random.split(key)
     init_idx = jax.random.choice(key_i, n, shape=(k,), replace=False)
 

@@ -52,7 +52,8 @@ from repro.kernels import metrics, ops
 class StreamedBlock(NamedTuple):
     """Result of one streaming sweep over the n axis."""
     d: jnp.ndarray          # (n, m) distance block (post-transformed)
-    nn_counts: jnp.ndarray  # (m,) f32 count of rows whose argmin is column j
+    nn_counts: jnp.ndarray  # (m,) f32 count of rows whose (within-group)
+    #                         argmin is column j (see count_groups)
 
 
 def _check_chunk(chunk_size: int | None) -> None:
@@ -86,6 +87,7 @@ def stream_block(
     backend: str = "auto",
     chunk_size: int | None = None,
     count_nn: bool = False,
+    count_groups: int = 1,
     raw: bool = False,
     block_dtype: str | jnp.dtype | None = None,
 ) -> StreamedBlock:
@@ -94,6 +96,13 @@ def stream_block(
     With ``count_nn`` the per-chunk argmin feeds a scatter-add into the
     (m,) nearest-neighbour histogram inside the same sweep — the nniw
     weights come out of the sweep for free (DESIGN.md §4).
+
+    ``count_groups=R`` treats the m columns as R contiguous groups of
+    m/R (the multi-restart pooled batch, DESIGN.md §2a): the argmin is
+    taken *within each group*, so one sweep over x produces all R
+    per-restart nearest-neighbour histograms at once. The output keeps
+    the (m,) layout — counts for group r live in ``nn_counts[r*mg:(r+1)*mg]``
+    — and ``count_groups=1`` is exactly the old whole-row argmin.
 
     ``raw=True`` returns the metric's pre-``post`` accumulator instead of
     distances (see ops.pairwise_raw): the distributed path reduces raw
@@ -118,6 +127,9 @@ def stream_block(
     _check_chunk(chunk_size)
     n = x.shape[0]
     m = b.shape[0]
+    if count_groups < 1 or m % count_groups:
+        raise ValueError(
+            f"count_groups={count_groups} must be >= 1 and divide m={m}")
     spec = metrics.get(metric)
 
     def pair(xi, bi):
@@ -127,6 +139,21 @@ def stream_block(
 
     def cast(di):
         return di if block_dtype is None else di.astype(block_dtype)
+
+    def nn_hist(di, vi):
+        """Per-group argmin scatter-add for one chunk's f32 distances.
+
+        Grouped argmin over the (rows, R, m/R) view — identical indices to
+        the whole-row argmin when count_groups == 1 — then one flat
+        scatter-add; padded-tail rows are masked by ``vi``.
+        """
+        rows = di.shape[0]
+        mg = m // count_groups
+        win = jnp.argmin(di.reshape(rows, count_groups, mg), axis=2)
+        flat = win + (jnp.arange(count_groups) * mg)[None, :]
+        vals = jnp.broadcast_to(vi.astype(jnp.float32)[:, None], win.shape)
+        return jnp.zeros((m,), jnp.float32).at[flat.reshape(-1)].add(
+            vals.reshape(-1))
 
     # Apply the metric's row transform once, outside the chunk loop: it is
     # row-local (chunking cannot change it) and b is loop-invariant, so
@@ -138,7 +165,7 @@ def stream_block(
     if chunk_size is None or chunk_size >= n:
         d = pair(x, b)
         if count_nn:
-            counts = jnp.zeros((m,), jnp.float32).at[jnp.argmin(d, axis=1)].add(1.0)
+            counts = nn_hist(d, jnp.ones((n,), jnp.float32))
         else:
             counts = jnp.zeros((m,), jnp.float32)
         return StreamedBlock(d=cast(d), nn_counts=counts)
@@ -149,8 +176,7 @@ def stream_block(
         xi, vi = args
         di = pair(xi, b)
         if count_nn:
-            ci = jnp.zeros((m,), jnp.float32).at[jnp.argmin(di, axis=1)].add(
-                vi.astype(jnp.float32))
+            ci = nn_hist(di, vi)
         else:
             ci = jnp.zeros((m,), jnp.float32)
         # Cast inside the sweep so the stacked output (the resident block)

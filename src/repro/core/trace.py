@@ -1,0 +1,105 @@
+"""Swap-trajectory tracing: the solvers' decisions, one swap at a time.
+
+The solvers run whole local searches inside one ``lax.while_loop`` — fast,
+but opaque: only the final state comes back. The differential and
+golden-trajectory suites (tests/test_differential.py,
+tests/test_golden_trajectory.py) need the *sequence* of swap decisions to
+pin cross-implementation equivalence swap for swap. This module replays
+the exact loop bodies step by step from the host:
+
+  * :func:`trace_batched` drives ``solver._fused_step`` — the literal
+    body of ``solve_batched`` (same swap-select kernel call, same
+    incremental repair, same acceptance comparison evaluated inside the
+    jitted step) — so the recorded trajectory is bit-for-bit the
+    while_loop's.
+  * :func:`trace_eager` drives ``solver._eager_pass`` — the literal
+    per-pass candidate scan of ``solve_eager`` — and reads the recorded
+    (do_swap, slot) lanes back.
+
+Tracing is a test/debug tool: O(1 jit dispatch per swap) host overhead
+makes it slower than the fused loops; production callers want
+``solve_batched``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import solver
+
+
+class Trajectory(NamedTuple):
+    """A traced local search: the swap sequence plus the final result."""
+    swaps: tuple[tuple[int, int], ...]  # ((candidate i, slot l), ...)
+    gains: tuple[float, ...]            # accepted gain per swap (batched only)
+    result: solver.SolveResult          # identical to the solver's return
+
+
+@functools.lru_cache(maxsize=64)
+def _jit_fused_step(eps: float, backend: str):
+    return jax.jit(functools.partial(solver._fused_step, eps=eps,
+                                     backend=backend))
+
+
+@functools.lru_cache(maxsize=64)
+def _jit_eager_pass(eps: float):
+    return jax.jit(functools.partial(solver._eager_pass, eps=eps))
+
+
+def trace_batched(d, init_idx, *, max_swaps: int = 500, eps: float = 0.0,
+                  backend: str = "auto") -> Trajectory:
+    """Replay ``solve_batched`` recording every accepted (i, l, gain).
+
+    Matches :func:`solver.solve_batched` exactly — medoids, swap count,
+    objective, convergence flag — because each step *is* the solver's
+    loop body (``_fused_step``), acceptance decided inside the jitted
+    step on the same floats.
+    """
+    d = jnp.asarray(d)
+    state = solver._init_state(d, jnp.asarray(init_idx))
+    step = _jit_fused_step(eps, backend)
+    swaps: list[tuple[int, int]] = []
+    gains: list[float] = []
+    converged = False
+    while len(swaps) < max_swaps:
+        new_state, improved, best, i, l = step(d, state)
+        if not bool(improved):
+            converged = True
+            break
+        swaps.append((int(i), int(l)))
+        gains.append(float(best))
+        state = new_state
+    result = solver.SolveResult(state.medoid_idx, jnp.int32(len(swaps)),
+                                jnp.mean(state.d1), jnp.bool_(converged))
+    return Trajectory(tuple(swaps), tuple(gains), result)
+
+
+def trace_eager(d, init_idx, *, max_passes: int = 8,
+                eps: float = 0.0) -> Trajectory:
+    """Replay ``solve_eager`` recording every first-improvement swap.
+
+    Each pass is :func:`solver._eager_pass` — the identical candidate
+    scan ``solve_eager`` runs — with the per-candidate (do_swap, slot)
+    lanes read back and compacted into the swap sequence.
+    """
+    d = jnp.asarray(d)
+    state = solver._init_state(d, jnp.asarray(init_idx))
+    scan = _jit_eager_pass(eps)
+    swaps: list[tuple[int, int]] = []
+    converged = False
+    for _ in range(max_passes):
+        state, swapped, flags, slots = scan(d, state)
+        flags = np.asarray(flags)
+        slots = np.asarray(slots)
+        for i in np.nonzero(flags)[0]:
+            swaps.append((int(i), int(slots[i])))
+        if not bool(swapped):
+            converged = True
+            break
+    result = solver.SolveResult(state.medoid_idx, state.t,
+                                jnp.mean(state.d1), jnp.bool_(converged))
+    return Trajectory(tuple(swaps), (), result)

@@ -138,6 +138,14 @@ def swap_select(
     maxima keeps the first-tile tie-break, so the composition equals the
     global first-flat-index argmax). ``d`` may be bf16 (DESIGN.md §2);
     accumulation is always f32.
+
+    vmap-safe on every backend: the multi-restart engine
+    (core/restarts.py, DESIGN.md §2a) maps the whole fused sweep over a
+    leading restart axis — the ref oracle batches as plain jnp, the
+    Pallas kernel through ``pallas_call``'s batching rule (one extra
+    grid dimension) — and each lane's selection stays bit-for-bit the
+    unbatched call's (tests/test_restarts.py pins it on ref and
+    interpret).
     """
     from . import ref
 

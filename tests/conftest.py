@@ -1,0 +1,26 @@
+"""Shared test configuration.
+
+Registers hypothesis profiles so CI is deterministic (ISSUE 3):
+
+  * ``ci``  — >= 50 examples per test, derandomized (fixed example
+    sequence — no flaky shrink paths, reruns are reproducible),
+    deadline=None (JIT compilation makes first examples slow).
+    Selected in .github/workflows/ci.yml via HYPOTHESIS_PROFILE=ci.
+  * ``dev`` — the local default: fewer examples, still no deadline.
+
+hypothesis stays optional (requirements-dev.txt): without it the
+property tests skip via the guarded imports in the test modules and this
+conftest is a no-op.
+"""
+import os
+
+try:
+    from hypothesis import settings
+except ImportError:
+    settings = None
+
+if settings is not None:
+    settings.register_profile("ci", max_examples=60, derandomize=True,
+                              deadline=None, print_blob=True)
+    settings.register_profile("dev", max_examples=20, deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))

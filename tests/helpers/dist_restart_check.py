@@ -1,0 +1,80 @@
+"""Run in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=2.
+
+Pins the distributed multi-restart path (restart axis composed with the
+shard axis, DESIGN.md §2a/§5) bit-for-bit against the host engine
+(core/restarts.py) on the same draws: per-restart medoid arrays
+(slot-exact), swap counts, batch objectives, nniw weights, held-out
+election scores, and the elected winner — for plain f32, debias, and
+bf16 pooled blocks — plus the one_batch_pam(restarts=, mesh=) wiring.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distributed, restarts, solver
+
+
+def check(variant, block_dtype, tag):
+    n, p, k, R, m = 240, 5, 4, 3, 20
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+    key = jax.random.PRNGKey(11)
+
+    host_rr, host_pool = restarts.one_batch_pam_restarts(
+        key, x, k, restarts=R, m=m, variant=variant, metric="l1",
+        backend="ref", block_dtype=block_dtype)
+
+    mesh = jax.make_mesh((2,), ("data",))
+    mesh_rr, mesh_pool = restarts.one_batch_pam_restarts(
+        key, x, k, restarts=R, m=m, variant=variant, metric="l1",
+        backend="ref", block_dtype=block_dtype, mesh=mesh)
+
+    np.testing.assert_array_equal(np.asarray(host_pool.idx),
+                                  np.asarray(mesh_pool.idx))
+    np.testing.assert_array_equal(np.asarray(host_pool.eval_idx),
+                                  np.asarray(mesh_pool.eval_idx))
+    np.testing.assert_array_equal(np.asarray(host_pool.weights),
+                                  np.asarray(mesh_pool.weights))
+    np.testing.assert_array_equal(np.asarray(host_rr.results.medoid_idx),
+                                  np.asarray(mesh_rr.results.medoid_idx))
+    np.testing.assert_array_equal(np.asarray(host_rr.results.n_swaps),
+                                  np.asarray(mesh_rr.results.n_swaps))
+    np.testing.assert_array_equal(
+        np.float32(np.asarray(host_rr.results.est_objective)),
+        np.float32(np.asarray(mesh_rr.results.est_objective)))
+    np.testing.assert_array_equal(
+        np.float32(np.asarray(host_rr.eval_objectives)),
+        np.float32(np.asarray(mesh_rr.eval_objectives)))
+    assert int(host_rr.best_restart) == int(mesh_rr.best_restart)
+    print(f"OK {tag}")
+
+
+def check_public_wiring():
+    """one_batch_pam(restarts=, mesh=) == one_batch_pam(restarts=) bitwise."""
+    n, p, k = 160, 4, 3
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+    key = jax.random.PRNGKey(5)
+    host_res, host_batch = solver.one_batch_pam(
+        key, x, k, m=16, restarts=4, variant="nniw", backend="ref")
+    mesh = jax.make_mesh((2,), ("data",))
+    mesh_res, mesh_batch = solver.one_batch_pam(
+        key, x, k, m=16, restarts=4, variant="nniw", backend="ref",
+        mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(host_res.medoid_idx),
+                                  np.asarray(mesh_res.medoid_idx))
+    np.testing.assert_array_equal(np.asarray(host_batch.idx),
+                                  np.asarray(mesh_batch.idx))
+    np.testing.assert_array_equal(np.asarray(host_batch.weights),
+                                  np.asarray(mesh_batch.weights))
+    assert mesh_batch.d is None and host_batch.d is not None
+    print("OK one_batch_pam restarts mesh path")
+
+
+if __name__ == "__main__":
+    assert jax.device_count() == 2, jax.device_count()
+    check("nniw", None, "nniw")
+    check("debias", None, "debias")
+    check("unif", "bfloat16", "bf16")
+    check_public_wiring()
+    distributed.make_distributed_obp_restarts.cache_clear()

@@ -47,6 +47,18 @@ def test_fused_sharded_sweep_bitwise_matches_single_device():
         assert f"OK {case}" in out
 
 
+def test_restart_axis_composes_with_shard_axis_bitwise():
+    """Vmapped multi-restart sweep under shard_map (per-shard fused
+    partials per restart, one-psum election) == the host restart engine,
+    bit-for-bit on the same draws — per-restart medoids, swap counts,
+    objectives, nniw weights, election scores, elected winner — on plain,
+    debias, and bf16 pooled blocks, 2 devices (ISSUE 3)."""
+    out = _run("dist_restart_check.py", devices=2)
+    for case in ("nniw", "debias", "bf16"):
+        assert f"OK {case}" in out
+    assert "OK one_batch_pam restarts mesh path" in out
+
+
 def test_compressed_crosspod_psum():
     out = _run("dist_compression_check.py")
     assert "one-shot ok" in out

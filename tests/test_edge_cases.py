@@ -1,0 +1,141 @@
+"""Edge-case coverage (ISSUE 3): degenerate shapes and data the paper's
+pseudocode glosses over — k=1, m=n, m>n requests, duplicate points,
+all-equal rows — plus the `_repair_top2` hard-column fallback,
+`default_batch_size` floors, and MedoidSelector lifecycle errors."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sampling, solver
+from repro.core.selector import MedoidSelector
+from repro.kernels import ops
+
+
+def _x(seed=0, n=80, p=4):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+
+
+# ---------------------------------------------------------------- k = 1 --
+
+def test_k1_solver_picks_the_medoid_minimising_row_sums():
+    """k=1 exercises the no-second-medoid path: d2 is the BIG sentinel
+    everywhere, removal corrections vanish, and steepest descent must
+    land on the 1-medoid optimum of the batch estimate in one swap."""
+    x = _x(1, n=60)
+    d = ops.pairwise_distance(x, x, metric="l1")
+    init = jnp.asarray([7])
+    res = solver.solve_batched(d, init)
+    want = int(np.asarray(jnp.sum(d, axis=1)).argmin())
+    assert int(res.medoid_idx[0]) == want
+    assert bool(res.converged)
+
+
+def test_k1_end_to_end_all_strategies():
+    x = _x(2, n=50)
+    for strategy in ("batched", "eager"):
+        res, _ = solver.one_batch_pam(jax.random.PRNGKey(0), x, 1, m=20,
+                                      strategy=strategy)
+        assert res.medoid_idx.shape == (1,)
+        assert 0 <= int(res.medoid_idx[0]) < 50
+
+
+def test_repair_top2_k1_hard_column():
+    """With k=1 every swap makes every column 'hard' (the removed slot is
+    always the top-1 and there is no second) — the fallback must keep
+    d2 at the BIG sentinel, not invent a finite second distance."""
+    rows = jnp.asarray(np.random.default_rng(3).uniform(
+        1.0, 2.0, (1, 7)).astype(np.float32))
+    d1, d2, near, near2 = solver._top2(rows)
+    assert (np.asarray(d2) >= 1e29).all()
+    r = jnp.asarray(np.full(7, 5.0, np.float32))  # worse row: d2 path taken
+    _, rd1, rd2, rnear, _ = solver._repair_top2(rows, d1, d2, near, near2,
+                                                r, jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(rd1), np.asarray(r))
+    assert (np.asarray(rd2) >= 1e29).all()
+
+
+# ------------------------------------------------------- m = n and m > n --
+
+def test_m_equals_n_matches_full_matrix_solve():
+    x = _x(4, n=40)
+    key = jax.random.PRNGKey(1)
+    res, batch = solver.one_batch_pam(key, x, 4, m=40, variant="unif")
+    assert batch.idx.shape == (40,)
+    assert len(np.unique(np.asarray(batch.idx))) == 40  # all of X, permuted
+    assert len(np.unique(np.asarray(res.medoid_idx))) == 4
+
+
+def test_m_request_larger_than_n_is_clamped():
+    x = _x(5, n=30)
+    res, batch = solver.one_batch_pam(jax.random.PRNGKey(0), x, 3, m=500)
+    assert batch.idx.shape == (30,)
+    assert len(np.unique(np.asarray(res.medoid_idx))) == 3
+
+
+def test_build_batch_m_larger_than_n_raises():
+    """Direct build_batch keeps the without-replacement contract explicit
+    instead of silently clamping."""
+    x = _x(6, n=10)
+    with pytest.raises(ValueError):
+        sampling.build_batch(jax.random.PRNGKey(0), x, 11)
+
+
+# ------------------------------------------- degenerate data geometries --
+
+def test_duplicate_points_keep_medoids_unique():
+    rng = np.random.default_rng(7)
+    base = rng.normal(size=(20, 4)).astype(np.float32)
+    x = jnp.asarray(np.repeat(base, 4, axis=0))      # every point x4
+    res, _ = solver.one_batch_pam(jax.random.PRNGKey(2), x, 5, m=30)
+    idx = np.asarray(res.medoid_idx)
+    assert len(np.unique(idx)) == 5, "duplicate rows must not collapse slots"
+    assert ((idx >= 0) & (idx < 80)).all()
+
+
+def test_all_equal_rows_converge_with_zero_objective():
+    """All-zero pairwise distances: every gain is 0, so no swap is ever
+    accepted and the solver must converge immediately at objective 0."""
+    x = jnp.ones((40, 3), jnp.float32) * 2.5
+    for strategy in ("batched", "eager"):
+        res, _ = solver.one_batch_pam(jax.random.PRNGKey(3), x, 3, m=10,
+                                      strategy=strategy)
+        assert int(res.n_swaps) == 0
+        assert float(res.est_objective) == 0.0
+        assert bool(res.converged)
+
+
+# ------------------------------------------------- default_batch_size ----
+
+def test_default_batch_size_floors():
+    import math
+    # The 2k+1 floor dominates once k outgrows the log term.
+    assert sampling.default_batch_size(2, 1000) == 2001
+    # n*k <= 1 is clamped to log(2), never log(<=1) = 0 (or negative).
+    assert sampling.default_batch_size(1, 1) == int(100 * math.log(2))
+    n, k = 100_000, 10
+    assert sampling.default_batch_size(n, k) == int(100 * math.log(k * n))
+    # Floors are monotone safe: always enough columns for a k-medoid
+    # top-2 state plus one candidate.
+    for k in (1, 2, 5, 17, 400):
+        assert sampling.default_batch_size(3, k) >= 2 * k + 1
+
+
+# ----------------------------------------------------- selector lifecycle --
+
+def test_selector_predict_and_objective_before_fit_raise():
+    sel = MedoidSelector(k=3)
+    with pytest.raises(RuntimeError, match="fit"):
+        sel.predict(np.zeros((5, 2), np.float32))
+    with pytest.raises(RuntimeError, match="fit"):
+        sel.objective(np.zeros((5, 2), np.float32))
+
+
+def test_selector_predict_after_fit_covers_new_points():
+    x = np.asarray(_x(8, n=90))
+    sel = MedoidSelector(k=4, seed=0).fit(x)
+    fresh = np.asarray(_x(9, n=25))
+    labels = sel.predict(fresh)
+    assert labels.shape == (25,)
+    assert set(np.unique(labels)) <= set(range(4))

@@ -1,0 +1,56 @@
+"""Golden-trajectory regression suite (ISSUE 3): seeded instances with
+committed swap sequences. A kernel or solver refactor that changes any
+swap decision — even one that lands on an equally good optimum — fails
+here loudly instead of drifting silently.
+
+Instances live on dyadic grids with power-of-two row counts, so every
+sum and mean the solvers form is exact in f32: the committed numbers are
+environment-independent, and comparisons are exact (==), not allclose.
+Regenerate deliberately with tools/make_golden_trajectories.py and
+commit the diff alongside the intended trajectory change.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import trace
+from tools.make_golden_trajectories import e2e_instance, matrix_instance
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "trajectories.json"
+CASES = json.loads(GOLDEN.read_text())["cases"]
+
+
+def _assert_matches(tr, want, name):
+    got_swaps = [list(s) for s in tr.swaps]
+    assert got_swaps == want["swaps"], (
+        f"{name}: swap sequence changed — if intended, regenerate with "
+        "tools/make_golden_trajectories.py and commit the diff")
+    np.testing.assert_array_equal(np.asarray(tr.result.medoid_idx),
+                                  np.asarray(want["medoids"]))
+    assert int(tr.result.n_swaps) == want["n_swaps"]
+    # Exact: dyadic grid + power-of-two divisor => no rounding anywhere.
+    assert float(tr.result.est_objective) == want["objective"], name
+    assert bool(tr.result.converged) == want["converged"]
+
+
+@pytest.mark.parametrize("case", CASES, ids=[c["name"] for c in CASES])
+def test_golden_trajectory(case):
+    if case["kind"] == "matrix":
+        d, init = matrix_instance(case["spec"])
+    else:
+        d, init = e2e_instance(case["spec"])
+    np.testing.assert_array_equal(np.asarray(init), case["init"])
+    _assert_matches(trace.trace_batched(d, init, backend="ref"),
+                    case["batched"], case["name"])
+    if "eager" in case:
+        _assert_matches(trace.trace_eager(d, init), case["eager"],
+                        case["name"])
+
+
+def test_golden_fixture_is_sane():
+    assert len(CASES) >= 5
+    for c in CASES:
+        assert c["batched"]["n_swaps"] == len(c["batched"]["swaps"]) > 0, (
+            f"{c['name']} must exercise at least one swap")

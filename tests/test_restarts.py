@@ -1,0 +1,218 @@
+"""Multi-restart engine (ISSUE 3 tentpole): pooled sampling, vmapped
+fused sweeps, held-out election — and the restarts=1 bit-for-bit pin."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import restarts, sampling, solver
+
+
+def _data(seed=0, n=300, p=6):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+
+
+# ------------------------------------------------------- restarts=1 pin --
+
+def test_restarts_1_is_bitwise_todays_trajectory():
+    """one_batch_pam(restarts=1) must replay the historical single-restart
+    path exactly: same key splits, same build_batch draw, same fused
+    sweep — medoids, swap count, objective, batch, all bit-for-bit."""
+    x = _data(1)
+    key = jax.random.PRNGKey(7)
+    res, batch = solver.one_batch_pam(key, x, 5, m=40, restarts=1)
+
+    # The documented historical trajectory, reconstructed by hand.
+    key_b, key_i = jax.random.split(key)
+    init = jax.random.choice(key_i, x.shape[0], shape=(5,), replace=False)
+    want_batch = sampling.build_batch(key_b, x, 40, variant="nniw")
+    want = solver.solve_batched(want_batch.d, init)
+
+    np.testing.assert_array_equal(np.asarray(batch.idx),
+                                  np.asarray(want_batch.idx))
+    np.testing.assert_array_equal(np.asarray(batch.d), np.asarray(want_batch.d))
+    np.testing.assert_array_equal(np.asarray(res.medoid_idx),
+                                  np.asarray(want.medoid_idx))
+    assert int(res.n_swaps) == int(want.n_swaps)
+    np.testing.assert_array_equal(np.float32(res.est_objective),
+                                  np.float32(want.est_objective))
+
+
+# ------------------------------------------------------- vmapped solve --
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_vmapped_lanes_equal_per_slice_solve_batched(backend):
+    """Every lane of the vmapped sweep must be bit-for-bit the unbatched
+    fused solver on that restart's (n, m) slice."""
+    x = _data(2, n=220)
+    key = jax.random.PRNGKey(0)
+    R, k, m = 3, 4, 18
+    pool = restarts.build_pool(key, x, m, R, variant="nniw", backend=backend)
+    init = restarts._init_draws(jax.random.PRNGKey(1), x.shape[0], k, R)
+    batched = restarts.solve_restarts(pool.d, init, backend=backend)
+    for r in range(R):
+        single = solver.solve_batched(pool.d[r], init[r], backend=backend)
+        np.testing.assert_array_equal(np.asarray(batched.medoid_idx[r]),
+                                      np.asarray(single.medoid_idx))
+        assert int(batched.n_swaps[r]) == int(single.n_swaps)
+        np.testing.assert_array_equal(np.float32(batched.est_objective[r]),
+                                      np.float32(single.est_objective))
+        assert bool(batched.converged[r]) == bool(single.converged)
+
+
+# ----------------------------------------------------------- pool build --
+
+def test_pooled_nniw_counts_match_per_slice_argmin():
+    """Grouped count fusion: restart r's histogram == the direct argmin
+    count over that restart's own m columns (f32 distances)."""
+    x = _data(3, n=150, p=4)
+    R, m = 4, 12
+    pool = restarts.build_pool(jax.random.PRNGKey(2), x, m, R, variant="nniw")
+    from repro.kernels import ops
+    for r in range(R):
+        d_raw = ops.pairwise_distance(x, x[pool.idx[r]], metric="l1")
+        counts = np.bincount(np.asarray(jnp.argmin(d_raw, axis=1)),
+                             minlength=m)
+        np.testing.assert_allclose(np.asarray(pool.weights[r]),
+                                   counts * m / x.shape[0], rtol=1e-6)
+
+
+def test_pool_columns_disjoint_and_eval_held_out():
+    x = _data(4, n=200)
+    R, m, eval_m = 3, 20, 30
+    pool = restarts.build_pool(jax.random.PRNGKey(3), x, m, R,
+                               eval_m=eval_m, variant="unif")
+    flat = np.asarray(pool.idx).reshape(-1)
+    assert len(np.unique(flat)) == R * m, "pool must be without replacement"
+    ev = np.asarray(pool.eval_idx)
+    assert len(np.unique(ev)) == eval_m
+    assert not set(ev) & set(flat), "eval batch must be held out"
+
+
+def test_pool_debias_diagonal_and_variant_invariants():
+    x = _data(5, n=120, p=4)
+    R, m = 2, 10
+    pool = restarts.build_pool(jax.random.PRNGKey(4), x, m, R,
+                               variant="debias")
+    d = np.asarray(pool.d)     # (R, n, m)
+    idx = np.asarray(pool.idx)
+    for r in range(R):
+        diag = d[r][idx[r], np.arange(m)]
+        assert (diag >= 1e14).all(), "per-restart self-distances must be LARGE"
+    np.testing.assert_allclose(np.asarray(pool.weights), 1.0)
+
+
+def test_pool_lwcs_per_restart_weight_normalisation():
+    x = _data(6, n=160, p=4)
+    pool = restarts.build_pool(jax.random.PRNGKey(5), x, 12, 3,
+                               variant="lwcs")
+    w = np.asarray(pool.weights)
+    assert (w > 0).all()
+    np.testing.assert_allclose(w.mean(axis=1), 1.0, rtol=1e-5)
+
+
+def test_pool_block_dtype_narrow_and_weights_dtype_independent():
+    x = _data(7, n=140, p=4)
+    kw = dict(m=10, restarts=3, variant="nniw")
+    p32 = restarts.build_pool(jax.random.PRNGKey(6), x, kw["m"],
+                              kw["restarts"], variant=kw["variant"])
+    p16 = restarts.build_pool(jax.random.PRNGKey(6), x, kw["m"],
+                              kw["restarts"], variant=kw["variant"],
+                              block_dtype="bfloat16")
+    assert p16.d.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(p32.weights),
+                                  np.asarray(p16.weights))
+
+
+def test_pool_chunked_build_is_bitwise_one_shot():
+    x = _data(8, n=130, p=5)
+    a = restarts.build_pool(jax.random.PRNGKey(7), x, 11, 3, variant="nniw")
+    b = restarts.build_pool(jax.random.PRNGKey(7), x, 11, 3, variant="nniw",
+                            chunk_size=32)
+    np.testing.assert_array_equal(np.asarray(a.d), np.asarray(b.d))
+    np.testing.assert_array_equal(np.asarray(a.weights),
+                                  np.asarray(b.weights))
+
+
+def test_pool_too_large_raises_and_one_batch_pam_clamps():
+    x = _data(9, n=50, p=3)
+    with pytest.raises(ValueError, match="pooled sample"):
+        restarts.build_pool(jax.random.PRNGKey(0), x, 20, 4)
+    # one_batch_pam clamps m to n // restarts instead of raising.
+    res, batch = solver.one_batch_pam(jax.random.PRNGKey(0), x, 3, m=40,
+                                      restarts=4)
+    assert batch.idx.shape[0] == 50 // 4
+    assert len(np.unique(np.asarray(res.medoid_idx))) == 3
+
+
+# ------------------------------------------------------------- election --
+
+def test_election_scores_match_manual_estimator():
+    """elect()'s score for restart r == mean over eval points of the
+    distance to r's nearest medoid, computed independently in numpy."""
+    x = _data(10, n=180, p=4)
+    R, k = 3, 4
+    rng = np.random.default_rng(0)
+    med = jnp.asarray(rng.choice(180, size=(R, k), replace=False))
+    eval_idx = jnp.asarray(rng.choice(180, size=25, replace=False))
+    best_r, evals = restarts.elect(x, med, eval_idx, metric="l1")
+    xn = np.asarray(x)
+    for r in range(R):
+        d = np.abs(xn[np.asarray(eval_idx)][:, None, :]
+                   - xn[np.asarray(med[r])][None, :, :]).sum(-1)
+        np.testing.assert_allclose(float(evals[r]), d.min(1).mean(),
+                                   rtol=1e-5)
+    assert int(best_r) == int(np.argmin(np.asarray(evals)))
+
+
+def test_election_tie_breaks_to_lowest_restart():
+    x = _data(11, n=60, p=3)
+    med = jnp.asarray([[0, 1], [0, 1], [2, 3]])   # lanes 0 and 1 identical
+    eval_idx = jnp.arange(20)
+    best_r, evals = restarts.elect(x, med, eval_idx)
+    assert float(evals[0]) == float(evals[1])
+    if float(evals[0]) <= float(evals[2]):
+        assert int(best_r) == 0
+
+
+def test_multi_restart_beats_or_matches_single_restart_quality():
+    """With a large held-out eval batch, the elected R=6 medoid set's
+    exact objective must be within a hair of the best lane's exact
+    objective, and no worse than the single-restart run."""
+    rng = np.random.default_rng(12)
+    c = rng.normal(size=(6, 5)) * 4.0
+    x = jnp.asarray((c[rng.integers(0, 6, 360)]
+                     + rng.normal(size=(360, 5)) * 0.4).astype(np.float32))
+    key = jax.random.PRNGKey(9)
+    rr, pool = restarts.one_batch_pam_restarts(key, x, 6, restarts=6, m=24,
+                                               eval_m=180)
+    objs = [float(solver.objective(x, rr.results.medoid_idx[r]))
+            for r in range(6)]
+    elected = float(solver.objective(x, rr.best.medoid_idx))
+    assert elected <= min(objs) * 1.05
+    single, _ = solver.one_batch_pam(key, x, 6, m=24)
+    assert elected <= float(solver.objective(x, single.medoid_idx)) * 1.02
+
+
+def test_selector_rejects_non_batched_strategy_with_restarts():
+    """Same contract as one_batch_pam: the restart engine is the batched
+    sweep only — both entry points must refuse eager+restarts alike."""
+    from repro.core import MedoidSelector
+    x = np.zeros((30, 3), np.float32)
+    with pytest.raises(ValueError, match="batched"):
+        MedoidSelector(k=3, restarts=4, strategy="eager").fit(x)
+    with pytest.raises(ValueError, match="batched"):
+        solver.one_batch_pam(jax.random.PRNGKey(0), jnp.asarray(x), 3,
+                             restarts=4, strategy="eager")
+
+
+def test_selector_threads_restart_knobs():
+    x = np.asarray(_data(13, n=200, p=4))
+    sel = __import__("repro.core", fromlist=["MedoidSelector"]) \
+        .MedoidSelector(k=4, restarts=4, eval_m=60, seed=1).fit(x)
+    assert sel.medoid_indices_.shape == (4,)
+    assert 0 <= sel.best_restart_ < 4
+    assert sel.eval_objectives_.shape == (4,)
+    labels = sel.predict(x)
+    assert labels.shape == (200,)

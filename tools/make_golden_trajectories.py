@@ -1,0 +1,104 @@
+"""Regenerate tests/golden/trajectories.json (ISSUE 3).
+
+    PYTHONPATH=src python tools/make_golden_trajectories.py
+
+The fixtures pin the solvers' *swap decisions* on seeded instances: any
+kernel or solver refactor that silently changes a trajectory fails the
+golden suite loudly, even if the final objective barely moves. Every
+instance lives on a dyadic grid with power-of-two row counts, so all
+solver arithmetic (sums, means) is exact in f32 — the committed numbers
+are reproducible bit-for-bit across machines and jax versions, not
+accidents of summation order.
+
+Only rerun this tool when a trajectory change is *intended*; commit the
+diff together with the change that caused it.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import sampling, trace  # noqa: E402
+
+OUT = ROOT / "tests" / "golden" / "trajectories.json"
+
+# (name, spec) pairs; specs are replayed verbatim by the golden test.
+MATRIX_CASES = [
+    ("matrix_small", dict(seed=0, n=64, m=64, k=4, quant=64)),
+    ("matrix_rect", dict(seed=1, n=128, m=32, k=6, quant=64)),
+    ("matrix_ties", dict(seed=2, n=64, m=64, k=5, quant=4)),
+]
+E2E_CASES = [
+    ("e2e_nniw_l1", dict(seed=3, n=128, p=4, k=5, m=16, variant="nniw",
+                         metric="l1")),
+    ("e2e_unif_chebyshev", dict(seed=4, n=64, p=6, k=4, m=16,
+                                variant="unif", metric="chebyshev")),
+]
+
+
+def matrix_instance(spec):
+    rng = np.random.default_rng(spec["seed"])
+    d = rng.integers(0, 8 * spec["quant"],
+                     size=(spec["n"], spec["m"])).astype(np.float32)
+    d = d / np.float32(spec["quant"])
+    init = rng.choice(spec["n"], size=spec["k"], replace=False)
+    return jnp.asarray(d), jnp.asarray(init)
+
+
+def e2e_instance(spec):
+    rng = np.random.default_rng(spec["seed"])
+    x = rng.integers(0, 8, size=(spec["n"], spec["p"])).astype(np.float32)
+    batch = sampling.build_batch(jax.random.PRNGKey(spec["seed"]),
+                                 jnp.asarray(x), spec["m"],
+                                 variant=spec["variant"],
+                                 metric=spec["metric"], backend="ref")
+    init = jnp.asarray(rng.choice(spec["n"], size=spec["k"], replace=False))
+    return batch.d, init
+
+
+def record(tr):
+    return {
+        "swaps": [list(s) for s in tr.swaps],
+        "medoids": np.asarray(tr.result.medoid_idx).tolist(),
+        "n_swaps": int(tr.result.n_swaps),
+        "objective": float(tr.result.est_objective),
+        "converged": bool(tr.result.converged),
+    }
+
+
+def main():
+    cases = []
+    for name, spec in MATRIX_CASES:
+        d, init = matrix_instance(spec)
+        cases.append({
+            "name": name, "kind": "matrix", "spec": spec,
+            "init": np.asarray(init).tolist(),
+            "batched": record(trace.trace_batched(d, init, backend="ref")),
+            "eager": record(trace.trace_eager(d, init)),
+        })
+        print(f"{name}: {cases[-1]['batched']['n_swaps']} batched / "
+              f"{cases[-1]['eager']['n_swaps']} eager swaps")
+    for name, spec in E2E_CASES:
+        d, init = e2e_instance(spec)
+        cases.append({
+            "name": name, "kind": "e2e", "spec": spec,
+            "init": np.asarray(init).tolist(),
+            "batched": record(trace.trace_batched(d, init, backend="ref")),
+        })
+        print(f"{name}: {cases[-1]['batched']['n_swaps']} batched swaps")
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(json.dumps({"format": 1, "cases": cases}, indent=1)
+                   + "\n")
+    print(f"wrote {len(cases)} cases to {OUT}")
+
+
+if __name__ == "__main__":
+    main()
