@@ -7,6 +7,9 @@ batch variants with a streamed distance build, plus the distributed
     PYTHONPATH=src python examples/cluster_embeddings.py --chunk-size 8192
     # best-of-8 vmapped restarts with held-out election (DESIGN.md §2a):
     PYTHONPATH=src python examples/cluster_embeddings.py --restarts 8
+    # matrix-free sweep: the (n, m) block never exists (DESIGN.md §2b) —
+    # resident memory drops from O(n*m) to O(n*p):
+    PYTHONPATH=src python examples/cluster_embeddings.py --matrix-free
     # distributed path (8 forced host devices), n sharded over the mesh:
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/cluster_embeddings.py --distributed
@@ -24,12 +27,17 @@ from repro.data import heavy_tail
 N, P, K = 200_000, 24, 64
 
 
-def single_process(chunk_size: int | None, restarts: int = 1):
+def single_process(chunk_size: int | None, restarts: int = 1,
+                   matrix_free: bool = False):
     x = heavy_tail(N, P, seed=0)
     print(f"== OneBatchPAM variants on {N} x {P} (k={K}) ==")
     m = sampling.default_batch_size(N, K)
     print(f"batch size m = 100*log(k*n) = {m}  "
           f"({N * m:,} distance evals vs n^2 = {N * N:,})")
+    if matrix_free:
+        print(f"matrix-free: block would be {N * m * 4 / 2**20:.0f} MiB f32; "
+              f"resident instead: X = {N * P * 4 / 2**20:.0f} MiB "
+              f"(DESIGN.md §2b, swaps identical to the block path)")
     if restarts > 1:
         print(f"restarts: R={restarts} vmapped searches on one pooled "
               f"R*m column sample, held-out election (DESIGN.md §2a)")
@@ -41,9 +49,10 @@ def single_process(chunk_size: int | None, restarts: int = 1):
               f"((chunk, m) block slice = {chunk_size * m * 4 / 2**20:.0f} "
               f"MiB per chunk; CPU ref intermediates peak higher, see "
               f"DESIGN.md §7)")
+    strategy = "matrix_free" if matrix_free else "batched"
     for variant in sampling.VARIANTS:
         t0 = time.perf_counter()
-        sel = MedoidSelector(k=K, variant=variant, seed=0,
+        sel = MedoidSelector(k=K, variant=variant, seed=0, strategy=strategy,
                              chunk_size=chunk_size, restarts=restarts).fit(x)
         dt = time.perf_counter() - t0
         extra = (f" restart={sel.best_restart_}/{restarts}"
@@ -87,8 +96,10 @@ if __name__ == "__main__":
                     help="stream the n axis in row chunks of this size")
     ap.add_argument("--restarts", type=int, default=1,
                     help="vmapped multi-restart best-of-R (DESIGN.md §2a)")
+    ap.add_argument("--matrix-free", action="store_true",
+                    help="block-free fused sweep (DESIGN.md §2b)")
     args = ap.parse_args()
     if args.distributed:
         distributed(args.chunk_size)
     else:
-        single_process(args.chunk_size, args.restarts)
+        single_process(args.chunk_size, args.restarts, args.matrix_free)

@@ -13,8 +13,18 @@ Public API:
 from .restarts import Pool, RestartResult, one_batch_pam_restarts  # noqa: F401
 from .sampling import Batch, VARIANTS, build_batch, default_batch_size  # noqa: F401
 from .selector import MedoidSelector  # noqa: F401
-from .streaming import StreamedBlock, stream_assign, stream_block  # noqa: F401
-from .trace import Trajectory, trace_batched, trace_eager  # noqa: F401
+from .streaming import (  # noqa: F401
+    StreamedBlock,
+    stream_assign,
+    stream_block,
+    stream_nn_counts,
+)
+from .trace import (  # noqa: F401
+    Trajectory,
+    trace_batched,
+    trace_eager,
+    trace_matrix_free,
+)
 from .solver import (  # noqa: F401
     SolveResult,
     fasterpam,
@@ -23,4 +33,5 @@ from .solver import (  # noqa: F401
     solve_batched,
     solve_batched_naive,
     solve_eager,
+    solve_matrix_free,
 )

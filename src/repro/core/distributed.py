@@ -181,6 +181,107 @@ def solve_sharded(
     return solver.SolveResult(idx, t, jnp.mean(d1), done)
 
 
+def solve_sharded_matrix_free(
+    x_local: jnp.ndarray,      # (n_local, p) this shard's rows, PREPARED
+    b: jnp.ndarray,            # (m, p) replicated batch rows, PREPARED
+    weights: jnp.ndarray,      # (m,) replicated batch weights
+    batch_idx: jnp.ndarray,    # (m,) replicated global batch column sources
+    init_idx: jnp.ndarray,     # (k,) global indices, replicated
+    *,
+    axes: Sequence[str],
+    metric: str = "l1",
+    debias: bool = False,
+    max_swaps: int = 500,
+    eps: float = 0.0,
+    backend: str = "auto",
+    chunk_size: int | None = None,
+    axis_sizes=None,
+) -> solver.SolveResult:
+    """Matrix-free sharded sweep: no shard ever holds a distance block.
+
+    Runs inside shard_map. Each shard runs ``ops.fused_swap_select`` over
+    its local (n_local, p) rows — distance tiles recomputed on chip, one
+    (best_gain, best_flat) partial out — and the election is the same
+    three scalar collectives as :func:`solve_sharded`. The winning
+    candidate's weighted row is recomputed O(mp) by its owner shard
+    (``solver._weighted_rows``, the block path's float chain) and
+    psum-broadcast for the replicated incremental repair, so per-swap
+    wire traffic stays O(m) while per-shard resident memory drops from
+    O(n_local·m) to O(n_local·p + km). Bit-for-bit with the host
+    :func:`solver.solve_matrix_free` (tests/helpers/
+    dist_matrix_free_check.py). Inputs must already carry the metric's
+    ``prepare`` transform (the factory applies it once per shard).
+    """
+    axes = tuple(axes)
+    n_local = x_local.shape[0]
+    k = init_idx.shape[0]
+    shard_id = _shard_id(axes, axis_sizes)
+    row_offset = shard_id * n_local
+    w = weights.astype(jnp.float32)
+    batch_idx = batch_idx.astype(jnp.int32)
+
+    def weighted_row(i_glob):
+        """The winning candidate's weighted batch row, owner-computed and
+        psum-replicated — identical floats to the host recompute."""
+        owns, li = _owner_select(i_glob, row_offset, n_local)
+        r = solver._weighted_rows(x_local[li][None, :], b, w, batch_idx,
+                                  i_glob[None], metric=metric,
+                                  debias=debias, backend=backend)[0]
+        return jax.lax.psum(jnp.where(owns, r, 0.0), axes)
+
+    def init_state(idx):
+        rows = _gather_batch_rows(x_local, idx, row_offset, axes)  # (k, p)
+        med_rows = solver._weighted_rows(rows, b, w, batch_idx, idx,
+                                         metric=metric, debias=debias,
+                                         backend=backend)
+        d1, d2, near, near2 = solver._top2(med_rows)
+        return (idx.astype(jnp.int32), med_rows, d1, d2, near, near2,
+                jnp.int32(0), jnp.bool_(False))
+
+    state = init_state(init_idx)
+
+    def cond(state):
+        return jnp.logical_and(~state[7], state[6] < max_swaps)
+
+    def body(state):
+        idx, med_rows, d1, d2, near, near2, t, done = state
+        nh = jax.nn.one_hot(near, k, dtype=jnp.float32)
+        mine, safe = _owner_select(idx, row_offset, n_local)
+        row_mask = jnp.ones((n_local,), jnp.float32).at[safe].min(
+            jnp.where(mine, 0.0, 1.0))
+        # Debias owners in *local* row coordinates: foreign columns fall
+        # outside [0, n_local) and match nothing (padded rows are masked).
+        owner = (batch_idx - row_offset) if debias else None
+        best_local, i_loc, l_loc = ops.fused_swap_select(
+            x_local, b, w, d1, d2, nh, metric=metric, row_mask=row_mask,
+            owner=owner, backend=backend, skip_prepare=True,
+            row_chunk=solver._mf_chunk(chunk_size))
+        flat = i_loc * k + l_loc
+        # Same lexicographic (shard, local flat) election as solve_sharded:
+        # three scalar collectives, bit-for-bit the host argmax.
+        best_all = jax.lax.pmax(best_local, axes)
+        is_winner = best_local >= best_all
+        win_shard = jax.lax.pmin(
+            jnp.where(is_winner, shard_id, jnp.iinfo(jnp.int32).max), axes)
+        flat_win = jax.lax.psum(
+            jnp.where(shard_id == win_shard, flat, 0), axes)
+        i_glob = win_shard * n_local + flat_win // k
+        l = flat_win % k
+        row = weighted_row(i_glob)
+        improved = best_all > eps * jnp.sum(d1)
+        new_rows, nd1, nd2, nnear, nnear2 = solver._repair_top2(
+            med_rows, d1, d2, near, near2, row, l)
+        new_state = (idx.at[l].set(i_glob.astype(jnp.int32)), new_rows,
+                     nd1, nd2, nnear, nnear2, t + 1, done)
+        old_state = (idx, med_rows, d1, d2, near, near2, t, jnp.bool_(True))
+        return jax.tree.map(
+            lambda a, b: jnp.where(improved, a, b), new_state, old_state)
+
+    state = jax.lax.while_loop(cond, body, state)
+    idx, _, d1, _, _, _, t, done = state
+    return solver.SolveResult(idx, t, jnp.mean(d1), done)
+
+
 def _shard_id(axes: Sequence[str], axis_sizes=None):
     """This device's linear index over the axes-major device grid."""
     shard_id = jax.lax.axis_index(axes[0])
@@ -280,6 +381,86 @@ def make_distributed_obp(mesh, *, k: int, metric: str = "l1",
         return solve_sharded(d, init_idx, axes=solve_axes,
                              max_swaps=max_swaps, eps=eps,
                              backend=backend, axis_sizes=sizes)
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=32)
+def make_distributed_obp_matrix_free(mesh, *, k: int, metric: str = "l1",
+                                     variant: str = "unif",
+                                     max_swaps: int = 500, eps: float = 0.0,
+                                     backend: str = "auto",
+                                     chunk_size: int | None = None):
+    """Distributed matrix-free OneBatchPAM: no device ever holds a block.
+
+    Returns fn(x, batch_idx, init_idx) -> (SolveResult, weights (m,)),
+    the matrix-free sibling of :func:`make_distributed_obp_e2e`
+    (DESIGN.md §2b): per-shard resident state is the (n_local, p) rows
+    plus O(km) solver state — the O(n_local·m) block of the e2e path
+    never exists. Variant weights are built in-mesh block-free too: the
+    nniw histogram comes from each shard's ``stream_nn_counts`` chunk
+    sweep (no block materialised even transiently beyond a chunk)
+    completed with one (m,)-float psum. ``chunk_size`` bounds that count
+    sweep and the ref-backend solve sweep to O(chunk · m) intermediates;
+    left unset it defaults to ``streaming.MF_DEFAULT_CHUNK`` rather than
+    one-shot, so the no-block guarantee needs no caller cooperation.
+
+    Feature ("model") sharding is not composed with matrix-free: the
+    in-flight tile math needs full rows (prepare/finalize run per tile).
+    lwcs stays host-side, as in the e2e factory.
+    """
+    if variant not in ("unif", "debias", "nniw"):
+        raise ValueError(
+            f"variant {variant!r} not supported in-mesh; build the batch "
+            "host-side with sampling.build_batch + solve_matrix_free")
+    if "model" in mesh.axis_names:
+        raise ValueError(
+            "matrix-free needs full feature rows per shard; drop the "
+            "'model' axis (DESIGN.md §2b)")
+    batch_axes = _batch_axes(mesh)
+    sizes = dict(mesh.shape)
+    spec = metrics.get(metric)
+
+    @functools.partial(
+        _shard_map, mesh=mesh,
+        in_specs=(P(batch_axes, None), P(), P()),
+        out_specs=(solver.SolveResult(P(), P(), P(), P()), P()),
+        check_vma=False,
+    )
+    def run(x_local, batch_idx, init_idx):
+        n_local = x_local.shape[0]
+        m = batch_idx.shape[0]
+        off = _shard_offset(batch_axes, n_local, sizes)
+
+        n_global = n_local
+        for ax in batch_axes:
+            n_global = n_global * sizes[ax]
+
+        # Prepare once per shard and gather the batch rows once (one
+        # O(mp) psum); prepare is row-local, so shard == host bits, and
+        # the count pass below reuses the same prepared rows.
+        xp = spec.prepare(x_local) if spec.prepare is not None else x_local
+        bp = _gather_batch_rows(xp, batch_idx, off, batch_axes)
+
+        if variant == "nniw":
+            # Bounded-chunk default so no shard transiently builds its
+            # local block.
+            local_counts = streaming.stream_nn_counts(
+                xp, bp, metric=metric, backend=backend,
+                chunk_size=(streaming.MF_DEFAULT_CHUNK
+                            if chunk_size is None else chunk_size),
+                skip_prepare=True)
+            counts = jax.lax.psum(local_counts, batch_axes)  # one (m,) psum
+            weights = counts * (m / n_global)                # mean 1
+        else:
+            weights = jnp.ones((m,), jnp.float32)
+
+        res = solve_sharded_matrix_free(
+            xp, bp, weights, batch_idx, init_idx, axes=batch_axes,
+            metric=metric, debias=(variant == "debias"),
+            max_swaps=max_swaps, eps=eps, backend=backend,
+            chunk_size=chunk_size, axis_sizes=sizes)
+        return res, weights
 
     return jax.jit(run)
 

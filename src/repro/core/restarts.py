@@ -114,9 +114,16 @@ def build_pool(
     backend: str = "auto",
     chunk_size: int | None = None,
     block_dtype: str | jnp.dtype | None = None,
+    materialize: bool = True,
 ) -> Pool:
     """Sample the pooled R·m columns + eval batch and build all R blocks
     in one O(n · R·m) streaming sweep over X.
+
+    ``materialize=False`` is the matrix-free pool (DESIGN.md §2b): no
+    (R, n, m) blocks are built — ``Pool.d`` is None, and the per-restart
+    nniw histograms come from the block-free grouped streaming argmin
+    (``stream_nn_counts(count_groups=R)``, bitwise the materialized
+    weights). Incompatible with ``block_dtype``.
 
     Variant semantics per restart slice mirror ``sampling.build_batch``:
     unit weights for ``unif``; owner-diagonal LARGE for ``debias``; for
@@ -134,6 +141,10 @@ def build_pool(
     if variant not in sampling.VARIANTS:
         raise ValueError(
             f"unknown variant {variant!r}; options {sampling.VARIANTS}")
+    if not materialize and block_dtype is not None:
+        raise ValueError(
+            "materialize=False builds no pool blocks; block_dtype does "
+            "not apply (DESIGN.md §2b)")
     rm = restarts * m
     eval_m = m if eval_m is None else eval_m
     eval_m = max(1, min(eval_m, n))
@@ -154,6 +165,19 @@ def build_pool(
     else:
         pool_flat, eval_idx = _pool_draws(key, n, m, restarts, eval_m)
         w = jnp.ones((restarts, m), jnp.float32)
+
+    if not materialize:
+        if variant == "nniw":
+            # Bounded-chunk default, as in build_batch: the grouped count
+            # pass must not transiently build the (n, R·m) pool block.
+            counts = streaming.stream_nn_counts(
+                x, x[pool_flat], metric=metric, backend=backend,
+                chunk_size=(streaming.MF_DEFAULT_CHUNK
+                            if chunk_size is None else chunk_size),
+                count_groups=restarts)
+            w = counts.reshape(restarts, m) * (m / n)       # mean 1 per slice
+        return Pool(idx=pool_flat.reshape(restarts, m), weights=w, d=None,
+                    eval_idx=eval_idx)
 
     sb = streaming.stream_block(x, x[pool_flat], metric=metric,
                                 backend=backend, chunk_size=chunk_size,
@@ -211,6 +235,35 @@ def solve_restarts(
         lambda d, i: solver.solve_batched(d, i, max_swaps=max_swaps,
                                           eps=eps, backend=backend)
     )(d_pool, init_idx)
+
+
+def solve_restarts_matrix_free(
+    x: jnp.ndarray,          # (n, p) data rows, shared by all lanes
+    pool_idx: jnp.ndarray,   # (R, m) per-restart batch columns
+    weights: jnp.ndarray,    # (R, m) per-restart batch weights
+    init_idx: jnp.ndarray,   # (R, k) per-restart initial medoids
+    *,
+    variant: str = "nniw",
+    metric: str = "l1",
+    max_swaps: int = 500,
+    eps: float = 0.0,
+    backend: str = "auto",
+    chunk_size: int | None = None,
+) -> solver.SolveResult:
+    """All R matrix-free searches as one vmapped program (DESIGN.md §2b).
+
+    Each lane is exactly :func:`solver.solve_matrix_free` — the fused
+    distance+swap-select sweep batches over the restart axis with X
+    unbatched (broadcast), so total resident state is O(np + R·(km + m))
+    instead of the pooled engine's O(R·nm) blocks. Per-lane trajectories
+    are bit-for-bit the unbatched solver's (tests/test_matrix_free.py).
+    """
+    return jax.vmap(
+        lambda bi, w, ii: solver.solve_matrix_free(
+            x, bi, w, ii, metric=metric, debias=(variant == "debias"),
+            max_swaps=max_swaps, eps=eps, backend=backend,
+            chunk_size=chunk_size)
+    )(pool_idx, weights, init_idx)
 
 
 def elect(
@@ -272,6 +325,7 @@ def one_batch_pam_restarts(
     eval_m: int | None = None,
     variant: str = "nniw",
     metric: str = "l1",
+    strategy: str = "batched",
     max_swaps: int = 500,
     eps: float = 0.0,
     backend: str = "auto",
@@ -282,19 +336,35 @@ def one_batch_pam_restarts(
     """End-to-end multi-restart OneBatchPAM: pool → vmapped solve → elect.
 
     ``m`` defaults to the paper heuristic clamped to n // R so the pool
-    fits; ``eval_m`` defaults to m. With ``mesh=`` the whole pipeline runs
-    data-parallel under shard_map — per-shard fused swap-select partials
-    per restart and a single-psum election
+    fits (the pooled-sample budget: R disjoint batches must come out of n
+    rows — ``solver.one_batch_pam`` warns when a user-passed m is
+    clamped); ``eval_m`` defaults to m. With ``mesh=`` the whole pipeline
+    runs data-parallel under shard_map — per-shard fused swap-select
+    partials per restart and a single-psum election
     (``distributed.make_distributed_obp_restarts``); the returned Pool
     then has ``d=None`` since the blocks only exist shard-wise.
+    ``strategy="matrix_free"`` (host-side only) runs the R lanes through
+    :func:`solve_restarts_matrix_free` on a block-free pool — ``Pool.d``
+    is None because the blocks never exist at all (DESIGN.md §2b).
     """
     n = x.shape[0]
     if m is None:
         m = min(sampling.default_batch_size(n, k), max(n // restarts, 1))
+    if strategy not in ("batched", "matrix_free"):
+        raise ValueError(
+            "restart lanes support strategy='batched' or 'matrix_free', "
+            f"got {strategy!r}")
+    matrix_free = strategy == "matrix_free"
     _check_pool_shape(n, m, restarts)
     key_b, key_i = jax.random.split(key)
     init_idx = _init_draws(key_i, n, k, restarts)
 
+    if mesh is not None and matrix_free:
+        raise ValueError(
+            "restarts x mesh x matrix_free is not composed yet; run "
+            "matrix-free restarts host-side (mesh=None) or use the "
+            "single-restart distributed matrix-free path "
+            "(distributed.make_distributed_obp_matrix_free)")
     if mesh is not None:
         from repro.core import distributed
         if variant == "lwcs":
@@ -316,9 +386,16 @@ def one_batch_pam_restarts(
     else:
         pool = build_pool(key_b, x, m, restarts, eval_m=eval_m,
                           variant=variant, metric=metric, backend=backend,
-                          chunk_size=chunk_size, block_dtype=block_dtype)
-        results = solve_restarts(pool.d, init_idx, max_swaps=max_swaps,
-                                 eps=eps, backend=backend)
+                          chunk_size=chunk_size, block_dtype=block_dtype,
+                          materialize=not matrix_free)
+        if matrix_free:
+            results = solve_restarts_matrix_free(
+                x, pool.idx, pool.weights, init_idx, variant=variant,
+                metric=metric, max_swaps=max_swaps, eps=eps,
+                backend=backend, chunk_size=chunk_size)
+        else:
+            results = solve_restarts(pool.d, init_idx, max_swaps=max_swaps,
+                                     eps=eps, backend=backend)
         best_r, evals = elect(x, results.medoid_idx, pool.eval_idx,
                               metric=metric, backend=backend,
                               chunk_size=chunk_size, block_dtype=block_dtype)

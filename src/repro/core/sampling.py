@@ -37,7 +37,9 @@ class Batch(NamedTuple):
     """The single batch of OneBatchPAM."""
     idx: jnp.ndarray      # (m,) int32 indices into X_n
     weights: jnp.ndarray  # (m,) f32 importance weights (mean ~ 1)
-    d: jnp.ndarray        # (n, m) weighted distance block (f32 or block_dtype)
+    d: jnp.ndarray | None  # (n, m) weighted distance block (f32 or
+    #                        block_dtype); None on the matrix-free and
+    #                        mesh paths, where the block never exists
 
 
 def _uniform_idx(key: jax.Array, n: int, m: int) -> jnp.ndarray:
@@ -60,6 +62,7 @@ def build_batch(
     backend: str = "auto",
     chunk_size: int | None = None,
     block_dtype: str | jnp.dtype | None = None,
+    materialize: bool = True,
 ) -> Batch:
     """Sample the batch, compute the (n, m) block, apply the variant.
 
@@ -69,10 +72,23 @@ def build_batch(
     ``"bfloat16"``): distances and weights are computed in f32, the weight
     multiply runs in f32 via promotion, and only the stored block rounds —
     so ``Batch.weights`` is identical to the f32 path (DESIGN.md §2).
+    ``materialize=False`` is the matrix-free path (DESIGN.md §2b): the
+    (n, m) block is never built — nniw weights come from the block-free
+    streaming histogram (``stream_nn_counts``, bitwise the materialized
+    weights per evaluation path; the count pass defaults to
+    ``streaming.MF_DEFAULT_CHUNK`` rather than one-shot so it cannot
+    transiently build the block) and ``Batch.d`` is None; the solver
+    recomputes distance tiles on chip (``solver.solve_matrix_free``).
+    Incompatible with ``block_dtype`` (there is no stored block to
+    narrow).
     """
     n = x.shape[0]
     if variant not in VARIANTS:
         raise ValueError(f"unknown variant {variant!r}; options {VARIANTS}")
+    if not materialize and block_dtype is not None:
+        raise ValueError(
+            "materialize=False builds no block; block_dtype does not apply "
+            "(the matrix-free sweep upcasts tiles to f32 on chip)")
 
     if variant == "lwcs":
         mean = jnp.mean(x, axis=0, keepdims=True)
@@ -85,6 +101,18 @@ def build_batch(
     else:
         idx = _uniform_idx(key, n, m)
         w = jnp.ones((m,), jnp.float32)
+
+    if not materialize:
+        if variant == "nniw":
+            # Default to a bounded chunk (not one-shot): the count pass
+            # must not transiently build the very block this path exists
+            # to avoid (streaming.MF_DEFAULT_CHUNK).
+            counts = streaming.stream_nn_counts(
+                x, x[idx], metric=metric, backend=backend,
+                chunk_size=(streaming.MF_DEFAULT_CHUNK
+                            if chunk_size is None else chunk_size))
+            w = counts * (m / n)                            # mean 1
+        return Batch(idx=idx, weights=w, d=None)
 
     sb = streaming.stream_block(x, x[idx], metric=metric, backend=backend,
                                 chunk_size=chunk_size,

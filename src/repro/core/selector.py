@@ -25,6 +25,9 @@ class MedoidSelector:
     m: int | None = None
     variant: str = "nniw"
     metric: str = "l1"
+    # "batched" (fused block sweep), "matrix_free" (same sweep, no (n, m)
+    # block ever — DESIGN.md §2b, swap-for-swap identical), or "eager"
+    # (paper-faithful serial scan).
     strategy: str = "batched"
     max_swaps: int = 500
     seed: int = 0
@@ -53,20 +56,25 @@ class MedoidSelector:
     def fit(self, x) -> "MedoidSelector":
         x = jnp.asarray(x)
         if self.restarts > 1:
-            if self.strategy != "batched":
-                # Same contract as solver.one_batch_pam: the restart
-                # engine is the vmapped batched sweep only.
+            if self.strategy not in ("batched", "matrix_free"):
+                # Same contract as solver.one_batch_pam: restart lanes
+                # are the vmapped batched / matrix-free sweeps only.
                 raise ValueError(
-                    "restarts > 1 supports strategy='batched' only")
+                    "restarts > 1 supports strategy='batched' or "
+                    "'matrix_free'")
             from repro.core import restarts as restarts_mod
             n = x.shape[0]
             m = self.m
             if m is not None:
-                m = min(m, max(n // self.restarts, 1))
+                # Warns on shrinkage (the pooled-sample budget R*m <= n;
+                # DESIGN.md §2a) instead of the former silent clamp.
+                m = solver._clamp_pool_m(n, self.restarts, min(m, n),
+                                         user_m=m)
             rr, _ = restarts_mod.one_batch_pam_restarts(
                 jax.random.PRNGKey(self.seed), x, self.k,
                 restarts=self.restarts, m=m, eval_m=self.eval_m,
                 variant=self.variant, metric=self.metric,
+                strategy=self.strategy,
                 max_swaps=self.max_swaps, backend=self.backend,
                 chunk_size=self.chunk_size, block_dtype=self.block_dtype,
                 mesh=self.mesh)

@@ -1,6 +1,6 @@
 """OneBatchPAM local-search solver (the paper's core contribution, in JAX).
 
-Three strategies over identical swap math (DESIGN.md §2):
+Four strategies over identical swap math (DESIGN.md §2):
 
   * ``eager``   — Algorithm 2 of the paper: scan candidates i = 1..n in
       order, swap as soon as the batch-estimated gain is positive
@@ -17,6 +17,14 @@ Three strategies over identical swap math (DESIGN.md §2):
       (materialise (n, k) gains, host argmax, full top-2 recompute). Kept
       as the equivalence oracle for the fused path and as the "naive"
       column of the sweep benchmarks; same swaps, same floats.
+  * ``matrix_free`` (:func:`solve_matrix_free`) — the fused sweep with
+      the (n, m) block itself fused away (DESIGN.md §2b): per iteration
+      ``ops.fused_swap_select`` recomputes each distance tile on chip
+      from X and B (O(np + mp) HBM traffic instead of O(nm)), and the
+      accepted candidate's single weighted row is recomputed O(mp) for
+      the same incremental repair. Swap-for-swap identical to
+      :func:`solve_batched` on the f32 ref/interpret paths — same
+      floats, different data movement.
 
 The solver is batch-size agnostic: pass the n x m OneBatch block for OBP, or
 the full n x n matrix to recover exact (Fast)PAM — tests exploit this
@@ -27,13 +35,15 @@ all solver state and gain accumulation stay f32.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import sampling
-from repro.kernels import ops
+from repro.kernels import metrics, ops
+from repro.kernels.ref import LARGE
 from repro.kernels.ref import NEG  # noqa: F401  (re-exported; distributed.py)
 
 BIG = jnp.float32(1e30)  # sentinel for "no second medoid" / masked entries
@@ -154,18 +164,152 @@ def _fused_step(d: jnp.ndarray, state: _State, *, eps: float = 0.0,
     return new_state, improved, best, i, l
 
 
+def _mf_chunk(chunk_size: int | None) -> int:
+    """The matrix-free default row chunk (streaming.MF_DEFAULT_CHUNK)
+    when the caller left chunk_size unset; see that constant's note."""
+    from repro.core.streaming import MF_DEFAULT_CHUNK
+    return MF_DEFAULT_CHUNK if chunk_size is None else chunk_size
+
+
+def _prepared(x: jnp.ndarray, metric: str) -> jnp.ndarray:
+    """The metric's row transform, applied exactly once (DESIGN.md §2b:
+    prepare is row-local, so ``prepare(x)[idx] == prepare(x[idx])``
+    bitwise — the matrix-free chain matches the batch builder's)."""
+    spec = metrics.get(metric)
+    return spec.prepare(x) if spec.prepare is not None else x
+
+
+def _weighted_rows(rows, b, w, batch_idx, row_ids, *, metric, debias,
+                   backend):
+    """Weighted batch-distance rows for candidates ``row_ids`` — the
+    O(q·m·p) on-the-fly recompute of ``d[row_ids]`` from the block path,
+    same float chain: metric on prepared rows -> finalize -> debias
+    owner set -> weight multiply. ``rows`` must already be prepared."""
+    spec = metrics.get(metric)
+    d = spec.finalize(ops.pairwise_raw(rows, b, metric=metric,
+                                       backend=backend, skip_prepare=True))
+    if debias:
+        d = jnp.where(batch_idx[None, :] == row_ids[:, None], LARGE, d)
+    return d * w[None, :]
+
+
+def _matrix_free_step(xp, b, w, batch_idx, state: _State, *, metric: str,
+                      debias: bool = False, eps: float = 0.0,
+                      backend: str = "auto", chunk_size: int | None = None):
+    """One matrix-free steepest-descent step: fused distance+swap-select
+    sweep over X/B plus the incremental repair fed by an O(mp) recompute
+    of the accepted candidate's weighted row. The exact float sequence of
+    :func:`solve_matrix_free`'s loop body — and of :func:`_fused_step` on
+    the materialised block (same gains, same selection, same repair) —
+    factored out so ``core/trace.py`` replays it swap for swap. ``xp``
+    and ``b`` must already carry the metric's ``prepare`` transform."""
+    n = xp.shape[0]
+    k = state.medoid_idx.shape[0]
+    nh = jax.nn.one_hot(state.near, k, dtype=jnp.float32)
+    row_mask = jnp.ones((n,), jnp.float32).at[state.medoid_idx].set(0.0)
+    owner = batch_idx if debias else None
+    best, i, l = ops.fused_swap_select(
+        xp, b, w, state.d1, state.d2, nh, metric=metric, row_mask=row_mask,
+        owner=owner, backend=backend, skip_prepare=True,
+        row_chunk=_mf_chunk(chunk_size))
+    improved = best > eps * jnp.sum(state.d1)
+    r = _weighted_rows(xp[i][None, :], b, w, batch_idx, i[None],
+                       metric=metric, debias=debias, backend=backend)[0]
+    med_rows, d1, d2, near, near2 = _repair_top2(
+        state.med_rows, state.d1, state.d2, state.near, state.near2, r, l)
+    new_state = _State(state.medoid_idx.at[l].set(i.astype(jnp.int32)),
+                       med_rows, d1, d2, near, near2,
+                       state.t + 1, state.done)
+    return new_state, improved, best, i, l
+
+
+def _init_state_matrix_free(xp, b, w, batch_idx, init_idx, *, metric,
+                            debias, backend) -> _State:
+    med_rows = _weighted_rows(xp[init_idx], b, w, batch_idx, init_idx,
+                              metric=metric, debias=debias, backend=backend)
+    d1, d2, near, near2 = _top2(med_rows)
+    return _State(init_idx.astype(jnp.int32), med_rows, d1, d2, near, near2,
+                  jnp.int32(0), jnp.bool_(False))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "metric", "debias", "max_swaps", "backend", "chunk_size"))
+def solve_matrix_free(
+    x: jnp.ndarray,            # (n, p) data rows (f32 or bf16)
+    batch_idx: jnp.ndarray,    # (m,) batch column indices into x
+    weights: jnp.ndarray,      # (m,) f32 batch weights
+    init_idx: jnp.ndarray,     # (k,) initial medoids
+    *,
+    metric: str = "l1",
+    debias: bool = False,
+    max_swaps: int = 500,
+    eps: float = 0.0,
+    backend: str = "auto",
+    chunk_size: int | None = None,
+) -> SolveResult:
+    """Matrix-free steepest descent: :func:`solve_batched` without the
+    (n, m) block ever existing (DESIGN.md §2b).
+
+    Per iteration one ``ops.fused_swap_select`` pass recomputes every
+    distance tile on chip from X (n, p) and B (m, p) — O(np + mp) HBM
+    read, O(n/TN) partials written — and the accepted swap repairs the
+    O(km) top-2 state incrementally from one O(mp) recomputed row.
+    Resident memory is O(np + km + m), so n is no longer capped by the
+    O(nm) block. Swap-for-swap identical to :func:`solve_batched` fed
+    ``sampling.build_batch``'s f32 block on the same backend (ref and
+    interpret; tests/test_matrix_free.py + the golden fixtures pin it).
+
+    ``debias`` applies the debias variant's LARGE owner diagonal
+    in-flight (``batch_idx`` names each column's source row).
+    ``chunk_size`` bounds the ref backend's sweep to O(chunk · m)
+    intermediates (the kernel paths are tiled already); it defaults to
+    ``MF_DEFAULT_CHUNK`` rather than one-shot, so the no-block guarantee
+    holds without the caller remembering to chunk.
+    """
+    xp = _prepared(x, metric)
+    b = xp[batch_idx]
+    w = weights.astype(jnp.float32)
+    batch_idx = batch_idx.astype(jnp.int32)
+    state = _init_state_matrix_free(xp, b, w, batch_idx, init_idx,
+                                    metric=metric, debias=debias,
+                                    backend=backend)
+
+    def cond(state):
+        return jnp.logical_and(~state.done, state.t < max_swaps)
+
+    def body(state):
+        new_state, improved, _, _, _ = _matrix_free_step(
+            xp, b, w, batch_idx, state, metric=metric, debias=debias,
+            eps=eps, backend=backend, chunk_size=chunk_size)
+        return jax.tree.map(
+            lambda a, b: jnp.where(improved, a, b), new_state,
+            state._replace(done=jnp.bool_(True)))
+
+    state = jax.lax.while_loop(cond, body, state)
+    return SolveResult(state.medoid_idx, state.t,
+                       jnp.mean(state.d1), state.done)
+
+
 def _eager_pass(d: jnp.ndarray, state: _State, *, eps: float = 0.0):
     """One full first-improvement pass over all n candidates (Algorithm 2).
 
     Returns ``(state, swapped, do_swap (n,), slots (n,))`` — the last two
     record, per candidate index, whether it was swapped in and into which
     slot, so ``core/trace.py`` recovers the swap sequence from the same
-    scan :func:`solve_eager` runs (identical floats by construction)."""
+    scan :func:`solve_eager` runs (identical floats by construction).
+
+    The eps acceptance threshold needs ``sum(d1)``, which only changes on
+    an accepted swap — so the sum rides the scan carry and is recomputed
+    (one O(m) ``jnp.sum``, behind ``lax.cond``) only then, instead of the
+    former unconditional O(m) reduction per candidate: same array summed
+    at the same points, so the floats — and the swap trajectory — are
+    bit-for-bit the per-candidate recompute's (tests/test_core.py pins
+    it against a fresh-sum reference at eps > 0)."""
     n, _ = d.shape
     k = state.medoid_idx.shape[0]
 
     def candidate_step(carry, i):
-        state, swapped = carry
+        state, swapped, sum_d1 = carry
         row = d[i].astype(jnp.float32)                        # (m,)
         g = jnp.sum(jnp.maximum(state.d1 - row, 0.0))
         r = state.d1 - jnp.minimum(jnp.maximum(row, state.d1), state.d2)
@@ -173,14 +317,17 @@ def _eager_pass(d: jnp.ndarray, state: _State, *, eps: float = 0.0):
         l = jnp.argmax(big_r)
         gain = g + big_r[l]
         is_medoid = jnp.any(state.medoid_idx == i)
-        do_swap = jnp.logical_and(gain > eps * jnp.sum(state.d1), ~is_medoid)
+        do_swap = jnp.logical_and(gain > eps * sum_d1, ~is_medoid)
         new_state = _apply_swap(state, d, i.astype(jnp.int32), l)
         state = jax.tree.map(lambda a, b: jnp.where(do_swap, a, b),
                              new_state, state)
-        return (state, jnp.logical_or(swapped, do_swap)), (do_swap, l)
+        sum_d1 = jax.lax.cond(do_swap, lambda s: jnp.sum(s.d1),
+                              lambda _: sum_d1, state)
+        return (state, jnp.logical_or(swapped, do_swap), sum_d1), (do_swap, l)
 
-    (state, swapped), (flags, slots) = jax.lax.scan(
-        candidate_step, (state, jnp.bool_(False)), jnp.arange(n))
+    (state, swapped, _), (flags, slots) = jax.lax.scan(
+        candidate_step, (state, jnp.bool_(False), jnp.sum(state.d1)),
+        jnp.arange(n))
     return state, swapped, flags, slots
 
 
@@ -342,19 +489,42 @@ def one_batch_pam(
     the pool. ``restarts=1`` (the default) is the original single-restart
     trajectory, bit for bit — same key splits, same draws, same sweep —
     and ``eval_m`` is ignored (there is nothing to elect).
+
+    **Pooled-sample budget**: with restarts the R per-restart batches are
+    drawn *disjointly* from one pool, so R·m cannot exceed n — a
+    user-passed ``m`` above ``n // restarts`` is clamped down to fit and
+    a ``UserWarning`` names the effective size (the estimator quality
+    m buys is per restart, so silent shrinkage would silently change the
+    quality/compute trade; see the README perf-knob table).
+
+    ``strategy="matrix_free"`` (DESIGN.md §2b) never materialises the
+    (n, m) block: the batch is built block-free (``Batch.d is None``,
+    nniw weights from the streaming histogram) and
+    :func:`solve_matrix_free` recomputes distance tiles on chip. Same
+    swaps as ``"batched"`` on the f32 ref/interpret paths; resident
+    memory drops from O(nm) to O(np + km). ``block_dtype`` does not
+    apply (no stored block).
     """
     n = x.shape[0]
+    user_m = m
     m = m if m is not None else sampling.default_batch_size(n, k)
     m = min(m, n)
     if restarts < 1:
         raise ValueError(f"restarts must be >= 1, got {restarts}")
+    matrix_free = strategy == "matrix_free"
+    if matrix_free and block_dtype is not None:
+        raise ValueError(
+            "strategy='matrix_free' builds no block; block_dtype does not "
+            "apply (tiles are recomputed in f32 on chip, DESIGN.md §2b)")
     if restarts > 1:
         from repro.core import restarts as restarts_mod
-        if strategy != "batched":
-            raise ValueError("restarts > 1 supports strategy='batched' only")
+        if strategy not in ("batched", "matrix_free"):
+            raise ValueError(
+                "restarts > 1 supports strategy='batched' or 'matrix_free'")
+        rm = _clamp_pool_m(n, restarts, m, user_m=user_m)
         rr, pool = restarts_mod.one_batch_pam_restarts(
-            key, x, k, restarts=restarts, m=min(m, max(n // restarts, 1)),
-            eval_m=eval_m, variant=variant, metric=metric,
+            key, x, k, restarts=restarts, m=rm,
+            eval_m=eval_m, variant=variant, metric=metric, strategy=strategy,
             max_swaps=max_swaps, eps=eps, backend=backend,
             chunk_size=chunk_size, block_dtype=block_dtype, mesh=mesh)
         r = rr.best_restart
@@ -367,30 +537,59 @@ def one_batch_pam(
 
     if mesh is not None:
         from repro.core import distributed
-        if strategy != "batched":
-            raise ValueError("mesh mode supports strategy='batched' only")
+        if strategy not in ("batched", "matrix_free"):
+            raise ValueError(
+                "mesh mode supports strategy='batched' or 'matrix_free' only")
         # Same draw as build_batch so mesh and host runs see the same batch.
         batch_idx = sampling._uniform_idx(key_b, n, m)
-        run = distributed.make_distributed_obp_e2e(
-            mesh, k=k, metric=metric, variant=variant, chunk_size=chunk_size,
-            max_swaps=max_swaps, eps=eps, backend=backend,
-            block_dtype=_dtype_name(block_dtype))
+        if matrix_free:
+            run = distributed.make_distributed_obp_matrix_free(
+                mesh, k=k, metric=metric, variant=variant,
+                chunk_size=chunk_size, max_swaps=max_swaps, eps=eps,
+                backend=backend)
+        else:
+            run = distributed.make_distributed_obp_e2e(
+                mesh, k=k, metric=metric, variant=variant,
+                chunk_size=chunk_size, max_swaps=max_swaps, eps=eps,
+                backend=backend, block_dtype=_dtype_name(block_dtype))
         res, weights = run(distributed.shard_over_batch(mesh, x), batch_idx,
                            init_idx)
         return res, sampling.Batch(idx=batch_idx, weights=weights, d=None)
 
     batch = sampling.build_batch(key_b, x, m, variant=variant, metric=metric,
                                  backend=backend, chunk_size=chunk_size,
-                                 block_dtype=block_dtype)
+                                 block_dtype=block_dtype,
+                                 materialize=not matrix_free)
     if strategy == "batched":
         res = solve_batched(batch.d, init_idx, max_swaps=max_swaps, eps=eps,
                             backend=backend)
+    elif matrix_free:
+        res = solve_matrix_free(x, batch.idx, batch.weights, init_idx,
+                                metric=metric, debias=(variant == "debias"),
+                                max_swaps=max_swaps, eps=eps, backend=backend,
+                                chunk_size=chunk_size)
     elif strategy == "eager":
         res = solve_eager(batch.d, init_idx,
                           max_passes=max(2, max_swaps // max(k, 1)), eps=eps)
     else:
         raise ValueError(f"unknown strategy {strategy!r}")
     return res, batch
+
+
+def _clamp_pool_m(n: int, restarts: int, m: int, *, user_m=None) -> int:
+    """Clamp a per-restart batch size to the disjoint-pool budget
+    ``n // restarts``, warning (instead of the former silent shrink) when
+    a caller-requested m had to give."""
+    fit = max(n // restarts, 1)
+    if m > fit:
+        if user_m is not None:
+            warnings.warn(
+                f"restarts={restarts} draws disjoint batches from one pool "
+                f"of n={n} rows, so the requested m={user_m} is clamped to "
+                f"{fit} per restart (R*m <= n). Lower restarts or m to "
+                "silence this.", UserWarning, stacklevel=3)
+        return fit
+    return m
 
 
 def _dtype_name(block_dtype) -> str | None:
@@ -409,6 +608,7 @@ def fasterpam(
     max_swaps: int = 500,
     eps: float = 0.0,
     backend: str = "auto",
+    chunk_size: int | None = None,
 ) -> SolveResult:
     """Exact FasterPAM baseline: the same solver fed the full n x n matrix
     with random init (Schubert & Rousseeuw 2021 recommend random init).
@@ -417,10 +617,18 @@ def fasterpam(
     strategies (the eager path used to drop it). ``backend`` selects the
     distance-build and batched-sweep kernels only — :func:`solve_eager` is
     backend-free by construction (pure-jnp candidate scan), so it is *not*
-    forwarded there.
+    forwarded there. ``chunk_size`` streams the n x n build in row chunks
+    through the §4 pipeline (``stream_block``) so the baseline's build-time
+    intermediates are O(chunk · n) instead of chunk-free — the resident
+    matrix itself is inherently O(n²); the *batch* solvers are what remove
+    that (this used to be the one distance build that ignored chunking,
+    making the exact baseline the memory hog of the benchmark suite).
     """
+    from repro.core import streaming
+
     n = x.shape[0]
-    d = ops.pairwise_distance(x, x, metric=metric, backend=backend)
+    d = streaming.stream_block(x, x, metric=metric, backend=backend,
+                               chunk_size=chunk_size).d
     init_idx = jax.random.choice(key, n, shape=(k,), replace=False)
     if strategy == "eager":
         return solve_eager(d, init_idx,

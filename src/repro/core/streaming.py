@@ -49,6 +49,17 @@ import jax.numpy as jnp
 from repro.kernels import metrics, ops
 
 
+# Default row chunk for the matrix-free path's streamed evaluations (the
+# ref-backend sweep in solver.solve_matrix_free and the block-free nniw
+# count pass): without it, a chunk_size=None caller would transiently
+# materialize the full (n, m) block inside those passes — exactly what
+# strategy="matrix_free" promises never to do (DESIGN.md §2b). 2048 rows
+# bound the per-chunk footprint to O(2048·m) (plus the ref broadcast
+# slab, §7) while staying a no-op (chunk >= n => one-shot, bit-identical)
+# on test-scale inputs. Callers can pass chunk_size= explicitly to tune.
+MF_DEFAULT_CHUNK = 2048
+
+
 class StreamedBlock(NamedTuple):
     """Result of one streaming sweep over the n axis."""
     d: jnp.ndarray          # (n, m) distance block (post-transformed)
@@ -61,6 +72,26 @@ def _check_chunk(chunk_size: int | None) -> None:
         raise ValueError(
             f"chunk_size must be a positive row count or None, "
             f"got {chunk_size}")
+
+
+def _nn_hist(di: jnp.ndarray, vi: jnp.ndarray, m: int,
+             count_groups: int) -> jnp.ndarray:
+    """Per-group argmin scatter-add for one chunk's f32 distances.
+
+    Grouped argmin over the (rows, R, m/R) view — identical indices to
+    the whole-row argmin when count_groups == 1 — then one flat
+    scatter-add; padded-tail rows are masked by ``vi``. The single home
+    for the nniw histogram math: ``stream_block``'s fused counts and the
+    block-free ``stream_nn_counts`` share it, so the two paths cannot
+    drift apart (matrix-free weights == materialized weights, bitwise).
+    """
+    rows = di.shape[0]
+    mg = m // count_groups
+    win = jnp.argmin(di.reshape(rows, count_groups, mg), axis=2)
+    flat = win + (jnp.arange(count_groups) * mg)[None, :]
+    vals = jnp.broadcast_to(vi.astype(jnp.float32)[:, None], win.shape)
+    return jnp.zeros((m,), jnp.float32).at[flat.reshape(-1)].add(
+        vals.reshape(-1))
 
 
 def _chunk_rows(x: jnp.ndarray, chunk_size: int):
@@ -141,19 +172,7 @@ def stream_block(
         return di if block_dtype is None else di.astype(block_dtype)
 
     def nn_hist(di, vi):
-        """Per-group argmin scatter-add for one chunk's f32 distances.
-
-        Grouped argmin over the (rows, R, m/R) view — identical indices to
-        the whole-row argmin when count_groups == 1 — then one flat
-        scatter-add; padded-tail rows are masked by ``vi``.
-        """
-        rows = di.shape[0]
-        mg = m // count_groups
-        win = jnp.argmin(di.reshape(rows, count_groups, mg), axis=2)
-        flat = win + (jnp.arange(count_groups) * mg)[None, :]
-        vals = jnp.broadcast_to(vi.astype(jnp.float32)[:, None], win.shape)
-        return jnp.zeros((m,), jnp.float32).at[flat.reshape(-1)].add(
-            vals.reshape(-1))
+        return _nn_hist(di, vi, m, count_groups)
 
     # Apply the metric's row transform once, outside the chunk loop: it is
     # row-local (chunking cannot change it) and b is loop-invariant, so
@@ -185,6 +204,55 @@ def stream_block(
 
     d, counts = jax.lax.map(sweep, (xc, valid))
     return StreamedBlock(d=d.reshape(-1, m)[:n], nn_counts=counts.sum(axis=0))
+
+
+def stream_nn_counts(
+    x: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    metric: str = "l1",
+    backend: str = "auto",
+    chunk_size: int | None = None,
+    count_groups: int = 1,
+    skip_prepare: bool = False,
+) -> jnp.ndarray:
+    """The nniw nearest-neighbour histogram WITHOUT materialising the
+    block: O(chunk · m) total, the count-only sibling of ``stream_block
+    (count_nn=True)`` for the matrix-free path (DESIGN.md §2b), sharing
+    its argmin/scatter math (:func:`_nn_hist`) chunk for chunk — the
+    counts are bitwise the materialized path's. ``count_groups=R`` gives
+    the multi-restart per-group histograms, as in ``stream_block``.
+    ``skip_prepare`` is for callers that already hold prepared rows
+    (the distributed matrix-free factory prepares each shard once and
+    reuses the rows for both the count pass and the solve).
+    """
+    _check_chunk(chunk_size)
+    n = x.shape[0]
+    m = b.shape[0]
+    if count_groups < 1 or m % count_groups:
+        raise ValueError(
+            f"count_groups={count_groups} must be >= 1 and divide m={m}")
+    spec = metrics.get(metric)
+    if spec.prepare is not None and not skip_prepare:
+        # once, outside the loop (see stream_block)
+        x = spec.prepare(x)
+        b = spec.prepare(b)
+
+    def pair(xi):
+        return spec.finalize(ops.pairwise_raw(
+            xi, b, metric=metric, backend=backend, skip_prepare=True))
+
+    if chunk_size is None or chunk_size >= n:
+        return _nn_hist(pair(x), jnp.ones((n,), jnp.float32), m,
+                        count_groups)
+
+    xc, valid = _chunk_rows(x, chunk_size)
+
+    def sweep(args):
+        xi, vi = args
+        return _nn_hist(pair(xi), vi, m, count_groups)
+
+    return jax.lax.map(sweep, (xc, valid)).sum(axis=0)
 
 
 def stream_assign(

@@ -15,6 +15,10 @@ the exact loop bodies step by step from the host:
   * :func:`trace_eager` drives ``solver._eager_pass`` — the literal
     per-pass candidate scan of ``solve_eager`` — and reads the recorded
     (do_swap, slot) lanes back.
+  * :func:`trace_matrix_free` drives ``solver._matrix_free_step`` — the
+    literal body of ``solve_matrix_free`` (same fused distance+select
+    sweep, same O(mp) row recompute, same repair) — pinning the
+    matrix-free trajectory swap for swap against the block path's.
 
 Tracing is a test/debug tool: O(1 jit dispatch per swap) host overhead
 makes it slower than the fused loops; production callers want
@@ -67,6 +71,50 @@ def trace_batched(d, init_idx, *, max_swaps: int = 500, eps: float = 0.0,
     converged = False
     while len(swaps) < max_swaps:
         new_state, improved, best, i, l = step(d, state)
+        if not bool(improved):
+            converged = True
+            break
+        swaps.append((int(i), int(l)))
+        gains.append(float(best))
+        state = new_state
+    result = solver.SolveResult(state.medoid_idx, jnp.int32(len(swaps)),
+                                jnp.mean(state.d1), jnp.bool_(converged))
+    return Trajectory(tuple(swaps), tuple(gains), result)
+
+
+@functools.lru_cache(maxsize=64)
+def _jit_matrix_free_step(metric: str, debias: bool, eps: float,
+                          backend: str, chunk_size):
+    return jax.jit(functools.partial(
+        solver._matrix_free_step, metric=metric, debias=debias, eps=eps,
+        backend=backend, chunk_size=chunk_size))
+
+
+def trace_matrix_free(x, batch_idx, weights, init_idx, *,
+                      metric: str = "l1", debias: bool = False,
+                      max_swaps: int = 500, eps: float = 0.0,
+                      backend: str = "auto",
+                      chunk_size: int | None = None) -> Trajectory:
+    """Replay ``solve_matrix_free`` recording every accepted (i, l, gain).
+
+    Matches :func:`solver.solve_matrix_free` exactly for the same reason
+    :func:`trace_batched` matches ``solve_batched``: each step *is* the
+    solver's loop body (``_matrix_free_step``), same floats throughout.
+    """
+    x = jnp.asarray(x)
+    batch_idx = jnp.asarray(batch_idx).astype(jnp.int32)
+    xp = solver._prepared(x, metric)
+    b = xp[batch_idx]
+    w = jnp.asarray(weights).astype(jnp.float32)
+    state = solver._init_state_matrix_free(
+        xp, b, w, batch_idx, jnp.asarray(init_idx), metric=metric,
+        debias=debias, backend=backend)
+    step = _jit_matrix_free_step(metric, debias, eps, backend, chunk_size)
+    swaps: list[tuple[int, int]] = []
+    gains: list[float] = []
+    converged = False
+    while len(swaps) < max_swaps:
+        new_state, improved, best, i, l = step(xp, b, w, batch_idx, state)
         if not bool(improved):
             converged = True
             break

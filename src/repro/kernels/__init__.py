@@ -1,14 +1,22 @@
 """Pallas TPU kernels for OneBatchPAM's compute hot spots.
 
 Layout (per repo convention):
-  pairwise.py / swap_gain.py — pl.pallas_call kernels with explicit
-      BlockSpec VMEM tiling (TPU target; interpret=True on CPU).
+  pairwise.py / swap_gain.py / fused_sweep.py — pl.pallas_call kernels
+      with explicit BlockSpec VMEM tiling (TPU target; interpret=True on
+      CPU). fused_sweep composes pairwise tile math with the swap_gain
+      selection so the (n, m) block never exists (DESIGN.md §2b).
   metrics.py — the metric registry: name -> (ref oracle, Pallas kernel,
-      tiles, prepare/post transforms, cross-shard reduce). DESIGN.md §3.
+      tiles + in-kernel tile math, prepare/post transforms, cross-shard
+      reduce). DESIGN.md §3.
   ops.py — jit'd, padding, backend-dispatching public wrappers.
   ref.py — pure-jnp oracles (ground truth for tests).
 """
 from . import metrics  # noqa: F401
 from .metrics import MetricSpec  # noqa: F401
-from .ops import pairwise_distance, pairwise_raw, swap_gain  # noqa: F401
+from .ops import (  # noqa: F401
+    fused_swap_select,
+    pairwise_distance,
+    pairwise_raw,
+    swap_gain,
+)
 from .ref import LARGE  # noqa: F401

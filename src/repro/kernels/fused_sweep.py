@@ -1,0 +1,174 @@
+"""Matrix-free fused sweep: distance tiles fused into swap selection
+(DESIGN.md §2b) — the (n, m) block never exists.
+
+``swap_select`` (swap_gain.py) removed the (n, k) gain matrix from the
+sweep; its remaining HBM cost is the O(nm) block read, which also caps
+resident memory at O(nm). But the block is pure *derived* state: every
+(TN, TM) tile of it is a metric computation over an (TN, p) X row tile
+and a (TM, p) batch tile — O((TN + TM)·p) bytes of inputs for a
+TN·TM·p-FLOP tile. With m ≈ 100·log(kn) typically far above p, the
+blocked sweep is memory-bound while the MXU idles; recomputing the tile
+on-chip turns the sweep compute-bound and drops per-sweep HBM traffic
+from O(nm) to O(np + mp).
+
+``fused_sweep`` composes, per (TN, TM) grid step, entirely in VMEM:
+
+  1. the metric registry's tile math (``MetricSpec.tile`` — the exact
+     p-chunk accumulation order of the standalone pairwise kernels, so
+     the on-the-fly distances are bit-for-bit the stored block's),
+  2. the registry ``post`` transform (finalize),
+  3. the debias owner mask (column j owned by this global row -> LARGE,
+     pre-weight, mirroring ``build_batch``'s diagonal set),
+  4. the per-column batch-weight multiply (the weight-application
+     invariant: finalize first, weights after — §2b),
+  5. the swap-gain accumulation into the same (TN, K) VMEM scratch
+     ``swap_select`` uses (``swap_gain._accumulate_gain``), and
+  6. at the last m step, the shared on-chip argmax reduction
+     (``swap_gain._select_reduce``).
+
+Only the O(n/TN) ``(best_gain, best_flat)`` partials ever reach HBM.
+Inputs X/B may be f32 or bf16 (tiles upcast on load; accumulation is
+always f32). k is padded to a 128 lane multiple and kept whole per tile;
+m is swept by the grid; p is resident per tile (padded to the metric's
+TP multiple), which targets the paper's regime p ≲ 2k features.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import metrics
+from .swap_gain import SG_TM, SG_TN, _accumulate_gain, _select_reduce
+
+# Finite debias sentinel, as a python float: jnp constants cannot be
+# closed over by a Pallas kernel body (== float(ref.LARGE)).
+_LARGE = 1e15
+
+
+def _fused_sweep_kernel(x_ref, b_ref, w_ref, d1_ref, d2_ref, nh_ref,
+                        own_ref, mask_ref, g_ref, f_ref, acc_ref, *,
+                        k_true, m_steps, metric):
+    """One (TN, TM) grid step: distance tile from the X row tile and a
+    slice of the VMEM-resident B -> weighted gain accumulation -> (at
+    the last m step) on-chip argmax partial.
+
+    B and the m-vectors (w/d1/d2/owner/one-hot) use constant-index
+    BlockSpecs, so they are DMA'd from HBM ONCE per sweep and stay
+    resident in VMEM across the whole grid — the jk-th tile is an
+    in-VMEM slice here, not a per-step re-fetch. That residency is what
+    makes the per-sweep HBM traffic truly O(np + mp): with per-jk tiled
+    specs the B re-fetch per n-row-tile revisit would be O(n·m·p/TN) —
+    back to an O(nm) sweep. The premise m·(p + k) ≪ VMEM is the paper's
+    own (m ≈ 100·log kn with small p, k); fused_sweep checks the bound.
+    """
+    i = pl.program_id(0)
+    jk = pl.program_id(1)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    spec = metrics.get(metric)
+    cols = pl.ds(jk * SG_TM, SG_TM)
+    x = x_ref[...].astype(jnp.float32)                   # (TN, P)
+    bt = b_ref[cols, :].astype(jnp.float32)              # (TM, P) slice
+    d = spec.finalize(spec.tile(x, bt))                  # (TN, TM) distances
+    # Debias owner mask: batch column j whose source row is this global
+    # row gets d = LARGE *before* the weight multiply, exactly where
+    # build_batch sets the diagonal. own = -1 disables (never matches).
+    rows = i * SG_TN + jax.lax.broadcasted_iota(
+        jnp.int32, (SG_TN, SG_TM), 0)
+    d = jnp.where(own_ref[:, cols] == rows, _LARGE, d)
+    d = d * w_ref[:, cols].astype(jnp.float32)           # (1, TM) weights
+
+    d1 = d1_ref[:, cols].astype(jnp.float32)             # (1, TM)
+    d2 = d2_ref[:, cols].astype(jnp.float32)             # (1, TM)
+    nh = nh_ref[cols, :].astype(jnp.float32)             # (TM, K)
+    _accumulate_gain(d, d1, d2, nh, acc_ref)
+
+    @pl.when(jk == m_steps - 1)
+    def _reduce():
+        _select_reduce(acc_ref, mask_ref, g_ref, f_ref, k_true=k_true)
+
+
+@functools.partial(jax.jit, static_argnames=("k_true", "metric", "interpret"))
+def fused_sweep(
+    x: jnp.ndarray,            # (n, p) candidate rows (prepared, padded)
+    b: jnp.ndarray,            # (m, p) batch rows (prepared, padded)
+    w: jnp.ndarray,            # (m,) f32 batch weights (0 on padded cols)
+    d1: jnp.ndarray,           # (m,)
+    d2: jnp.ndarray,           # (m,)
+    near_onehot: jnp.ndarray,  # (m, k_pad)
+    owner: jnp.ndarray,        # (m,) i32 global row owning column j, -1 = none
+    row_mask: jnp.ndarray,     # (n,) f32, 0 = row excluded (medoid / padding)
+    *,
+    k_true: int,
+    metric: str = "l1",
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Matrix-free per-row-tile swap-selection partials.
+
+    Same contract as ``swap_gain.swap_select`` — ``(best_gain,
+    best_flat)`` of shape (n // SG_TN, 1) each, first-flat-index
+    tie-break — but fed X and B instead of the (n, m) block. n, m must
+    be (SG_TN, SG_TM)-aligned, p a multiple of the metric tile's
+    ``p_mult``, and the one-hot width a 128 multiple; ops.py pads and
+    tree-reduces.
+    """
+    n, p = x.shape
+    m = b.shape[0]
+    kp = near_onehot.shape[1]
+    spec = metrics.get(metric)
+    if spec.tile is None:  # pragma: no cover — ops.fused_swap_select guards
+        raise ValueError(f"metric {metric!r} has no in-kernel tile math")
+    if p % spec.tile.p_mult:
+        raise ValueError(
+            f"p={p} must be padded to a {spec.tile.p_mult} multiple")
+    # B + one-hot + m-vectors stay fully VMEM-resident across the grid
+    # (see the kernel docstring); bound their footprint well under the
+    # ~16 MB/core budget, leaving room for the X tile, the broadcast
+    # slab, and the (TN, kp) scratch (DESIGN.md §2b / §7).
+    resident = (m * p + m * kp) * 4 + 4 * m * 4
+    if resident > 8 * 2**20:
+        raise ValueError(
+            f"matrix-free needs B (m x p) + one-hot (m x k) resident in "
+            f"VMEM; m={m}, p={p}, k_pad={kp} needs {resident / 2**20:.1f} "
+            "MiB > 8 MiB — shrink m (the paper regime is m ~ 100 log kn) "
+            "or fall back to the block path")
+    grid = (n // SG_TN, m // SG_TM)
+    return pl.pallas_call(
+        functools.partial(_fused_sweep_kernel, k_true=k_true,
+                          m_steps=grid[1], metric=metric),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((SG_TN, p), lambda i, jk: (i, 0)),
+            # Constant index maps: one DMA per sweep, then VMEM-resident.
+            pl.BlockSpec((m, p), lambda i, jk: (0, 0)),
+            pl.BlockSpec((1, m), lambda i, jk: (0, 0)),
+            pl.BlockSpec((1, m), lambda i, jk: (0, 0)),
+            pl.BlockSpec((1, m), lambda i, jk: (0, 0)),
+            pl.BlockSpec((m, kp), lambda i, jk: (0, 0)),
+            pl.BlockSpec((1, m), lambda i, jk: (0, 0)),
+            # (n, 1) column layout, as in swap_select: a (TN, 1) tile
+            # reads directly without a lane->sublane relayout.
+            pl.BlockSpec((SG_TN, 1), lambda i, jk: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, jk: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i, jk: (i, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n // SG_TN, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n // SG_TN, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((SG_TN, kp), jnp.float32)],
+        interpret=interpret,
+    )(x, b, w.reshape(1, m), d1.reshape(1, m), d2.reshape(1, m),
+      near_onehot, owner.reshape(1, m).astype(jnp.int32),
+      row_mask.reshape(n, 1))

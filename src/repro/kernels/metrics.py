@@ -15,6 +15,12 @@ metric-agnostic:
                   across a model mesh axis: "sum" (psum), "max" (pmax), or
                   None when the metric cannot be feature-sharded (cosine:
                   ``prepare`` needs full rows). See DESIGN.md §5.
+  * ``tile``    — in-kernel tile math for the matrix-free fused sweep
+                  (DESIGN.md §2b): ``tile(x_tile, b_tile) -> raw`` usable
+                  inside a Pallas kernel body, with p padded to a
+                  ``tiles[2]`` multiple. Replays the standalone kernel's
+                  p-chunk accumulation order exactly, so an on-the-fly
+                  distance tile is bit-for-bit the stored block's.
 
 ``ops.pairwise_distance`` dispatches through this table, so adding a metric
 is one ``register()`` call — no solver, sampling, streaming, or distributed
@@ -40,6 +46,7 @@ class MetricSpec:
     prepare: Callable[[jnp.ndarray], jnp.ndarray] | None = None
     post: Callable[[jnp.ndarray], jnp.ndarray] | None = None
     reduce: str | None = "sum"
+    tile: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray] | None = None
 
     def finalize(self, raw: jnp.ndarray) -> jnp.ndarray:
         """Raw kernel accumulator -> distance (identity when post is None)."""
@@ -81,6 +88,7 @@ register(MetricSpec(
     ref=ref.pairwise_l1_auto,
     kernel=pairwise.l1_distance,
     tiles=_L1_TILES,
+    tile=pairwise.l1_tile,
 ))
 
 register(MetricSpec(
@@ -89,6 +97,7 @@ register(MetricSpec(
     kernel=pairwise.l2_distance,
     tiles=_L2_TILES,
     post=lambda raw: jnp.maximum(raw, 0.0),
+    tile=pairwise.l2_tile,
 ))
 
 register(MetricSpec(
@@ -97,6 +106,7 @@ register(MetricSpec(
     kernel=pairwise.l2_distance,
     tiles=_L2_TILES,
     post=lambda raw: jnp.sqrt(jnp.maximum(raw, 0.0)),
+    tile=pairwise.l2_tile,
 ))
 
 register(MetricSpec(
@@ -107,6 +117,7 @@ register(MetricSpec(
     prepare=_normalize_rows,
     post=lambda raw: jnp.maximum(1.0 - raw, 0.0),
     reduce=None,
+    tile=pairwise.dot_tile,
 ))
 
 register(MetricSpec(
@@ -115,4 +126,5 @@ register(MetricSpec(
     kernel=pairwise.chebyshev_distance,
     tiles=_L1_TILES,
     reduce="max",
+    tile=pairwise.chebyshev_tile,
 ))

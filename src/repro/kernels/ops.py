@@ -19,7 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from . import metrics, swap_gain as swap_gain_mod
+from . import fused_sweep as fused_sweep_mod, metrics, swap_gain as swap_gain_mod
 
 
 def _on_tpu() -> bool:
@@ -168,7 +168,123 @@ def swap_select(
     maskp = _pad_to(row_mask.astype(jnp.float32), 0, tn)
     gains, flats = swap_gain_mod.swap_select(dp, d1p, d2p, nhp, maskp,
                                              k_true=k, interpret=interpret)
+    return _reduce_partials(gains, flats, tn, k)
+
+
+def _reduce_partials(gains, flats, tn, k):
+    """Tree-reduce per-row-tile (best_gain, best_flat) partials to the
+    global ``(best, i, l)``: ``jnp.argmax`` over the tile maxima keeps
+    the first-tile tie-break, so the composition equals the global
+    first-flat-index argmax. Shared by swap_select and the matrix-free
+    fused sweep (identical partial contract)."""
     t = jnp.argmax(gains[:, 0])          # first maximal tile = minimal i
     flat = flats[t, 0]
     return (gains[t, 0], (t * tn + flat // k).astype(jnp.int32),
             (flat % k).astype(jnp.int32))
+
+
+def fused_swap_select(
+    x: jnp.ndarray,            # (n, p) candidate rows (f32 or bf16)
+    b: jnp.ndarray,            # (m, p) batch rows
+    weights: jnp.ndarray,      # (m,) f32 batch weights
+    d1: jnp.ndarray,
+    d2: jnp.ndarray,
+    near_onehot: jnp.ndarray,
+    *,
+    metric: str = "l1",
+    row_mask: jnp.ndarray | None = None,
+    owner: jnp.ndarray | None = None,
+    backend: str = "auto",
+    skip_prepare: bool = False,
+    row_chunk: int | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Matrix-free fused swap selection: ``(best_gain, i, l)`` from X and
+    B directly — the (n, m) weighted block never exists (DESIGN.md §2b).
+
+    Semantically ``swap_select(weighted_block(x, b), ...)`` with the
+    block's exact float chain (metric tile math -> ``finalize`` -> debias
+    ``owner`` set -> per-column weight multiply) evaluated on the fly:
+    the Pallas kernel (kernels/fused_sweep.py) recomputes each (TN, TM)
+    distance tile in VMEM from an O((TN+TM)·p) read instead of an
+    O(TN·TM) block read, and only the O(n/TN) selection partials reach
+    HBM. Selection is bit-for-bit ``ops.swap_select`` on the materialised
+    block of the same backend (tests/test_matrix_free.py pins it, ties
+    included).
+
+    ``owner`` (global row index per batch column, -1 = none) applies the
+    debias variant's LARGE diagonal in-flight. ``skip_prepare`` is for
+    loop callers (solver.solve_matrix_free) that applied the metric's
+    row transform once outside the swap loop. ``row_chunk`` bounds the
+    *ref* backend's evaluation to O(row_chunk · m) memory by streaming
+    row chunks through the oracle (row-local math — identical floats);
+    the Pallas/interpret paths are already tiled and ignore it.
+
+    vmap-safe on every backend, like :func:`swap_select`: the restart
+    engine maps it over a leading lane axis with X unbatched.
+    """
+    from . import ref
+
+    backend = _resolve(backend)
+    spec = metrics.get(metric)
+    if spec.prepare is not None and not skip_prepare:
+        x = spec.prepare(x)
+        b = spec.prepare(b)
+    n, p = x.shape
+    m = b.shape[0]
+    k = near_onehot.shape[1]
+    if row_mask is None:
+        row_mask = jnp.ones((n,), jnp.float32)
+    if owner is None:
+        owner = jnp.full((m,), -1, jnp.int32)
+
+    if backend == "ref":
+        if row_chunk is None or row_chunk >= n:
+            return ref.fused_swap_select(x, b, weights, d1, d2, near_onehot,
+                                         row_mask, owner, metric=metric)
+        # Stream the oracle in row chunks: every gain is row-local, so the
+        # chunked evaluation computes identical floats per row, and the
+        # chunk-major tree reduce equals the global first-flat argmax.
+        # Floor of 8 rows: XLA strength-reduces a degenerate (1, m) @
+        # (m, k) matmul into a context-blocked reduce, which would void
+        # the oracle's fixed-accumulation-order guarantee (ref.swap_gain).
+        row_chunk = max(row_chunk, 8)
+        pad = (-n) % row_chunk
+        xp = jnp.pad(x, ((0, pad), (0, 0)))
+        maskp = jnp.pad(row_mask.astype(jnp.float32), (0, pad))
+        c = (n + pad) // row_chunk
+        offs = jnp.arange(c, dtype=jnp.int32) * row_chunk
+
+        def chunk(args):
+            xi, mi, off = args
+            g, i, l = ref.fused_swap_select(xi, b, weights, d1, d2,
+                                            near_onehot, mi, owner,
+                                            metric=metric, row_offset=off)
+            return g, i * k + l
+        gains, flats = jax.lax.map(
+            chunk, (xp.reshape(c, row_chunk, p),
+                    maskp.reshape(c, row_chunk), offs))
+        return _reduce_partials(gains[:, None], flats[:, None], row_chunk, k)
+
+    interpret = backend == "interpret"
+    if spec.tile is None:
+        raise ValueError(
+            f"metric {metric!r} has no in-kernel tile math; register a "
+            "MetricSpec.tile to use the matrix-free kernel path, or run "
+            "with backend='ref'")
+    tn, tm = swap_gain_mod.SG_TN, swap_gain_mod.SG_TM
+    tp = spec.tile.p_mult
+    xp = _pad_to(_pad_to(x, 0, tn), 1, tp)
+    bp = _pad_to(_pad_to(b, 0, tm), 1, tp)
+    # Padded batch columns carry weight 0 => weighted distance 0, with
+    # d1 = d2 = 0 their relu and removal terms vanish; padded rows get
+    # mask 0 => NEG at the reduce; padded owners (-1) never match a row.
+    wp = _pad_to(weights.astype(jnp.float32), 0, tm)
+    d1p = _pad_to(d1, 0, tm)
+    d2p = _pad_to(d2, 0, tm)
+    nhp = _pad_to(_pad_to(near_onehot, 0, tm), 1, 128)
+    ownp = _pad_to(owner.astype(jnp.int32), 0, tm, value=-1)
+    maskp = _pad_to(row_mask.astype(jnp.float32), 0, tn)
+    gains, flats = fused_sweep_mod.fused_sweep(
+        xp, bp, wp, d1p, d2p, nhp, ownp, maskp, k_true=k, metric=metric,
+        interpret=interpret)
+    return _reduce_partials(gains, flats, tn, k)

@@ -41,6 +41,95 @@ L1_TN, L1_TM, L1_TP, L1_TP_INNER = 128, 128, 512, 8
 L2_TN, L2_TM, L2_TP = 256, 256, 256
 
 
+# --- Tile math (shared with the matrix-free fused sweep, DESIGN.md §2b) ---
+#
+# The per-(TP)-chunk accumulation of each metric, factored out of the
+# kernel bodies so kernels/fused_sweep.py composes the *identical* float
+# sequence in-kernel: a distance tile computed on the fly must be
+# bit-for-bit the one the standalone pairwise kernels would have stored.
+# All chunk fns take f32 (TN, TP_chunk) x / (TM, TP_chunk) b tiles and
+# return the (TN, TM) partial for that chunk.
+
+def _l1_chunk(x, b):
+    """Sum_p |x - b| over one TP chunk, TP_INNER-blocked: bounds the
+    broadcast intermediate to (TN, TM, TP_INNER) f32 in VREG/VMEM."""
+    acc = jnp.zeros((x.shape[0], b.shape[0]), jnp.float32)
+    for s in range(x.shape[1] // L1_TP_INNER):
+        xs = x[:, s * L1_TP_INNER:(s + 1) * L1_TP_INNER]
+        bs = b[:, s * L1_TP_INNER:(s + 1) * L1_TP_INNER]
+        acc += jnp.abs(xs[:, None, :] - bs[None, :, :]).sum(-1)
+    return acc
+
+
+def _cheb_chunk(x, b):
+    """Max_p |x - b| over one TP chunk, TP_INNER-blocked like _l1_chunk."""
+    acc = jnp.zeros((x.shape[0], b.shape[0]), jnp.float32)
+    for s in range(x.shape[1] // L1_TP_INNER):
+        xs = x[:, s * L1_TP_INNER:(s + 1) * L1_TP_INNER]
+        bs = b[:, s * L1_TP_INNER:(s + 1) * L1_TP_INNER]
+        acc = jnp.maximum(acc, jnp.abs(xs[:, None, :] - bs[None, :, :]).max(-1))
+    return acc
+
+
+def _l2_chunk(x, b):
+    """||x||^2 + ||b||^2 - 2 x.b^T partial over one TP chunk (MXU)."""
+    xsq = jnp.sum(x * x, axis=1)                # (TN,)
+    bsq = jnp.sum(b * b, axis=1)                # (TM,)
+    cross = jax.lax.dot_general(
+        x, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (TN, TM) on the MXU
+    return xsq[:, None] + bsq[None, :] - 2.0 * cross
+
+
+def _dot_chunk(x, b):
+    """x.b^T partial over one TP chunk (MXU)."""
+    return jax.lax.dot_general(
+        x, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _p_folded(chunk_fn, fold, tp, p_mult):
+    """Full-p tile fn: loop TP-boundary chunks in grid order, folding
+    partials the way the corresponding kernel's o_ref accumulation does
+    (add / max), each chunk keeping its own local sub-accumulation — the
+    exact association of the standalone kernel's p-grid sweep, so the
+    floats match chunk for chunk.
+
+    Callers pad p to a ``p_mult`` multiple (exposed as ``tile.p_mult``):
+    the full tp for the MXU metrics (the contraction length must match
+    the standalone kernel's for identical dot/sum reductions), but only
+    TP_INNER for the broadcast metrics — their accumulation is a
+    *sequential* chain of 8-wide partials, and dropping the standalone
+    kernel's zero-padding chunks only removes exact ``+0.0`` /
+    ``max(., 0)`` identity steps (both operands are >= 0), so the
+    cheaper padding is still bit-for-bit."""
+    def tile(x, b):
+        p = x.shape[1]
+        assert p % p_mult == 0, f"p={p} must be a {p_mult} multiple"
+        acc = chunk_fn(x[:, :tp], b[:, :tp])
+        for c in range(tp, p, tp):
+            acc = fold(acc, chunk_fn(x[:, c:c + tp], b[:, c:c + tp]))
+        return acc
+    tile.p_mult = p_mult
+    return tile
+
+
+l1_tile = _p_folded(_l1_chunk, jnp.add, L1_TP, L1_TP_INNER)
+chebyshev_tile = _p_folded(_cheb_chunk, jnp.maximum, L1_TP, L1_TP_INNER)
+dot_tile = _p_folded(_dot_chunk, jnp.add, L2_TP, L2_TP)
+_l2_tile_raw = _p_folded(_l2_chunk, jnp.add, L2_TP, L2_TP)
+
+
+def l2_tile(x, b):
+    """Full-p squared-L2 tile, including the wrapper-level clamp of
+    :func:`l2_distance` (max with 0 is idempotent under the registry's
+    post-transforms, so applying it here keeps the chains identical)."""
+    return jnp.maximum(_l2_tile_raw(x, b), 0.0)
+
+
+l2_tile.p_mult = L2_TP
+
+
 def _l1_kernel(x_ref, b_ref, o_ref):
     """One (TN, TM) output tile; accumulates |x - b| sums over the p grid."""
     pk = pl.program_id(2)
@@ -51,14 +140,7 @@ def _l1_kernel(x_ref, b_ref, o_ref):
 
     x = x_ref[...].astype(jnp.float32)          # (TN, TP)
     b = b_ref[...].astype(jnp.float32)          # (TM, TP)
-    acc = jnp.zeros(o_ref.shape, jnp.float32)
-    # Unrolled inner loop over TP in TP_INNER chunks: bounds the broadcast
-    # intermediate to (TN, TM, TP_INNER) f32 (= 512 KB) in VREG/VMEM.
-    for s in range(L1_TP // L1_TP_INNER):
-        xs = x[:, s * L1_TP_INNER:(s + 1) * L1_TP_INNER]
-        bs = b[:, s * L1_TP_INNER:(s + 1) * L1_TP_INNER]
-        acc += jnp.abs(xs[:, None, :] - bs[None, :, :]).sum(-1)
-    o_ref[...] += acc
+    o_ref[...] += _l1_chunk(x, b)
 
 
 def _l2_kernel(x_ref, b_ref, o_ref):
@@ -72,12 +154,7 @@ def _l2_kernel(x_ref, b_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)          # (TN, TP)
     b = b_ref[...].astype(jnp.float32)          # (TM, TP)
     # Partial sums over this p chunk all add linearly across the grid.
-    xsq = jnp.sum(x * x, axis=1)                # (TN,)
-    bsq = jnp.sum(b * b, axis=1)                # (TM,)
-    cross = jax.lax.dot_general(
-        x, b, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)     # (TN, TM) on the MXU
-    o_ref[...] += xsq[:, None] + bsq[None, :] - 2.0 * cross
+    o_ref[...] += _l2_chunk(x, b)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -117,12 +194,7 @@ def _chebyshev_kernel(x_ref, b_ref, o_ref):
 
     x = x_ref[...].astype(jnp.float32)          # (TN, TP)
     b = b_ref[...].astype(jnp.float32)          # (TM, TP)
-    acc = jnp.zeros(o_ref.shape, jnp.float32)
-    for s in range(L1_TP // L1_TP_INNER):
-        xs = x[:, s * L1_TP_INNER:(s + 1) * L1_TP_INNER]
-        bs = b[:, s * L1_TP_INNER:(s + 1) * L1_TP_INNER]
-        acc = jnp.maximum(acc, jnp.abs(xs[:, None, :] - bs[None, :, :]).max(-1))
-    o_ref[...] = jnp.maximum(o_ref[...], acc)
+    o_ref[...] = jnp.maximum(o_ref[...], _cheb_chunk(x, b))
 
 
 def _dot_kernel(x_ref, b_ref, o_ref):
@@ -135,9 +207,7 @@ def _dot_kernel(x_ref, b_ref, o_ref):
 
     x = x_ref[...].astype(jnp.float32)          # (TN, TP)
     b = b_ref[...].astype(jnp.float32)          # (TM, TP)
-    o_ref[...] += jax.lax.dot_general(
-        x, b, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    o_ref[...] += _dot_chunk(x, b)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -142,14 +142,72 @@ def swap_gain(
 
     Positive G = the swap reduces the estimated objective. Identical numbers
     to Algorithm 2 of the paper, evaluated for all (i, l) at once.
+
+    Implementation notes, mirroring the kernels' codegen-stability rules
+    (swap_gain._accumulate_gain, DESIGN.md §2b) so the oracle computes
+    the same bits no matter the surrounding program (eager op-by-op, a
+    jitted solver loop, or a row-chunked lax.map sweep): the add-gain
+    term is the value-identical ``d1 - min(d, d1)`` (no mul+sub chain
+    for the backend to contract into an FMA when d was just computed),
+    and both m-contractions are matmuls with shape-fixed accumulation
+    order, never ``jnp.sum`` (whose blocking follows the fusion context).
     """
     d = d.astype(jnp.float32)
     d1 = d1.astype(jnp.float32)[None, :]
     d2 = d2.astype(jnp.float32)[None, :]
-    g = jnp.maximum(d1 - d, 0.0).sum(axis=1)                    # (n,)
+    gterm = d1 - jnp.minimum(d, d1)                 # (n, m) == relu(d1 - d)
+    g = gterm @ jnp.ones((d.shape[1], 1), jnp.float32)          # (n, 1)
     r = d1 - jnp.minimum(jnp.maximum(d, d1), d2)                # (n, m)
     big_r = r @ near_onehot.astype(jnp.float32)                 # (n, k)
-    return g[:, None] + big_r
+    return g + big_r
+
+
+def apply_debias(d: jnp.ndarray, owner: jnp.ndarray,
+                 row_offset: int | jnp.ndarray = 0) -> jnp.ndarray:
+    """Set d[owner_j - row_offset, j] = LARGE wherever that local row
+    exists: the matrix-free mirror of ``build_batch``'s debias diagonal
+    set (``d.at[idx, arange(m)].set(LARGE)``). ``owner`` holds global row
+    indices (-1 = no owner); ``row_offset`` maps them into this block's
+    local rows (row-chunked / sharded callers)."""
+    n, m = d.shape
+    local = owner - row_offset
+    valid = (local >= 0) & (local < n)
+    safe = jnp.clip(local, 0, n - 1)
+    cols = jnp.arange(m)
+    return d.at[safe, cols].set(jnp.where(valid, LARGE, d[safe, cols]))
+
+
+def fused_swap_select(
+    x: jnp.ndarray,            # (n, p) candidate rows (already prepared)
+    b: jnp.ndarray,            # (m, p) batch rows (already prepared)
+    w: jnp.ndarray,            # (m,) batch weights
+    d1: jnp.ndarray,
+    d2: jnp.ndarray,
+    near_onehot: jnp.ndarray,
+    row_mask: jnp.ndarray | None = None,
+    owner: jnp.ndarray | None = None,
+    *,
+    metric: str = "l1",
+    row_offset: int | jnp.ndarray = 0,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Matrix-free swap-selection oracle (DESIGN.md §2b).
+
+    Materialises the weighted distance block through the *identical*
+    float chain the batch builder uses — metric ``ref`` on prepared rows,
+    ``finalize``, debias owner set, weight multiply — then defers to
+    :func:`swap_select`. Ground truth for ``ops.fused_swap_select``; the
+    Pallas kernel (kernels/fused_sweep.py) must match it exactly, ties
+    included. Inputs must already carry the metric's ``prepare``
+    transform (ops.py applies it once, outside any loop).
+    """
+    from . import metrics  # deferred: metrics.py imports this module
+
+    spec = metrics.get(metric)
+    d = spec.finalize(spec.ref(x, b))
+    if owner is not None:
+        d = apply_debias(d, owner, row_offset)
+    return swap_select(d * w[None, :].astype(jnp.float32),
+                       d1, d2, near_onehot, row_mask)
 
 
 def swap_select(

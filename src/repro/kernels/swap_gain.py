@@ -54,13 +54,7 @@ def _swap_gain_kernel(d_ref, d1_ref, d2_ref, nh_ref, o_ref):
     d1 = d1_ref[...].astype(jnp.float32)          # (1, TM)
     d2 = d2_ref[...].astype(jnp.float32)          # (1, TM)
     nh = nh_ref[...].astype(jnp.float32)          # (TM, K)
-
-    g = jnp.maximum(d1 - d, 0.0).sum(axis=1)      # (TN,)  VPU
-    r = d1 - jnp.minimum(jnp.maximum(d, d1), d2)  # (TN, TM) VPU
-    big_r = jax.lax.dot_general(                  # (TN, K) MXU
-        r, nh, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    o_ref[...] += big_r + g[:, None]
+    _accumulate_gain(d, d1, d2, nh, o_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -92,6 +86,60 @@ def swap_gain(
     )(d, d1.reshape(1, m), d2.reshape(1, m), near_onehot)
 
 
+def _accumulate_gain(d, d1, d2, nh, acc_ref):
+    """One (TN, TM) gain-accumulation step into the VMEM scratch — the
+    shared swap math of swap_select and the matrix-free fused sweep
+    (kernels/fused_sweep.py): identical ops, so the accumulated floats
+    cannot depend on where the distance tile came from.
+
+    Two codegen-stability rules keep that true even when ``d`` is an
+    on-chip computation rather than a loaded block (DESIGN.md §2b):
+
+      * both m-contractions run as dot_generals — the add-gain row sum
+        against a ones column, not ``jnp.sum`` — because a gemm's
+        accumulation order is fixed by its shapes, while XLA re-blocks a
+        ``reduce`` with the fusion context;
+      * the add-gain term is ``d1 - min(d, d1)``, value-identical to
+        ``relu(d1 - d)`` (either exact 0 or the exact difference) but
+        with a ``min`` between the producer of ``d`` (a weight multiply
+        in the fused sweep) and the subtract, so the backend cannot
+        contract mul+sub into one fused-multiply-sub and skip the
+        product's rounding. The removal term already has this shape.
+    """
+    gterm = d1 - jnp.minimum(d, d1)               # (TN, TM) == relu(d1 - d)
+    ones = jnp.ones((d.shape[1], 1), jnp.float32)
+    g = jax.lax.dot_general(                      # (TN, 1) m row-sum
+        gterm, ones, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    r = d1 - jnp.minimum(jnp.maximum(d, d1), d2)  # (TN, TM) VPU
+    big_r = jax.lax.dot_general(                  # (TN, K) MXU
+        r, nh, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    acc_ref[...] += big_r + g
+
+
+def _select_reduce(acc_ref, mask_ref, g_ref, f_ref, *, k_true):
+    """On-chip reduction of the accumulated (TN, K) gain tile to one
+    (best_gain, best_flat) partial — first-flat-index tie-break, exactly
+    jnp.argmax semantics: the first row attaining the tile max, then the
+    first column within that row attaining the row max. Shared by
+    swap_select and the matrix-free fused sweep."""
+    tn, kp = acc_ref.shape
+    gain = acc_ref[...]
+    col = jax.lax.broadcasted_iota(jnp.int32, (tn, kp), 1)
+    rmask = mask_ref[...]                         # (TN, 1), no relayout
+    gain = jnp.where((col < k_true) & (rmask > 0), gain, _NEG)
+    rmax = jnp.max(gain, axis=1, keepdims=True)            # (TN, 1)
+    l_row = jnp.min(jnp.where(gain == rmax, col, kp),
+                    axis=1, keepdims=True)                 # (TN, 1)
+    tmax = jnp.max(gain)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (tn, 1), 0)
+    brow = jnp.min(jnp.where(rmax == tmax, rows, tn))
+    bl = jnp.min(jnp.where(rows == brow, l_row, kp))
+    g_ref[0, 0] = tmax
+    f_ref[0, 0] = brow * k_true + bl
+
+
 def _swap_select_kernel(d_ref, d1_ref, d2_ref, nh_ref, mask_ref,
                         g_ref, f_ref, acc_ref, *, k_true, m_steps):
     """Gain accumulation fused with on-chip per-tile argmax.
@@ -111,33 +159,11 @@ def _swap_select_kernel(d_ref, d1_ref, d2_ref, nh_ref, mask_ref,
     d1 = d1_ref[...].astype(jnp.float32)          # (1, TM)
     d2 = d2_ref[...].astype(jnp.float32)          # (1, TM)
     nh = nh_ref[...].astype(jnp.float32)          # (TM, K)
-
-    g = jnp.maximum(d1 - d, 0.0).sum(axis=1)      # (TN,)  VPU
-    r = d1 - jnp.minimum(jnp.maximum(d, d1), d2)  # (TN, TM) VPU
-    big_r = jax.lax.dot_general(                  # (TN, K) MXU
-        r, nh, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    acc_ref[...] += big_r + g[:, None]
+    _accumulate_gain(d, d1, d2, nh, acc_ref)
 
     @pl.when(jk == m_steps - 1)
     def _reduce():
-        tn, kp = acc_ref.shape
-        gain = acc_ref[...]
-        col = jax.lax.broadcasted_iota(jnp.int32, (tn, kp), 1)
-        rmask = mask_ref[...]                     # (TN, 1), no relayout
-        gain = jnp.where((col < k_true) & (rmask > 0), gain, _NEG)
-        # First-flat-index tie-break, exactly jnp.argmax semantics: the
-        # first row attaining the tile max, then the first column within
-        # that row attaining the row max.
-        rmax = jnp.max(gain, axis=1, keepdims=True)            # (TN, 1)
-        l_row = jnp.min(jnp.where(gain == rmax, col, kp),
-                        axis=1, keepdims=True)                 # (TN, 1)
-        tmax = jnp.max(gain)
-        rows = jax.lax.broadcasted_iota(jnp.int32, (tn, 1), 0)
-        brow = jnp.min(jnp.where(rmax == tmax, rows, tn))
-        bl = jnp.min(jnp.where(rows == brow, l_row, kp))
-        g_ref[0, 0] = tmax
-        f_ref[0, 0] = brow * k_true + bl
+        _select_reduce(acc_ref, mask_ref, g_ref, f_ref, k_true=k_true)
 
 
 @functools.partial(jax.jit, static_argnames=("k_true", "interpret"))

@@ -1,0 +1,85 @@
+"""Subprocess body: the distributed matrix-free sweep (per-shard fused
+distance+select partials, 3-scalar election, owner-recomputed winning
+row) on 2 fake host devices must be bit-for-bit identical to the
+single-device ``solver.solve_matrix_free`` — same medoid array (slot
+order included), same swap count, same estimated objective — across the
+in-mesh weight variants, and the in-mesh nniw weights must equal the
+host streaming histogram. No shard ever materialises a distance block.
+Invoked by tests/test_distributed.py with
+XLA_FLAGS=--xla_force_host_platform_device_count=2 in the environment."""
+import os
+
+assert "--xla_force_host_platform_device_count=2" in os.environ.get("XLA_FLAGS", "")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import solver, streaming  # noqa: E402
+from repro.core.distributed import (  # noqa: E402
+    make_distributed_obp_matrix_free,
+    shard_over_batch,
+)
+
+
+def main() -> None:
+    assert jax.device_count() == 2, jax.device_count()
+    mesh = jax.make_mesh((2,), ("data",))
+
+    rng = np.random.default_rng(0)
+    n, p, k, m = 256, 8, 6, 32
+
+    for case, variant, metric, quantize in (
+            ("plain", "unif", "l1", None),
+            ("ties", "unif", "l1", 2),     # coarse grid -> duplicate gains
+            ("nniw", "nniw", "l2", None),
+            ("debias", "debias", "cosine", None)):
+        xv = rng.normal(size=(n, p)).astype(np.float32)
+        if quantize:
+            xv = np.round(xv * quantize) / quantize
+        x = jnp.asarray(xv)
+        batch_idx = jnp.asarray(
+            rng.choice(n, size=m, replace=False)).astype(jnp.int32)
+        init_idx = jnp.asarray(rng.choice(n, size=k, replace=False))
+
+        if variant == "nniw":
+            w = streaming.stream_nn_counts(x, x[batch_idx],
+                                           metric=metric) * (m / n)
+        else:
+            w = jnp.ones((m,), jnp.float32)
+        ref = solver.solve_matrix_free(x, batch_idx, w, init_idx,
+                                       metric=metric,
+                                       debias=(variant == "debias"))
+
+        run = make_distributed_obp_matrix_free(mesh, k=k, metric=metric,
+                                               variant=variant)
+        got, w_mesh = run(shard_over_batch(mesh, x), batch_idx, init_idx)
+
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(w_mesh))
+        np.testing.assert_array_equal(np.asarray(ref.medoid_idx),
+                                      np.asarray(got.medoid_idx))
+        assert int(got.n_swaps) == int(ref.n_swaps), case
+        np.testing.assert_array_equal(np.float32(ref.est_objective),
+                                      np.float32(got.est_objective))
+        print(f"OK {case} swaps={int(got.n_swaps)} "
+              f"obj={float(got.est_objective):.6f}")
+
+    # The one_batch_pam mesh route reaches the same factory.
+    x = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+    key = jax.random.PRNGKey(3)
+    host_res, host_batch = solver.one_batch_pam(
+        key, x, k, m=m, variant="nniw", strategy="matrix_free")
+    with mesh:
+        mesh_res, mesh_batch = solver.one_batch_pam(
+            key, x, k, m=m, variant="nniw", strategy="matrix_free",
+            mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(host_batch.weights),
+                                  np.asarray(mesh_batch.weights))
+    np.testing.assert_array_equal(np.asarray(host_res.medoid_idx),
+                                  np.asarray(mesh_res.medoid_idx))
+    assert host_batch.d is None and mesh_batch.d is None
+    print("OK one_batch_pam matrix_free mesh path")
+
+
+if __name__ == "__main__":
+    main()

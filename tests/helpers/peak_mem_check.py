@@ -1,0 +1,57 @@
+"""Subprocess body: matrix-free peak-memory smoke (DESIGN.md §2b).
+
+Solves OneBatchPAM at an n·m whose *materialized* f32 block would need
+4 GB — above a hard 3 GB ``RLIMIT_AS`` cap this process installs on
+itself before touching jax — so the run can only succeed if the
+matrix-free path truly never builds the (n, m) block:
+``build_batch(materialize=False)`` + ``solve_matrix_free`` with a
+row-chunked ref sweep keep peak residency at O(np + chunk·m). The
+kernel-enforced cap is the assertion (an ``ru_maxrss`` comparison is
+noisy under a loaded parent — thread-count-dependent malloc arenas —
+and flaked at exactly the wrong times); the printed RSS is informational.
+Run in a subprocess (tests/test_matrix_free.py) so the cap and the
+measurement apply to this workload alone.
+"""
+import resource
+
+N, M, P, K = 262_144, 4_096, 4, 4
+CHUNK = 2_048
+BLOCK_MB = N * M * 4 // 2**20            # 4096 MB if ever materialized
+CAP_BYTES = 3 * 2**30                    # hard 3 GB address-space ceiling
+
+# Install the cap before jax allocates anything. RLIMIT_AS bounds every
+# mmap on any kernel (RLIMIT_DATA only covers mmap from Linux 4.7): a
+# materialized block fails its own allocation instead of us having to
+# observe it. The cap is ~6x the observed steady-state footprint
+# (~0.5 GB RSS), so only an O(nm) allocation can trip it.
+resource.setrlimit(resource.RLIMIT_AS, (CAP_BYTES, CAP_BYTES))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import sampling, solver  # noqa: E402
+
+
+def main() -> None:
+    assert BLOCK_MB * 2**20 > CAP_BYTES, "shape no longer proves anything"
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(N, P)).astype(np.float32))
+    key = jax.random.PRNGKey(0)
+    batch = sampling.build_batch(key, x, M, variant="unif", backend="ref",
+                                 chunk_size=CHUNK, materialize=False)
+    assert batch.d is None
+    init = jnp.asarray(rng.choice(N, size=K, replace=False))
+    res = solver.solve_matrix_free(x, batch.idx, batch.weights, init,
+                                   backend="ref", chunk_size=CHUNK,
+                                   max_swaps=40)
+    idx = np.asarray(res.medoid_idx)
+    assert len(np.unique(idx)) == K and ((idx >= 0) & (idx < N)).all()
+    assert np.isfinite(float(res.est_objective))
+    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+    print(f"OK peak_mem rss={rss_mb:.0f}MB cap={CAP_BYTES // 2**20}MB "
+          f"block_would_be={BLOCK_MB}MB swaps={int(res.n_swaps)}")
+
+
+if __name__ == "__main__":
+    main()

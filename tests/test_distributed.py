@@ -47,6 +47,18 @@ def test_fused_sharded_sweep_bitwise_matches_single_device():
         assert f"OK {case}" in out
 
 
+def test_matrix_free_sharded_sweep_bitwise_matches_single_device():
+    """Matrix-free sharded sweep (per-shard fused distance+select
+    partials, 3-scalar election, owner-recomputed winning row — no shard
+    ever holds a block) on 2 devices == the single-device
+    solve_matrix_free, bit-for-bit, across plain/tie-heavy/nniw/debias
+    cases, plus the one_batch_pam mesh route (ISSUE 4)."""
+    out = _run("dist_matrix_free_check.py", devices=2)
+    for case in ("plain", "ties", "nniw", "debias"):
+        assert f"OK {case}" in out
+    assert "OK one_batch_pam matrix_free mesh path" in out
+
+
 def test_restart_axis_composes_with_shard_axis_bitwise():
     """Vmapped multi-restart sweep under shard_map (per-shard fused
     partials per restart, one-psum election) == the host restart engine,

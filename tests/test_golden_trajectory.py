@@ -16,7 +16,11 @@ import numpy as np
 import pytest
 
 from repro.core import trace
-from tools.make_golden_trajectories import e2e_instance, matrix_instance
+from tools.make_golden_trajectories import (
+    e2e_instance,
+    matrix_free_instance,
+    matrix_instance,
+)
 
 GOLDEN = pathlib.Path(__file__).parent / "golden" / "trajectories.json"
 CASES = json.loads(GOLDEN.read_text())["cases"]
@@ -37,6 +41,19 @@ def _assert_matches(tr, want, name):
 
 @pytest.mark.parametrize("case", CASES, ids=[c["name"] for c in CASES])
 def test_golden_trajectory(case):
+    if case["kind"] == "matrix_free":
+        # Block-free replay (ISSUE 4): the (n, m) block is never built,
+        # yet the committed swap sequence — generated with a cross-path
+        # identity assert against the block trace — must replay exactly.
+        spec = case["spec"]
+        x, batch, init = matrix_free_instance(spec)
+        np.testing.assert_array_equal(np.asarray(init), case["init"])
+        tr = trace.trace_matrix_free(x, batch.idx, batch.weights, init,
+                                     metric=spec["metric"],
+                                     debias=(spec["variant"] == "debias"),
+                                     backend="ref")
+        _assert_matches(tr, case["batched"], case["name"])
+        return
     if case["kind"] == "matrix":
         d, init = matrix_instance(case["spec"])
     else:

@@ -1,0 +1,437 @@
+"""Matrix-free fused sweep test suite (ISSUE 4 acceptance).
+
+The matrix-free path recomputes distance tiles on the fly instead of
+reading a materialized (n, m) block — *same floats, different data
+movement* — so every test here is an exact-equality test, not allclose:
+
+  * ops.fused_swap_select == ops.swap_select on the materialized block,
+    per backend, ties and masks included;
+  * solve_matrix_free is swap-for-swap solve_batched across all 5
+    registered metrics x {f32, bf16 inputs} x k (hypothesis on ref,
+    seeded on interpret);
+  * block-free nniw weights == materialized weights, bitwise, single
+    batch and grouped restart pools;
+  * the restart engine's vmapped matrix-free lanes == the unbatched
+    solver per lane;
+  * a peak-memory subprocess smoke solves at an n·m whose f32 block
+    (4 GB) could not be allocated under the helper's self-installed
+    hard 3 GB RLIMIT_AS cap.
+
+hypothesis is optional (requirements-dev.txt): without it the property
+tests skip and everything else still collects.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip, everything else still collects
+    def settings(**_kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(**_kw):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    class _AnyStrategy:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+from repro.core import restarts as restarts_mod
+from repro.core import sampling, solver, streaming, trace
+from repro.core.selector import MedoidSelector
+from repro.kernels import metrics, ops
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+METRICS = metrics.names()
+
+
+def _assert_same_solve(a, b, ctx=""):
+    np.testing.assert_array_equal(np.asarray(a.medoid_idx),
+                                  np.asarray(b.medoid_idx), err_msg=str(ctx))
+    assert int(a.n_swaps) == int(b.n_swaps), ctx
+    np.testing.assert_array_equal(np.float32(a.est_objective),
+                                  np.float32(b.est_objective))
+    assert bool(a.converged) == bool(b.converged), ctx
+
+
+def _instance(seed, n=90, p=7, m=28, k=5, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+    if dtype is not np.float32:
+        x = x.astype(dtype)
+    init = jnp.asarray(rng.choice(n, size=k, replace=False))
+    return x, init
+
+
+# ------------------------------------------------ ops-level contract -----
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+@pytest.mark.parametrize("metric", METRICS)
+def test_fused_select_matches_block_select(backend, metric):
+    """One fused sweep == swap_select on the materialized weighted block
+    of the same backend: same gain bits, same (i, l), masks honoured."""
+    rng = np.random.default_rng(1000 + list(METRICS).index(metric))
+    n, p, m, k = 70, 6, 22, 4
+    x = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+    idx = jnp.asarray(rng.choice(n, size=m, replace=False)).astype(jnp.int32)
+    w = jnp.asarray(rng.uniform(0.5, 1.5, size=m).astype(np.float32))
+    d = ops.pairwise_distance(x, x[idx], metric=metric, backend=backend)
+    dw = d * w[None, :]
+    a = jnp.asarray(rng.uniform(0.0, 3.0, size=m).astype(np.float32))
+    d1, d2 = a, a + 0.25
+    nh = jax.nn.one_hot(jnp.asarray(rng.integers(0, k, size=m)), k,
+                        dtype=jnp.float32)
+    mask = jnp.ones((n,), jnp.float32).at[jnp.asarray([0, 3, n - 1])].set(0.0)
+
+    g_blk, i_blk, l_blk = ops.swap_select(dw, d1, d2, nh, row_mask=mask,
+                                          backend=backend)
+    g_mf, i_mf, l_mf = ops.fused_swap_select(x, x[idx], w, d1, d2, nh,
+                                             metric=metric, row_mask=mask,
+                                             backend=backend)
+    assert (int(i_mf), int(l_mf)) == (int(i_blk), int(l_blk))
+    np.testing.assert_array_equal(np.float32(g_mf), np.float32(g_blk))
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_fused_select_ties_and_debias(backend):
+    """Quantized distances plateau the gains; the fused tie-break must
+    still pick the block path's first flat index — with the debias owner
+    diagonal applied in-flight."""
+    rng = np.random.default_rng(7)
+    n, p, m, k = 65, 5, 18, 3
+    x = jnp.asarray(np.round(rng.normal(size=(n, p)) * 2).astype(np.float32) / 2)
+    idx = jnp.asarray(rng.choice(n, size=m, replace=False)).astype(jnp.int32)
+    w = jnp.ones((m,), jnp.float32)
+    d = ops.pairwise_distance(x, x[idx], metric="l1", backend=backend)
+    d = d.at[idx, jnp.arange(m)].set(jnp.float32(1e15))   # debias diagonal
+    a = jnp.asarray(np.round(rng.uniform(0, 3, size=m) * 2).astype(np.float32) / 2)
+    d1, d2 = a, a + 0.5
+    nh = jax.nn.one_hot(jnp.asarray(rng.integers(0, k, size=m)), k,
+                        dtype=jnp.float32)
+    g_blk, i_blk, l_blk = ops.swap_select(d * w[None, :], d1, d2, nh,
+                                          backend=backend)
+    g_mf, i_mf, l_mf = ops.fused_swap_select(x, x[idx], w, d1, d2, nh,
+                                             metric="l1", owner=idx,
+                                             backend=backend)
+    assert (int(i_mf), int(l_mf)) == (int(i_blk), int(l_blk))
+    np.testing.assert_array_equal(np.float32(g_mf), np.float32(g_blk))
+
+
+def test_fused_select_rejects_metric_without_tile_math():
+    """A metric registered without the optional ``tile`` field (the
+    registry's one-call contract predates it) must fail the kernel path
+    with the intended ValueError, not an AttributeError — and still work
+    on the ref backend, which needs no tile math."""
+    spec = metrics.get("l1")
+    metrics.register(metrics.MetricSpec(
+        name="_test_no_tile", ref=spec.ref, kernel=spec.kernel,
+        tiles=spec.tiles))
+    x = jnp.zeros((8, 4), jnp.float32)
+    args = (x, x[:4], jnp.ones((4,)), jnp.zeros((4,)), jnp.zeros((4,)),
+            jnp.eye(4, 2, dtype=jnp.float32))
+    with pytest.raises(ValueError, match="tile math"):
+        ops.fused_swap_select(*args, metric="_test_no_tile",
+                              backend="interpret")
+    g, i, l = ops.fused_swap_select(*args, metric="_test_no_tile",
+                                    backend="ref")
+    assert np.isfinite(float(g))
+
+
+def test_fused_select_ref_row_chunking_is_exact():
+    """The ref backend's O(chunk·m) streamed evaluation computes the
+    identical selection (gains are row-local; chunk-major reduce keeps
+    the first-flat tie-break)."""
+    rng = np.random.default_rng(11)
+    n, p, m, k = 103, 6, 17, 4
+    x = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+    idx = jnp.asarray(rng.choice(n, size=m, replace=False)).astype(jnp.int32)
+    w = jnp.asarray(rng.uniform(0.5, 1.5, size=m).astype(np.float32))
+    a = jnp.asarray(rng.uniform(0, 3, size=m).astype(np.float32))
+    d1, d2 = a, a + 0.25
+    nh = jax.nn.one_hot(jnp.asarray(rng.integers(0, k, size=m)), k,
+                        dtype=jnp.float32)
+    full = ops.fused_swap_select(x, x[idx], w, d1, d2, nh, owner=idx,
+                                 backend="ref")
+    for chunk in (8, 16, 50, 103, 500):
+        got = ops.fused_swap_select(x, x[idx], w, d1, d2, nh, owner=idx,
+                                    backend="ref", row_chunk=chunk)
+        assert (int(got[1]), int(got[2])) == (int(full[1]), int(full[2]))
+        np.testing.assert_array_equal(np.float32(got[0]), np.float32(full[0]))
+
+
+# ------------------------------------------- solver-level trajectories ---
+
+@settings(deadline=None, max_examples=25)
+@given(data=st.data())
+def test_matrix_free_matches_batched_hypothesis(data):
+    """ISSUE 4 acceptance: swap-for-swap identity with solve_batched on
+    ref, across all registered metrics x {f32, bf16 inputs} x k x
+    variant."""
+    metric = data.draw(st.sampled_from(METRICS), label="metric")
+    dtype = data.draw(st.sampled_from([np.float32, jnp.bfloat16]),
+                      label="dtype")
+    seed = data.draw(st.integers(0, 2**16), label="seed")
+    k = data.draw(st.integers(2, 7), label="k")
+    variant = data.draw(st.sampled_from(["unif", "debias", "nniw", "lwcs"]),
+                        label="variant")
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(40, 140))
+    p = int(rng.integers(2, 12))
+    m = int(rng.integers(2 * k + 1, max(2 * k + 2, n // 2)))
+    x, init = _instance(seed, n=n, p=p, m=m, k=k, dtype=dtype)
+    key = jax.random.PRNGKey(seed)
+    blk = sampling.build_batch(key, x, m, variant=variant, metric=metric,
+                               backend="ref")
+    mf = sampling.build_batch(key, x, m, variant=variant, metric=metric,
+                              backend="ref", materialize=False)
+    assert mf.d is None
+    np.testing.assert_array_equal(np.asarray(blk.weights),
+                                  np.asarray(mf.weights))
+    r_blk = solver.solve_batched(blk.d, init, backend="ref")
+    r_mf = solver.solve_matrix_free(x, mf.idx, mf.weights, init,
+                                    metric=metric,
+                                    debias=(variant == "debias"),
+                                    backend="ref")
+    _assert_same_solve(r_blk, r_mf, (metric, variant, np.dtype(dtype).name))
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_matrix_free_matches_batched_interpret(metric):
+    """Seeded interpret-mode parity: the Pallas fused-sweep kernel's
+    on-the-fly tiles reproduce the pairwise kernels' block bits."""
+    x, init = _instance(31, n=80, p=7, m=24, k=4)
+    key = jax.random.PRNGKey(31)
+    blk = sampling.build_batch(key, x, 24, variant="nniw", metric=metric,
+                               backend="interpret")
+    mf = sampling.build_batch(key, x, 24, variant="nniw", metric=metric,
+                              backend="interpret", materialize=False)
+    r_blk = solver.solve_batched(blk.d, init, backend="interpret")
+    r_mf = solver.solve_matrix_free(x, mf.idx, mf.weights, init,
+                                    metric=metric, backend="interpret")
+    _assert_same_solve(r_blk, r_mf, metric)
+
+
+def test_matrix_free_trace_matches_solver():
+    """trace_matrix_free replays solve_matrix_free bit-for-bit (it drives
+    the literal loop body), and the recorded swaps equal the block
+    trace's."""
+    x, init = _instance(5, n=96, p=6, m=30, k=5)
+    key = jax.random.PRNGKey(5)
+    blk = sampling.build_batch(key, x, 30, variant="nniw", backend="ref")
+    mf = sampling.build_batch(key, x, 30, variant="nniw", backend="ref",
+                              materialize=False)
+    tr_blk = trace.trace_batched(blk.d, init, backend="ref")
+    tr_mf = trace.trace_matrix_free(x, mf.idx, mf.weights, init,
+                                    backend="ref")
+    assert tr_mf.swaps == tr_blk.swaps
+    assert tr_mf.gains == tr_blk.gains
+    res = solver.solve_matrix_free(x, mf.idx, mf.weights, init,
+                                   backend="ref")
+    _assert_same_solve(tr_mf.result, res)
+
+
+def test_matrix_free_chunked_solve_is_exact():
+    x, init = _instance(13, n=120, p=5, m=26, k=4)
+    key = jax.random.PRNGKey(13)
+    mf = sampling.build_batch(key, x, 26, variant="unif", backend="ref",
+                              materialize=False)
+    full = solver.solve_matrix_free(x, mf.idx, mf.weights, init,
+                                    backend="ref")
+    chunked = solver.solve_matrix_free(x, mf.idx, mf.weights, init,
+                                       backend="ref", chunk_size=32)
+    _assert_same_solve(full, chunked)
+
+
+# ------------------------------------------------ pipeline threading -----
+
+def test_one_batch_pam_matrix_free_matches_batched():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(150, 6)).astype(np.float32))
+    key = jax.random.PRNGKey(2)
+    r_blk, b_blk = solver.one_batch_pam(key, x, 5, strategy="batched",
+                                        backend="ref")
+    r_mf, b_mf = solver.one_batch_pam(key, x, 5, strategy="matrix_free",
+                                      backend="ref")
+    assert b_mf.d is None and b_blk.d is not None
+    np.testing.assert_array_equal(np.asarray(b_blk.idx), np.asarray(b_mf.idx))
+    np.testing.assert_array_equal(np.asarray(b_blk.weights),
+                                  np.asarray(b_mf.weights))
+    _assert_same_solve(r_blk, r_mf)
+
+
+def test_build_batch_materialize_false_rejects_block_dtype():
+    x = jnp.zeros((20, 3))
+    with pytest.raises(ValueError, match="block"):
+        sampling.build_batch(jax.random.PRNGKey(0), x, 5,
+                             materialize=False, block_dtype="bfloat16")
+    with pytest.raises(ValueError, match="block_dtype"):
+        solver.one_batch_pam(jax.random.PRNGKey(0), x, 3,
+                             strategy="matrix_free", block_dtype="bfloat16")
+
+
+def test_stream_nn_counts_matches_block_counts():
+    """Block-free histogram == fused in-block histogram, bitwise, chunked
+    and unchunked, grouped and not."""
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(130, 5)).astype(np.float32))
+    b = x[jnp.asarray(rng.choice(130, size=24, replace=False))]
+    for metric in ("l1", "cosine"):
+        for chunk in (None, 33):
+            for groups in (1, 4):
+                want = streaming.stream_block(
+                    x, b, metric=metric, backend="ref", chunk_size=chunk,
+                    count_nn=True, count_groups=groups).nn_counts
+                got = streaming.stream_nn_counts(
+                    x, b, metric=metric, backend="ref", chunk_size=chunk,
+                    count_groups=groups)
+                np.testing.assert_array_equal(np.asarray(want),
+                                              np.asarray(got))
+
+
+def test_restart_lanes_matrix_free_bitwise():
+    """Matrix-free restart lanes == the batched engine's (same draws,
+    same per-lane swaps, same election), Pool.d stays None, and each
+    vmapped lane == the unbatched solver."""
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(160, 6)).astype(np.float32))
+    key = jax.random.PRNGKey(6)
+    rr_b, pool_b = restarts_mod.one_batch_pam_restarts(
+        key, x, 4, restarts=3, m=20, backend="ref")
+    rr_m, pool_m = restarts_mod.one_batch_pam_restarts(
+        key, x, 4, restarts=3, m=20, backend="ref", strategy="matrix_free")
+    assert pool_m.d is None
+    np.testing.assert_array_equal(np.asarray(pool_b.weights),
+                                  np.asarray(pool_m.weights))
+    np.testing.assert_array_equal(np.asarray(rr_b.results.medoid_idx),
+                                  np.asarray(rr_m.results.medoid_idx))
+    assert int(rr_b.best_restart) == int(rr_m.best_restart)
+    np.testing.assert_array_equal(np.asarray(rr_b.eval_objectives),
+                                  np.asarray(rr_m.eval_objectives))
+    # lane r of the vmapped program == the unbatched matrix-free solver
+    init = restarts_mod._init_draws(jax.random.split(key)[1], 160, 4, 3)
+    lanes = restarts_mod.solve_restarts_matrix_free(
+        x, pool_m.idx, pool_m.weights, init, backend="ref")
+    for r in range(3):
+        solo = solver.solve_matrix_free(x, pool_m.idx[r], pool_m.weights[r],
+                                        init[r], backend="ref")
+        _assert_same_solve(jax.tree.map(lambda a: a[r], lanes), solo, r)
+
+
+def test_selector_matrix_free():
+    rng = np.random.default_rng(8)
+    x = rng.normal(size=(140, 5)).astype(np.float32)
+    sel = MedoidSelector(k=4, strategy="matrix_free", backend="ref",
+                         seed=3).fit(x)
+    ref = MedoidSelector(k=4, strategy="batched", backend="ref",
+                         seed=3).fit(x)
+    np.testing.assert_array_equal(sel.medoid_indices_, ref.medoid_indices_)
+    sel_r = MedoidSelector(k=3, strategy="matrix_free", restarts=3,
+                           backend="ref", seed=3).fit(x)
+    assert sel_r.best_restart_ is not None
+    assert sel_r.eval_objectives_.shape == (3,)
+
+
+def test_restart_m_clamp_warns():
+    """Satellite: a user-passed m above the pooled budget n // R warns
+    instead of shrinking silently; the default m still clamps quietly."""
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=(120, 4)).astype(np.float32))
+    key = jax.random.PRNGKey(9)
+    with pytest.warns(UserWarning, match="clamped"):
+        solver.one_batch_pam(key, x, 3, m=80, restarts=4, backend="ref")
+    with pytest.warns(UserWarning, match="clamped"):
+        MedoidSelector(k=3, m=80, restarts=4, backend="ref", seed=0).fit(
+            np.asarray(x))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")        # default m: no warning
+        solver.one_batch_pam(key, x, 3, restarts=4, backend="ref")
+
+
+def test_eager_pass_incremental_sum_matches_fresh_sum():
+    """Satellite: the carried sum(d1) in _eager_pass must reproduce the
+    former per-candidate fresh recompute bitwise — pinned against a
+    straight-line numpy reference of Algorithm 2 at eps > 0, where the
+    threshold actually consumes the sum."""
+    rng = np.random.default_rng(10)
+    n, m, k, eps = 90, 24, 4, 0.01
+    # Dyadic grid: every sum/scatter the scan forms is exact in f32, so
+    # the reference cannot drift from the solver by summation order.
+    d = np.round(rng.uniform(0.1, 8.0, (n, m)) * 64).astype(np.float32) / 64
+    init = rng.choice(n, size=k, replace=False)
+
+    # Reference: candidate scan with sum(d1) recomputed fresh each step.
+    rows = d[init].copy()
+    med = list(init)
+    swaps = []
+    for _ in range(8):
+        swapped = False
+        for i in range(n):
+            order = np.argsort(rows, axis=0, kind="stable")
+            d1 = rows[order[0], np.arange(m)]
+            d2 = rows[order[1], np.arange(m)]
+            near = order[0]
+            row = d[i]
+            g = np.maximum(d1 - row, 0.0).sum(dtype=np.float32)
+            r = d1 - np.minimum(np.maximum(row, d1), d2)
+            big_r = np.zeros(k, np.float32)
+            np.add.at(big_r, near, r)
+            l = int(np.argmax(big_r))
+            gain = np.float32(g + big_r[l])
+            if i not in med and gain > np.float32(eps) * d1.sum(dtype=np.float32):
+                rows[l] = row
+                med[l] = i
+                swaps.append((i, l))
+                swapped = True
+        if not swapped:
+            break
+
+    tr = trace.trace_eager(jnp.asarray(d), jnp.asarray(init), eps=eps)
+    assert list(tr.swaps) == swaps
+    res = solver.solve_eager(jnp.asarray(d), jnp.asarray(init), eps=eps)
+    np.testing.assert_array_equal(np.asarray(res.medoid_idx),
+                                  np.asarray(tr.result.medoid_idx))
+
+
+def test_fasterpam_chunk_size_is_exact():
+    """Satellite: the streamed n x n build changes no numbers."""
+    rng = np.random.default_rng(12)
+    x = jnp.asarray(rng.normal(size=(70, 5)).astype(np.float32))
+    key = jax.random.PRNGKey(12)
+    for strategy in ("eager", "batched"):
+        a = solver.fasterpam(key, x, 4, strategy=strategy, backend="ref")
+        b = solver.fasterpam(key, x, 4, strategy=strategy, backend="ref",
+                             chunk_size=16)
+        _assert_same_solve(a, b, strategy)
+
+
+# ----------------------------------------------------- peak memory -------
+
+def test_matrix_free_peak_memory_smoke():
+    """Solve at an n·m whose materialized f32 block (4 GB) exceeds the
+    hard 3 GB RLIMIT_AS cap the subprocess installs on itself (AS, not
+    DATA: this kernel predates Linux 4.7, where RLIMIT_DATA started
+    covering mmap) — only a genuinely block-free pipeline can finish.
+    Subprocess so the cap applies to this run alone."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{ROOT / 'src'}:{env.get('PYTHONPATH', '')}"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["MALLOC_ARENA_MAX"] = "2"   # tame thread-count-dependent RSS noise
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "helpers" / "peak_mem_check.py")],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "OK peak_mem" in out.stdout

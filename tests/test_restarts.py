@@ -139,9 +139,11 @@ def test_pool_too_large_raises_and_one_batch_pam_clamps():
     x = _data(9, n=50, p=3)
     with pytest.raises(ValueError, match="pooled sample"):
         restarts.build_pool(jax.random.PRNGKey(0), x, 20, 4)
-    # one_batch_pam clamps m to n // restarts instead of raising.
-    res, batch = solver.one_batch_pam(jax.random.PRNGKey(0), x, 3, m=40,
-                                      restarts=4)
+    # one_batch_pam clamps m to n // restarts instead of raising — and
+    # since ISSUE 4 the shrinkage warns instead of happening silently.
+    with pytest.warns(UserWarning, match="clamped"):
+        res, batch = solver.one_batch_pam(jax.random.PRNGKey(0), x, 3, m=40,
+                                          restarts=4)
     assert batch.idx.shape[0] == 50 // 4
     assert len(np.unique(np.asarray(res.medoid_idx))) == 3
 

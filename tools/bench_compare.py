@@ -1,0 +1,121 @@
+"""Compare a fresh benchmark JSON against a committed baseline (ISSUE 4).
+
+    python benchmarks/run.py --only kernel --smoke --json BENCH_SMOKE.json
+    python tools/bench_compare.py BENCH_PR4.json BENCH_SMOKE.json
+
+Fails (exit 1) when any kernel-layer record regresses by more than
+``--factor`` in ``us_per_call`` relative to the baseline, after
+*median-normalising* the per-record ratios: the committed baseline was
+timed on some machine, the fresh run on another, and a uniformly
+slower/faster runner shifts every ratio together — dividing by the
+median ratio cancels the machine and leaves only records that regressed
+relative to their peers, which is what a code change looks like. Only
+records present in BOTH files are compared (new kernels don't fail the
+gate; renames drop out of it — rename deliberately), and records faster
+than ``--min-us`` in the baseline are skipped: microsecond-scale
+timings on a shared CI runner are noise, not signal (the floor also
+keeps enough records in the median for it to be meaningful). Analytic records
+(0.0 us byte accounting, check=ok markers) are skipped the same way.
+
+The derived byte-accounting columns are compared for *exact* equality
+when present in both: ``hbm_bytes_per_sweep`` is an analytic property of
+the kernel's dataflow, so any drift is a real dataflow change and must
+ship with a regenerated baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def _records(path: pathlib.Path) -> dict[str, dict]:
+    data = json.loads(path.read_text())
+    return {r["name"]: r for r in data["records"]}
+
+
+def compare(baseline: dict[str, dict], fresh: dict[str, dict], *,
+            factor: float, min_us: float,
+            prefixes: tuple[str, ...] = ("kernel/",)) -> list[str]:
+    """Return a list of human-readable failures (empty == gate passes)."""
+    failures = []
+    shared = sorted(set(baseline) & set(fresh))
+    ratios = {}
+    for name in shared:
+        if not name.startswith(prefixes):
+            continue
+        base, new = baseline[name], fresh[name]
+        if base["us_per_call"] >= min_us:
+            ratios[name] = new["us_per_call"] / base["us_per_call"]
+        b_bytes = base.get("derived", {}).get("hbm_bytes_per_sweep")
+        n_bytes = new.get("derived", {}).get("hbm_bytes_per_sweep")
+        if b_bytes is not None and n_bytes is not None and b_bytes != n_bytes:
+            failures.append(
+                f"{name}: hbm_bytes_per_sweep changed "
+                f"{b_bytes:.0f} -> {n_bytes:.0f} (dataflow change — "
+                "regenerate the baseline deliberately)")
+    if not ratios and shared:
+        failures.append(
+            f"no timed records above --min-us={min_us:.0f} to compare — "
+            "the regression gate guarded nothing; lower --min-us or "
+            "regenerate the baseline")
+    if ratios:
+        ordered = sorted(ratios.values())
+        machine = ordered[(len(ordered) - 1) // 2]  # lower median = runner speed
+        for name, ratio in sorted(ratios.items()):
+            if ratio / machine > factor:
+                failures.append(
+                    f"{name}: {fresh[name]['us_per_call']:.0f}us vs baseline "
+                    f"{baseline[name]['us_per_call']:.0f}us "
+                    f"({ratio:.2f}x raw, {ratio / machine:.2f}x "
+                    f"machine-normalised > {factor}x)")
+    if not shared:
+        failures.append("no shared records between baseline and fresh run")
+    return failures
+
+
+def _min_merge(runs: list[dict[str, dict]]) -> dict[str, dict]:
+    """Per-record min us_per_call over several fresh runs: with best-of-N
+    timing inside each run AND min across runs, only a genuine slowdown
+    survives — one noisy run cannot fail the gate (scheduler noise only
+    ever adds time). Derived columns come from the first run (they are
+    analytic, equal across runs — drift is caught by the equality gate)."""
+    merged = dict(runs[0])
+    for run in runs[1:]:
+        for name, rec in run.items():
+            if name in merged and rec["us_per_call"] < merged[name]["us_per_call"]:
+                merged[name] = {**merged[name],
+                                "us_per_call": rec["us_per_call"]}
+    return merged
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", type=pathlib.Path,
+                    help="committed BENCH_PR*.json")
+    ap.add_argument("fresh", type=pathlib.Path, nargs="+",
+                    help="fresh --smoke --json output(s); several runs are "
+                         "min-merged per record to filter runner noise")
+    ap.add_argument("--factor", type=float, default=1.5,
+                    help="max tolerated us_per_call regression (default 1.5x)")
+    ap.add_argument("--min-us", type=float, default=500.0,
+                    help="skip records faster than this in the baseline "
+                         "(timing noise floor, default 0.5ms)")
+    args = ap.parse_args()
+
+    failures = compare(_records(args.baseline),
+                       _min_merge([_records(f) for f in args.fresh]),
+                       factor=args.factor, min_us=args.min_us)
+    if failures:
+        print(f"bench_compare: {len(failures)} regression(s) vs "
+              f"{args.baseline}:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"bench_compare: OK vs {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

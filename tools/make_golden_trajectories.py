@@ -42,6 +42,17 @@ E2E_CASES = [
     ("e2e_unif_chebyshev", dict(seed=4, n=64, p=6, k=4, m=16,
                                 variant="unif", metric="chebyshev")),
 ]
+# Matrix-free cases (ISSUE 4): the block-free sweep replayed through
+# trace_matrix_free. The tool asserts the trajectory equals the block
+# path's before committing, so the fixture pins both the matrix-free
+# decisions AND the cross-path identity.
+MF_CASES = [
+    ("matrix_free_nniw_l1", dict(seed=5, n=128, p=4, k=5, m=16,
+                                 variant="nniw", metric="l1")),
+    ("matrix_free_debias_sqeuclidean", dict(seed=6, n=64, p=8, k=4, m=16,
+                                            variant="debias",
+                                            metric="sqeuclidean")),
+]
 
 
 def matrix_instance(spec):
@@ -62,6 +73,20 @@ def e2e_instance(spec):
                                  metric=spec["metric"], backend="ref")
     init = jnp.asarray(rng.choice(spec["n"], size=spec["k"], replace=False))
     return batch.d, init
+
+
+def matrix_free_instance(spec):
+    """(x, block-free batch, init) for a matrix-free golden case — the
+    same dyadic-grid recipe as e2e_instance, block never built."""
+    rng = np.random.default_rng(spec["seed"])
+    x = jnp.asarray(
+        rng.integers(0, 8, size=(spec["n"], spec["p"])).astype(np.float32))
+    batch = sampling.build_batch(jax.random.PRNGKey(spec["seed"]), x,
+                                 spec["m"], variant=spec["variant"],
+                                 metric=spec["metric"], backend="ref",
+                                 materialize=False)
+    init = jnp.asarray(rng.choice(spec["n"], size=spec["k"], replace=False))
+    return x, batch, init
 
 
 def record(tr):
@@ -94,6 +119,25 @@ def main():
             "batched": record(trace.trace_batched(d, init, backend="ref")),
         })
         print(f"{name}: {cases[-1]['batched']['n_swaps']} batched swaps")
+    for name, spec in MF_CASES:
+        x, batch, init = matrix_free_instance(spec)
+        tr = trace.trace_matrix_free(x, batch.idx, batch.weights, init,
+                                     metric=spec["metric"],
+                                     debias=(spec["variant"] == "debias"),
+                                     backend="ref")
+        # Cross-path identity, enforced at generation time: the committed
+        # matrix-free trajectory IS the block trajectory.
+        blk = sampling.build_batch(jax.random.PRNGKey(spec["seed"]), x,
+                                   spec["m"], variant=spec["variant"],
+                                   metric=spec["metric"], backend="ref")
+        blk_tr = trace.trace_batched(blk.d, init, backend="ref")
+        assert tr.swaps == blk_tr.swaps, name
+        cases.append({
+            "name": name, "kind": "matrix_free", "spec": spec,
+            "init": np.asarray(init).tolist(),
+            "batched": record(tr),
+        })
+        print(f"{name}: {cases[-1]['batched']['n_swaps']} matrix-free swaps")
     OUT.parent.mkdir(parents=True, exist_ok=True)
     OUT.write_text(json.dumps({"format": 1, "cases": cases}, indent=1)
                    + "\n")
