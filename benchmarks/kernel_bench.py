@@ -215,6 +215,81 @@ def _bench_solver_sweep(lines, n, m, k, reps):
             f"us_per_iter={t*1e6/iters:.1f} swaps={int(res.n_swaps)}"))
 
 
+def _bench_pruned(lines, n, m, p, k, reps):
+    """Time the bound-pruned whole solve vs the matrix-free solve on the
+    same block-free batch (ISSUE 6), trajectory identity pinned in-bench
+    — the pruned sweep's entire claim is doing strictly less exact
+    scoring work while making the *same* swaps."""
+    from repro.core import pruned
+    rng = np.random.default_rng(5)
+    centers = rng.integers(0, 64, size=(k, p)).astype(np.float32)
+    x = jnp.asarray(centers[rng.integers(0, k, size=n)]
+                    + rng.integers(-2, 3, size=(n, p)).astype(np.float32))
+    key = jax.random.PRNGKey(5)
+    mf = sampling.build_batch(key, x, m, variant="nniw", metric="l2",
+                              backend="ref", materialize=False)
+    init = jnp.asarray(rng.choice(n, size=k, replace=False))
+
+    def go_mf():
+        return solver.solve_matrix_free(x, mf.idx, mf.weights, init,
+                                        metric="l2", backend="ref")
+
+    def go_pr():
+        return pruned.solve_pruned(x, mf.idx, mf.weights, init,
+                                   metric="l2", backend="ref")
+    r_mf, r_pr = go_mf(), go_pr()
+    assert np.array_equal(np.asarray(r_mf.medoid_idx),
+                          np.asarray(r_pr.medoid_idx)) \
+        and int(r_mf.n_swaps) == int(r_pr.n_swaps), \
+        "pruned solver diverged from the matrix-free trajectory"
+    for name, go, res in (("matrix_free", go_mf, r_mf),
+                          ("pruned", go_pr, r_pr)):
+        t = _time(lambda _=None: go().medoid_idx, None, reps=reps)
+        iters = int(res.n_swaps) + 1
+        lines.append(csv_line(
+            f"solver/pruned/{name}", t * 1e6,
+            f"us_per_iter={t*1e6/iters:.1f} swaps={int(res.n_swaps)}"))
+
+
+def _pruned_scored_stats(lines, n, m, p, k, max_swaps):
+    """ISSUE 6 acceptance record, always emitted at the full standard
+    shape: mean exact scorings per sweep of the bound-pruned sweep vs the
+    unpruned sweep's n-candidates-every-sweep, on a k-clustered dyadic
+    instance (integer features, unit weights: every distance / gain /
+    bound comparison is exact in f32, so the recorded counts are
+    machine-independent and tools/bench_compare.py holds them to *exact*
+    equality like the hbm byte columns). The matrix-free solve runs the
+    identical capped sweep budget and the trajectories must agree —
+    the count is only meaningful because the swaps are the same."""
+    from repro.core import pruned
+    rng = np.random.default_rng(6)
+    centers = rng.integers(0, 64, size=(k, p)).astype(np.float32)
+    x = jnp.asarray(centers[rng.integers(0, k, size=n)]
+                    + rng.integers(-2, 3, size=(n, p)).astype(np.float32))
+    key = jax.random.PRNGKey(6)
+    idx = jax.random.choice(key, n, shape=(m,), replace=False)
+    w = jnp.ones((m,), jnp.float32)
+    init = jax.random.choice(jax.random.fold_in(key, 1), n, shape=(k,),
+                             replace=False)
+    res, st = pruned.solve_pruned_stats(x, idx, w, init, metric="l2",
+                                        backend="ref", max_swaps=max_swaps)
+    ref_res = solver.solve_matrix_free(x, idx, w, init, metric="l2",
+                                       backend="ref", max_swaps=max_swaps)
+    assert np.array_equal(np.asarray(res.medoid_idx),
+                          np.asarray(ref_res.medoid_idx)) \
+        and int(res.n_swaps) == int(ref_res.n_swaps), \
+        "pruned solver diverged from the matrix-free trajectory (stats)"
+    sw = int(st.sweeps)
+    scored = np.asarray(st.scored)[:sw]
+    fb = int(np.asarray(st.fallback)[:sw].sum())
+    mean = int(scored.sum()) / sw
+    lines.append(csv_line(
+        f"kernel/pruned_sweep/scored_{n}x{m}x{k}", 0.0,
+        f"candidates_scored_per_sweep={mean:.1f} "
+        f"vs_unpruned={n/mean:.2f}x sweeps={sw} fallback_sweeps={fb} "
+        f"prune_m={pruned.default_prune_m(m)}"))
+
+
 def _smoke_select_checks(lines):
     """Interpret-mode kernel sanity on ragged shapes: fail-fast coverage
     for shape/pad/tie regressions, no timing involved."""
@@ -301,6 +376,10 @@ def run(smoke: bool = False) -> list[str]:
     _bytes_matrix_free(lines, 32_768, 512, 64, 64)
     _bench_matrix_free(lines, n, m, p, k, reps)
     _bench_solver_sweep(lines, sweep_n, sweep_m, sweep_k, reps)
+    _bench_pruned(lines, sweep_n, sweep_m, p, sweep_k, reps)
+    # ISSUE 6 acceptance counts, always at the full standard shape (the
+    # sweep budget is capped so the record stays cheap enough for CI).
+    _pruned_scored_stats(lines, 32_768, 512, 64, 64, max_swaps=10)
     if smoke:
         _smoke_select_checks(lines)
         _smoke_matrix_free_checks(lines)

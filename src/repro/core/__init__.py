@@ -8,8 +8,10 @@ Public API:
   MedoidSelector                          (selector.py)
   make_distributed_obp / _e2e / _restarts (distributed.py)
   trace_batched / trace_eager             (trace.py — swap-sequence replay)
+  solve_pruned / PrunedStats              (pruned.py — bound-pruned sweep)
   baselines.ALL_BASELINES                 (paper competitors, counted)
 """
+from .pruned import PrunedStats, solve_pruned, solve_pruned_stats  # noqa: F401
 from .restarts import Pool, RestartResult, one_batch_pam_restarts  # noqa: F401
 from .sampling import Batch, VARIANTS, build_batch, default_batch_size  # noqa: F401
 from .selector import MedoidSelector  # noqa: F401
@@ -24,6 +26,7 @@ from .trace import (  # noqa: F401
     trace_batched,
     trace_eager,
     trace_matrix_free,
+    trace_pruned,
 )
 from .solver import (  # noqa: F401
     SolveResult,

@@ -1,0 +1,414 @@
+"""Bound-pruned matrix-free sweep: BanditPAM-style candidate elimination
+that *provably* selects the same swap (DESIGN.md §2c).
+
+The matrix-free sweep (solver.solve_matrix_free) scores every candidate
+row against all m batch columns each iteration, although after the first
+few swaps almost no candidate is competitive. BanditPAM / BanditPAM++
+(PAPERS.md) eliminate candidates from cheap subsample estimates plus
+confidence intervals; this module composes that idea with the fused
+tiles — but with *deterministic, sound* intervals instead of
+probabilistic Hoeffding ones, so the selected swap is not "the same with
+high probability" but **identical, bitwise, always**:
+
+  phase 1 (estimate)  — one fused rowmax pass over an m' << m positional
+      column subsample S (ops.fused_swap_select_rowmax, the §2b tile
+      math) gives each row's exact partial gain E_S(i, l); the unseen
+      complement T contributes, per column j, an add-term in [0, d1_j]
+      and a removal-term in [d1_j - d2_j, 0], so
+
+          E_S(i,l) + negrest_l  <=  G(i,l)  <=  E_S(i,l) + H_rest
+          negrest_l = sum_{j in T, near_j = l} (d1_j - d2_j)   (<= 0)
+          H_rest    = sum_{j in T} d1_j                        (>= 0)
+
+      Both interval endpoints come out of the *same* rowmax kernel, via
+      its per-slot additive ``offset`` input — Hoeffding's estimate ±
+      width shape, with width the deterministic column-mass remainder.
+  cached bounds (reuse) — every exactly-scored row caches its full
+      (k,) gain row as a two-sided bound; an accepted swap (i*, l*)
+      changes only batch columns whose (d1, d2, near) moved, and the
+      resulting *per-slot* drift is a column sum the whole cache shares:
+
+        G(i, l) = g_i + sum_{j: near_j = l} r_ij, so slot l moves by
+        the add-term drift (all slots, g is nondecreasing 1-Lipschitz
+        in each d1_j) plus its own removal traffic:
+          columns leaving l  (near_j = l -> l'): rowgain can rise by
+              the departing removal magnitude, -r_ij <= (d2_j - d1_j)
+          columns entering l (near_j = l' -> l): can fall by the
+              arriving magnitude, <= (d2'_j - d1'_j)
+          columns kept in l: r = d1 - clamp(D, d1, d2) is 1-Lipschitz
+              nondecreasing in d1, nonincreasing in d2, so they
+              contribute only relu(+/-delta d1) + relu(-/+delta d2).
+
+      so caches drift by k per-slot sums instead of being discarded —
+      the BanditPAM++ cached-reuse idea, made exact. Per-slot is what
+      makes pruning bite: a swap at slot l* evacuates ~m/k columns with
+      their full removal widths, but every *other* slot drifts only by
+      the (tiny) add/kept deltas, so a row whose best slot is unrelated
+      to the swap keeps a tight interval.
+  phase 2 (exact rescore) — survivors = rows whose upper bound
+      max_l UB(i, l) reaches the best lower bound; a ``lax.while_loop``
+      streams them in *descending-UB* chunks through the exact scoring
+      chain (solver._weighted_rows -> ops.swap_gain — the §2b float
+      chain), refreshing their cache rows and keeping a running best.
+      Branch-and-bound: the running best is an *exact* scored gain, so
+      once it exceeds the next chunk's head UB no unscanned row can
+      attain the max and the loop stops — in the steady state only the
+      handful of rows with UB >= the true max ever get scored. When
+      survivors exceed ``survivor_frac * n`` the sweep *falls back
+      dense*: the survivor set widens to every valid row — same loop,
+      worst case exactly one full sweep, so it never regresses (sweep
+      0, with vacuous caches, lands here by construction and
+      initialises the caches).
+
+Why the selected swap is *identical* to the full sweep's, ties included:
+every bound is sound w.r.t. the solver's own computed float gains, so a
+non-survivor i has G(i) <= UB(i) < best_LB <= max_valid G — strictly
+below the max, hence every row attaining the max survives (exact ties
+too); survivors are rescored through the identical float chain the full
+sweep uses and reduced with the same first-row/first-slot tie-break.
+Float soundness on non-exact (non-dyadic) instances is bought with a
+``slack`` inflation of every width — sized at m * 2^-22 of the column
+mass, orders above worst-case f32 summation error, orders below any
+real gain gap. ``bound_scale`` scales every width component (slack
+included): 1.0 is sound; < 1.0 deliberately un-sound, so the test
+harness can prove it *catches* a wrong swap (the adversarial mode the
+differential suite pins).
+
+vmapped restart lanes (core/restarts.py) share the positional subsample
+``arange(m') * (m // m')`` — it depends only on (m, m'), never on lane
+data — so the pooled-sample slice discipline of §2a carries over.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.solver import (
+    SolveResult,
+    _State,
+    _init_state_matrix_free,
+    _mf_chunk,
+    _prepared,
+    _repair_top2,
+    _weighted_rows,
+)
+from repro.kernels import ops
+from repro.kernels.ref import NEG
+
+BIG = jnp.float32(1e30)
+
+# Relative width inflation per bound, times the resident column mass and
+# the batch size m: worst-case f32 summation error of the gain chains is
+# ~m * 2^-24 of the summed magnitudes; 2^-22 leaves a 4x margin so
+# rounding on non-dyadic instances can never un-sound a bound, while
+# staying far below any gain gap a swap acceptance acts on.
+_SLACK_REL = 2.0 ** -22
+
+
+class PrunedStats(NamedTuple):
+    """Per-sweep accounting of the pruned solve (solve_pruned_stats).
+
+    Arrays are (max_swaps + 1,), indexed by sweep; entries past
+    ``sweeps`` are zero. ``scored`` counts rows exactly rescored that
+    sweep — at most the (bound-)``survivors`` count (every valid row on
+    a dense-fallback sweep), usually far fewer because the descending-UB
+    scan stops once the running best exceeds the next chunk's head UB.
+    The benchmark's ``candidates_scored_per_sweep`` column is its mean
+    over executed sweeps."""
+    scored: jnp.ndarray     # (max_swaps + 1,) i32
+    survivors: jnp.ndarray  # (max_swaps + 1,) i32
+    fallback: jnp.ndarray   # (max_swaps + 1,) bool
+    sweeps: jnp.ndarray     # i32, sweeps executed (incl. the converging one)
+
+
+def default_prune_m(m: int) -> int:
+    """Default phase-1 subsample width: an eighth of the batch."""
+    return max(1, m // 8)
+
+
+def _prune_positions(m: int, prune_m: int) -> np.ndarray:
+    """The shared positional subsample: ``arange(m') * (m // m')`` —
+    static in (m, m'), identical across vmapped restart lanes."""
+    prune_m = max(1, min(prune_m, m))
+    return np.arange(prune_m) * (m // prune_m)
+
+
+def _chunk_q(n: int) -> int:
+    """Phase-2 rescore chunk: 8-row floor (the ref oracle's degenerate-
+    matmul rule), 256 cap, scaled down for small n so the chunked
+    while_loop is exercised (not just one chunk) even on test sizes."""
+    return max(8, min(256, 8 * ((n + 31) // 32)))
+
+
+def _phase1_bounds(xp, b, w, batch_idx, state: _State, *, metric: str,
+                   debias: bool, backend: str, row_chunk, prune_m: int,
+                   bound_scale: float = 1.0):
+    """The phase-1 subsample interval: ``(hi_samp, lo_samp, slack)``.
+
+    ``hi_samp``/``lo_samp`` are (n,) sound upper/lower bounds on each
+    row's max swap gain from one fused rowmax pass per endpoint over the
+    positional m' subsample (module docstring derivation); ``slack`` is
+    the width inflation every bound in the sweep shares. Factored out of
+    :func:`_pruned_step` so the property suite
+    (tests/test_pruned_sweep.py) pins containment against the exact
+    gains through the identical code path.
+    """
+    m = b.shape[0]
+    k = state.medoid_idx.shape[0]
+    s = jnp.float32(bound_scale)
+    nh = jax.nn.one_hot(state.near, k, dtype=jnp.float32)
+    sel = _prune_positions(m, prune_m)
+    comp = np.ones((m,), np.float32)
+    comp[sel] = 0.0
+    comp = jnp.asarray(comp)                       # 1 on unseen columns T
+    sel = jnp.asarray(sel, jnp.int32)
+    # Width inflation against f32 summation error (module docstring); d2
+    # is capped at the d1 mass so a debias LARGE sentinel in d2 cannot
+    # blow the slack up globally (rows whose gains carry the sentinel are
+    # hugely negative and can never be an *accepted* argmax anyway).
+    mass = jnp.sum(state.d1)
+    slack = (mass + jnp.sum(jnp.minimum(state.d2, mass))) * (m * _SLACK_REL)
+    h_rest = jnp.dot(state.d1, comp)                            # >= 0
+    negrest = ((state.d1 - state.d2) * comp) @ nh               # (k,) <= 0
+    sub_args = dict(metric=metric, backend=backend, skip_prepare=True,
+                    row_chunk=row_chunk)
+    if debias:
+        sub_args["owner"] = batch_idx[sel]
+    hi_raw, _ = ops.fused_swap_select_rowmax(
+        xp, b[sel], w[sel], state.d1[sel], state.d2[sel],
+        jax.nn.one_hot(state.near[sel], k, dtype=jnp.float32), **sub_args)
+    lo_raw, _ = ops.fused_swap_select_rowmax(
+        xp, b[sel], w[sel], state.d1[sel], state.d2[sel],
+        jax.nn.one_hot(state.near[sel], k, dtype=jnp.float32),
+        offset=s * negrest, **sub_args)
+    hi_samp = hi_raw + s * (h_rest + slack)
+    lo_samp = lo_raw - s * slack
+    return hi_samp, lo_samp, slack
+
+
+def _pruned_step(xp, b, w, batch_idx, state: _State, ub, lb, *,
+                 metric: str, debias: bool = False, eps: float = 0.0,
+                 backend: str = "auto", chunk_size: int | None = None,
+                 prune_m: int, survivor_frac: float = 0.5,
+                 bound_scale: float = 1.0):
+    """One pruned steepest-descent sweep.
+
+    Returns ``(new_state, new_ub, new_lb, improved, best, i, l,
+    (scored, n_survivors, fallback))``. ``ub``/``lb`` are the (n, k)
+    per-slot gain caches. The caller applies the new state/caches only
+    when ``improved`` (stats are unconditional — the sweep's work
+    happened either way). Scoring runs against the *old* state; the
+    accepted swap then drifts every cache row by the per-slot
+    column-sum deltas. The selection floats are the exact sweep's (see
+    module docstring), so the (improved, best, i, l) sequence is
+    bit-for-bit ``solver._matrix_free_step``'s."""
+    n = xp.shape[0]
+    m = b.shape[0]
+    k = state.medoid_idx.shape[0]
+    s = jnp.float32(bound_scale)
+    nh = jax.nn.one_hot(state.near, k, dtype=jnp.float32)
+    valid = jnp.ones((n,), jnp.bool_).at[state.medoid_idx].set(False)
+    row_chunk = _mf_chunk(chunk_size)
+
+    # ---- phase 1: subsample interval from one rowmax pass per endpoint.
+    hi_samp, lo_samp, slack = _phase1_bounds(
+        xp, b, w, batch_idx, state, metric=metric, debias=debias,
+        backend=backend, row_chunk=row_chunk, prune_m=prune_m,
+        bound_scale=bound_scale)
+
+    # ---- survivors: row UB (cache ∩ subsample) must reach best LB.
+    ub_row = jnp.minimum(jnp.max(ub, axis=1), hi_samp)
+    lb_row = jnp.maximum(jnp.max(lb, axis=1), lo_samp)
+    best_lb = jnp.max(jnp.where(valid, lb_row, -BIG))
+    surv_b = valid & (ub_row >= best_lb)
+    n_surv = jnp.sum(surv_b.astype(jnp.int32))
+    threshold = jnp.int32(int(survivor_frac * n))
+    fallback = n_surv > threshold
+    # Dense fallback = the survivor set widens to every valid row: same
+    # rescore loop, caches refresh as far as the scan runs, and the
+    # worst case (vacuous caches, sweep 0) is exactly one full sweep.
+    surv = jnp.where(fallback, valid, surv_b)
+    n_scan = jnp.sum(surv.astype(jnp.int32))
+
+    # ---- phase 2: branch-and-bound rescore, descending-UB order.
+    # Chunks of survivors stream through the exact scoring chain
+    # (solver._weighted_rows -> ops.swap_gain — the §2b float chain)
+    # best-first: once the running best (an *exact* scored gain) exceeds
+    # the head UB of the next chunk, no unscanned row can attain the
+    # max (UB is sound and the order is descending), so the loop stops —
+    # typically right after the chunk holding the true argmax. Exact
+    # ties stay exact: an equal gain is accepted only at a smaller row
+    # index, reproducing the full sweep's first-row argmax no matter
+    # the scan order (argsort ties keep ascending index, stable sort).
+    q = _chunk_q(n)
+    order = jnp.argsort(-jnp.where(surv, ub_row, -jnp.inf)).astype(jnp.int32)
+    pos = jnp.arange(n, dtype=jnp.int32)
+    ids = jnp.where(pos < n_scan, order, n)
+    heads = jnp.where(pos < n_scan, ub_row[order], -jnp.inf)
+    pad = (-n) % q
+    ids = jnp.concatenate([ids, jnp.full((pad,), n, jnp.int32)])
+    heads = jnp.concatenate([heads, jnp.full((pad,), -jnp.inf)])
+    n_chunks = (n_scan + (q - 1)) // q
+
+    def cond(carry):
+        c, best = carry[0], carry[1]
+        head = jax.lax.dynamic_slice(heads, (c * q,), (1,))[0]
+        return jnp.logical_and(c < n_chunks, head >= best)
+
+    def body(carry):
+        c, best, bi, bl, sc, ub_c, lb_c = carry
+        cid = jax.lax.dynamic_slice(ids, (c * q,), (q,))
+        ok = cid < n
+        safe = jnp.minimum(cid, n - 1)
+        # cid (not safe) feeds the debias row match: the padding
+        # sentinel n never equals a batch index, so duplicated
+        # gather rows cannot pick up a spurious LARGE diagonal.
+        d_rows = _weighted_rows(xp[safe], b, w, batch_idx, cid,
+                                metric=metric, debias=debias,
+                                backend=backend)
+        gain = ops.swap_gain(d_rows, state.d1, state.d2, nh,
+                             backend=backend)
+        rmax = jnp.max(gain, axis=1)
+        rslot = jnp.argmax(gain, axis=1).astype(jnp.int32)
+        gm = jnp.where(ok, rmax, NEG)
+        cmax = jnp.max(gm)
+        # Chunk winner: smallest row index attaining the chunk max (the
+        # scan order is UB-sorted, not index-sorted, so argmax alone
+        # would break the full sweep's first-row tie-break).
+        ci = jnp.min(jnp.where((gm == cmax) & ok, cid, n))
+        cl = rslot[jnp.argmax(cid == ci)]
+        take = (cmax > best) | ((cmax == best) & (ci < bi))
+        best = jnp.where(take, cmax, best)
+        bi = jnp.where(take, ci, bi)
+        bl = jnp.where(take, cl, bl)
+        # Out-of-bounds scatter indices (the n sentinel) are dropped.
+        ub_c = ub_c.at[cid].set(gain)
+        lb_c = lb_c.at[cid].set(gain)
+        return c + 1, best, bi, bl, sc + jnp.sum(ok.astype(jnp.int32)), \
+            ub_c, lb_c
+
+    _, best, i, l, scored, ub_new, lb_new = jax.lax.while_loop(
+        cond, body,
+        (jnp.int32(0), jnp.float32(NEG), jnp.int32(n), jnp.int32(0),
+         jnp.int32(0), ub, lb))
+
+    improved = best > eps * jnp.sum(state.d1)
+
+    # ---- apply the swap (identical chain to _matrix_free_step) ...
+    r = _weighted_rows(xp[i][None, :], b, w, batch_idx, i[None],
+                       metric=metric, debias=debias, backend=backend)[0]
+    med_rows, d1, d2, near, near2 = _repair_top2(
+        state.med_rows, state.d1, state.d2, state.near, state.near2, r, l)
+    new_state = _State(state.medoid_idx.at[l].set(i.astype(jnp.int32)),
+                       med_rows, d1, d2, near, near2,
+                       state.t + 1, state.done)
+
+    # ---- ... then drift every cache row by the per-slot column sums
+    # (module docstring: full removal width only where the column's
+    # owner slot moved; kept columns only their Lipschitz deltas).
+    up = jnp.maximum(d1 - state.d1, 0.0)
+    dn = jnp.maximum(state.d1 - d1, 0.0)
+    moved = (near != state.near).astype(jnp.float32)
+    kept = 1.0 - moved
+    nh_new = jax.nn.one_hot(near, k, dtype=jnp.float32)
+    a_up = jnp.sum(up)                              # add-term, all slots
+    a_dn = jnp.sum(dn)
+    out_l = (moved * (state.d2 - state.d1)) @ nh    # departures, old slot
+    in_l = (moved * (d2 - d1)) @ nh_new             # arrivals, new slot
+    k_up = (kept * (up + jnp.maximum(state.d2 - d2, 0.0))) @ nh
+    k_dn = (kept * (dn + jnp.maximum(d2 - state.d2, 0.0))) @ nh
+    drift_up = a_up + out_l + k_up                  # (k,)
+    drift_dn = a_dn + in_l + k_dn                   # (k,)
+    ub_new = ub_new + s * (drift_up + slack)[None, :]
+    lb_new = lb_new - s * (drift_dn + slack)[None, :]
+
+    return (new_state, ub_new, lb_new, improved, best, i, l,
+            (scored, n_surv, fallback))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "metric", "debias", "max_swaps", "backend", "chunk_size", "prune_m",
+    "survivor_frac", "bound_scale"))
+def solve_pruned_stats(
+    x: jnp.ndarray,            # (n, p) data rows (f32 or bf16)
+    batch_idx: jnp.ndarray,    # (m,) batch column indices into x
+    weights: jnp.ndarray,      # (m,) f32 batch weights
+    init_idx: jnp.ndarray,     # (k,) initial medoids
+    *,
+    metric: str = "l1",
+    debias: bool = False,
+    max_swaps: int = 500,
+    eps: float = 0.0,
+    backend: str = "auto",
+    chunk_size: int | None = None,
+    prune_m: int | None = None,
+    survivor_frac: float = 0.5,
+    bound_scale: float = 1.0,
+) -> tuple[SolveResult, PrunedStats]:
+    """Bound-pruned matrix-free steepest descent, with per-sweep stats.
+
+    Bitwise the same trajectory as :func:`solver.solve_matrix_free` on
+    the same backend — same swaps, same floats, same tie-breaks (module
+    docstring; tests/test_pruned_sweep.py and the golden fixtures pin
+    it) — with most sweeps scoring only the surviving candidate rows
+    exactly. ``prune_m`` (default m // 8) is the phase-1 subsample
+    width; ``survivor_frac`` the dense-fallback threshold (a sweep whose
+    survivor count exceeds ``survivor_frac * n`` runs the full pass
+    instead — worst case never regresses); ``bound_scale`` scales every
+    interval width (1.0 sound; < 1.0 is the adversarial mode that the
+    differential harness proves it can catch). See
+    :class:`PrunedStats` for the accounting.
+    """
+    if prune_m is None:
+        prune_m = default_prune_m(batch_idx.shape[0])
+    n = x.shape[0]
+    xp = _prepared(x, metric)
+    b = xp[batch_idx]
+    w = weights.astype(jnp.float32)
+    batch_idx = batch_idx.astype(jnp.int32)
+    state = _init_state_matrix_free(xp, b, w, batch_idx, init_idx,
+                                    metric=metric, debias=debias,
+                                    backend=backend)
+    k = init_idx.shape[0]
+    ub0 = jnp.full((n, k), BIG)
+    lb0 = jnp.full((n, k), -BIG)
+    stats0 = (jnp.zeros((max_swaps + 1,), jnp.int32),
+              jnp.zeros((max_swaps + 1,), jnp.int32),
+              jnp.zeros((max_swaps + 1,), jnp.bool_))
+
+    def cond(carry):
+        state = carry[0]
+        return jnp.logical_and(~state.done, state.t < max_swaps)
+
+    def body(carry):
+        state, ub, lb, stats, sweep = carry
+        new_state, ub_n, lb_n, improved, _, _, _, per = _pruned_step(
+            xp, b, w, batch_idx, state, ub, lb, metric=metric,
+            debias=debias, eps=eps, backend=backend, chunk_size=chunk_size,
+            prune_m=prune_m, survivor_frac=survivor_frac,
+            bound_scale=bound_scale)
+        at = jnp.minimum(sweep, max_swaps)
+        stats = (stats[0].at[at].set(per[0]), stats[1].at[at].set(per[1]),
+                 stats[2].at[at].set(per[2]))
+        keep = jax.tree.map(
+            lambda a, b: jnp.where(improved, a, b),
+            (new_state, ub_n, lb_n),
+            (state._replace(done=jnp.bool_(True)), ub, lb))
+        return (*keep, stats, sweep + 1)
+
+    state, _, _, stats, sweeps = jax.lax.while_loop(
+        cond, body, (state, ub0, lb0, stats0, jnp.int32(0)))
+    return (SolveResult(state.medoid_idx, state.t,
+                        jnp.mean(state.d1), state.done),
+            PrunedStats(stats[0], stats[1], stats[2], sweeps))
+
+
+def solve_pruned(x, batch_idx, weights, init_idx, **kw) -> SolveResult:
+    """:func:`solve_pruned_stats` without the accounting — the
+    ``SolveResult``-only entry point ``one_batch_pam`` and the restart
+    engine dispatch to (same trajectory, stats discarded)."""
+    return solve_pruned_stats(x, batch_idx, weights, init_idx, **kw)[0]

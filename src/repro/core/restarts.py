@@ -266,6 +266,42 @@ def solve_restarts_matrix_free(
     )(pool_idx, weights, init_idx)
 
 
+def solve_restarts_pruned(
+    x: jnp.ndarray,          # (n, p) data rows, shared by all lanes
+    pool_idx: jnp.ndarray,   # (R, m) per-restart batch columns
+    weights: jnp.ndarray,    # (R, m) per-restart batch weights
+    init_idx: jnp.ndarray,   # (R, k) per-restart initial medoids
+    *,
+    variant: str = "nniw",
+    metric: str = "l1",
+    max_swaps: int = 500,
+    eps: float = 0.0,
+    backend: str = "auto",
+    chunk_size: int | None = None,
+    prune_m: int | None = None,
+    survivor_frac: float = 0.5,
+) -> solver.SolveResult:
+    """All R bound-pruned searches as one vmapped program (DESIGN.md §2c).
+
+    Each lane is exactly :func:`pruned.solve_pruned`, so per-lane
+    trajectories are bit-for-bit the matrix-free (and hence batched)
+    solver's. The phase-1 subsample positions are static (strided over
+    m), so all lanes share the same m' column-slice of their respective
+    batches — one vmapped phase-1 sweep, no per-lane gather patterns.
+    Under vmap the dense-fallback ``lax.cond`` lowers to a select (both
+    branches execute); that costs speed on mixed lanes, never changes
+    any lane's swaps.
+    """
+    from repro.core import pruned as pruned_mod
+    return jax.vmap(
+        lambda bi, w, ii: pruned_mod.solve_pruned(
+            x, bi, w, ii, metric=metric, debias=(variant == "debias"),
+            max_swaps=max_swaps, eps=eps, backend=backend,
+            chunk_size=chunk_size, prune_m=prune_m,
+            survivor_frac=survivor_frac)
+    )(pool_idx, weights, init_idx)
+
+
 def elect(
     x: jnp.ndarray,
     medoid_idx: jnp.ndarray,  # (R, k) medoid sets, indices into X_n
@@ -332,6 +368,8 @@ def one_batch_pam_restarts(
     chunk_size: int | None = None,
     block_dtype: str | jnp.dtype | None = None,
     mesh=None,
+    prune_m: int | None = None,
+    survivor_frac: float = 0.5,
 ) -> tuple[RestartResult, Pool]:
     """End-to-end multi-restart OneBatchPAM: pool → vmapped solve → elect.
 
@@ -346,23 +384,28 @@ def one_batch_pam_restarts(
     ``strategy="matrix_free"`` (host-side only) runs the R lanes through
     :func:`solve_restarts_matrix_free` on a block-free pool — ``Pool.d``
     is None because the blocks never exist at all (DESIGN.md §2b).
+    ``strategy="pruned"`` (host-side only) is the same block-free pool
+    fed to :func:`solve_restarts_pruned` — bitwise the matrix-free
+    lanes, most sweeps only exactly rescoring bound-surviving candidates
+    (DESIGN.md §2c); ``prune_m``/``survivor_frac`` tune it.
     """
     n = x.shape[0]
     if m is None:
         m = min(sampling.default_batch_size(n, k), max(n // restarts, 1))
-    if strategy not in ("batched", "matrix_free"):
+    if strategy not in ("batched", "matrix_free", "pruned"):
         raise ValueError(
-            "restart lanes support strategy='batched' or 'matrix_free', "
-            f"got {strategy!r}")
+            "restart lanes support strategy='batched', 'matrix_free' or "
+            f"'pruned', got {strategy!r}")
     matrix_free = strategy == "matrix_free"
+    block_free = strategy in ("matrix_free", "pruned")
     _check_pool_shape(n, m, restarts)
     key_b, key_i = jax.random.split(key)
     init_idx = _init_draws(key_i, n, k, restarts)
 
-    if mesh is not None and matrix_free:
+    if mesh is not None and block_free:
         raise ValueError(
-            "restarts x mesh x matrix_free is not composed yet; run "
-            "matrix-free restarts host-side (mesh=None) or use the "
+            f"restarts x mesh x {strategy} is not composed yet; run "
+            f"{strategy} restarts host-side (mesh=None) or use the "
             "single-restart distributed matrix-free path "
             "(distributed.make_distributed_obp_matrix_free)")
     if mesh is not None:
@@ -387,12 +430,18 @@ def one_batch_pam_restarts(
         pool = build_pool(key_b, x, m, restarts, eval_m=eval_m,
                           variant=variant, metric=metric, backend=backend,
                           chunk_size=chunk_size, block_dtype=block_dtype,
-                          materialize=not matrix_free)
+                          materialize=not block_free)
         if matrix_free:
             results = solve_restarts_matrix_free(
                 x, pool.idx, pool.weights, init_idx, variant=variant,
                 metric=metric, max_swaps=max_swaps, eps=eps,
                 backend=backend, chunk_size=chunk_size)
+        elif strategy == "pruned":
+            results = solve_restarts_pruned(
+                x, pool.idx, pool.weights, init_idx, variant=variant,
+                metric=metric, max_swaps=max_swaps, eps=eps,
+                backend=backend, chunk_size=chunk_size, prune_m=prune_m,
+                survivor_frac=survivor_frac)
         else:
             results = solve_restarts(pool.d, init_idx, max_swaps=max_swaps,
                                      eps=eps, backend=backend)

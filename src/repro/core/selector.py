@@ -26,8 +26,10 @@ class MedoidSelector:
     variant: str = "nniw"
     metric: str = "l1"
     # "batched" (fused block sweep), "matrix_free" (same sweep, no (n, m)
-    # block ever — DESIGN.md §2b, swap-for-swap identical), or "eager"
-    # (paper-faithful serial scan).
+    # block ever — DESIGN.md §2b, swap-for-swap identical), "pruned"
+    # (matrix-free with bound-based candidate elimination — DESIGN.md
+    # §2c, bitwise-identical trajectory), or "eager" (paper-faithful
+    # serial scan).
     strategy: str = "batched"
     max_swaps: int = 500
     seed: int = 0
@@ -45,6 +47,11 @@ class MedoidSelector:
     # is the original single-restart trajectory, bit for bit.
     restarts: int = 1
     eval_m: int | None = None
+    # Pruned-sweep knobs (DESIGN.md §2c, strategy="pruned" only):
+    # prune_m is the phase-1 subsample width (default m // 8);
+    # survivor_frac the dense-fallback threshold on the survivor count.
+    prune_m: int | None = None
+    survivor_frac: float = 0.5
 
     medoid_indices_: np.ndarray | None = None
     medoids_: np.ndarray | None = None
@@ -56,12 +63,12 @@ class MedoidSelector:
     def fit(self, x) -> "MedoidSelector":
         x = jnp.asarray(x)
         if self.restarts > 1:
-            if self.strategy not in ("batched", "matrix_free"):
+            if self.strategy not in ("batched", "matrix_free", "pruned"):
                 # Same contract as solver.one_batch_pam: restart lanes
-                # are the vmapped batched / matrix-free sweeps only.
+                # are the vmapped batched / block-free sweeps only.
                 raise ValueError(
-                    "restarts > 1 supports strategy='batched' or "
-                    "'matrix_free'")
+                    "restarts > 1 supports strategy='batched', "
+                    "'matrix_free' or 'pruned'")
             from repro.core import restarts as restarts_mod
             n = x.shape[0]
             m = self.m
@@ -77,7 +84,8 @@ class MedoidSelector:
                 strategy=self.strategy,
                 max_swaps=self.max_swaps, backend=self.backend,
                 chunk_size=self.chunk_size, block_dtype=self.block_dtype,
-                mesh=self.mesh)
+                mesh=self.mesh, prune_m=self.prune_m,
+                survivor_frac=self.survivor_frac)
             res = rr.best
             self.best_restart_ = int(rr.best_restart)
             self.eval_objectives_ = np.asarray(rr.eval_objectives)
@@ -87,7 +95,8 @@ class MedoidSelector:
                 variant=self.variant, metric=self.metric,
                 strategy=self.strategy, max_swaps=self.max_swaps,
                 backend=self.backend, chunk_size=self.chunk_size,
-                block_dtype=self.block_dtype, mesh=self.mesh)
+                block_dtype=self.block_dtype, mesh=self.mesh,
+                prune_m=self.prune_m, survivor_frac=self.survivor_frac)
         self.medoid_indices_ = np.asarray(res.medoid_idx)
         self.medoids_ = np.asarray(x[res.medoid_idx])
         self.est_objective_ = float(res.est_objective)

@@ -469,6 +469,8 @@ def one_batch_pam(
     mesh=None,
     restarts: int = 1,
     eval_m: int | None = None,
+    prune_m: int | None = None,
+    survivor_frac: float = 0.5,
 ) -> tuple[SolveResult, sampling.Batch]:
     """End-to-end OneBatchPAM (Algorithm 1).
 
@@ -504,6 +506,14 @@ def one_batch_pam(
     swaps as ``"batched"`` on the f32 ref/interpret paths; resident
     memory drops from O(nm) to O(np + km). ``block_dtype`` does not
     apply (no stored block).
+
+    ``strategy="pruned"`` (DESIGN.md §2c) is the matrix-free sweep with
+    bound-based candidate elimination: most sweeps exactly rescore only
+    the rows whose confidence upper bound reaches the best lower bound,
+    with a guaranteed-identical trajectory (bitwise the
+    ``"matrix_free"`` swaps — core/pruned.py). ``prune_m`` is the
+    phase-1 subsample width (default m // 8) and ``survivor_frac`` the
+    dense-fallback threshold; both are ignored by other strategies.
     """
     n = x.shape[0]
     user_m = m
@@ -512,21 +522,24 @@ def one_batch_pam(
     if restarts < 1:
         raise ValueError(f"restarts must be >= 1, got {restarts}")
     matrix_free = strategy == "matrix_free"
-    if matrix_free and block_dtype is not None:
+    block_free = strategy in ("matrix_free", "pruned")
+    if block_free and block_dtype is not None:
         raise ValueError(
-            "strategy='matrix_free' builds no block; block_dtype does not "
+            f"strategy={strategy!r} builds no block; block_dtype does not "
             "apply (tiles are recomputed in f32 on chip, DESIGN.md §2b)")
     if restarts > 1:
         from repro.core import restarts as restarts_mod
-        if strategy not in ("batched", "matrix_free"):
+        if strategy not in ("batched", "matrix_free", "pruned"):
             raise ValueError(
-                "restarts > 1 supports strategy='batched' or 'matrix_free'")
+                "restarts > 1 supports strategy='batched', 'matrix_free' "
+                "or 'pruned'")
         rm = _clamp_pool_m(n, restarts, m, user_m=user_m)
         rr, pool = restarts_mod.one_batch_pam_restarts(
             key, x, k, restarts=restarts, m=rm,
             eval_m=eval_m, variant=variant, metric=metric, strategy=strategy,
             max_swaps=max_swaps, eps=eps, backend=backend,
-            chunk_size=chunk_size, block_dtype=block_dtype, mesh=mesh)
+            chunk_size=chunk_size, block_dtype=block_dtype, mesh=mesh,
+            prune_m=prune_m, survivor_frac=survivor_frac)
         r = rr.best_restart
         d_best = None if pool.d is None else pool.d[r]
         return rr.best, sampling.Batch(idx=pool.idx[r],
@@ -559,7 +572,7 @@ def one_batch_pam(
     batch = sampling.build_batch(key_b, x, m, variant=variant, metric=metric,
                                  backend=backend, chunk_size=chunk_size,
                                  block_dtype=block_dtype,
-                                 materialize=not matrix_free)
+                                 materialize=not block_free)
     if strategy == "batched":
         res = solve_batched(batch.d, init_idx, max_swaps=max_swaps, eps=eps,
                             backend=backend)
@@ -568,6 +581,14 @@ def one_batch_pam(
                                 metric=metric, debias=(variant == "debias"),
                                 max_swaps=max_swaps, eps=eps, backend=backend,
                                 chunk_size=chunk_size)
+    elif strategy == "pruned":
+        from repro.core import pruned as pruned_mod
+        res = pruned_mod.solve_pruned(
+            x, batch.idx, batch.weights, init_idx,
+            metric=metric, debias=(variant == "debias"),
+            max_swaps=max_swaps, eps=eps, backend=backend,
+            chunk_size=chunk_size, prune_m=prune_m,
+            survivor_frac=survivor_frac)
     elif strategy == "eager":
         res = solve_eager(batch.d, init_idx,
                           max_passes=max(2, max_swaps // max(k, 1)), eps=eps)

@@ -19,6 +19,11 @@ the exact loop bodies step by step from the host:
     literal body of ``solve_matrix_free`` (same fused distance+select
     sweep, same O(mp) row recompute, same repair) — pinning the
     matrix-free trajectory swap for swap against the block path's.
+  * :func:`trace_pruned` drives ``pruned._pruned_step`` — the literal
+    body of ``solve_pruned`` (same phase-1 bounds, same survivor
+    rescore, same fallback predicate) — threading the (ub, lb) bound
+    caches through the host loop, pinning the pruned trajectory (and
+    its per-sweep pruning decisions) swap for swap.
 
 Tracing is a test/debug tool: O(1 jit dispatch per swap) host overhead
 makes it slower than the fused loops; production callers want
@@ -121,6 +126,65 @@ def trace_matrix_free(x, batch_idx, weights, init_idx, *,
         swaps.append((int(i), int(l)))
         gains.append(float(best))
         state = new_state
+    result = solver.SolveResult(state.medoid_idx, jnp.int32(len(swaps)),
+                                jnp.mean(state.d1), jnp.bool_(converged))
+    return Trajectory(tuple(swaps), tuple(gains), result)
+
+
+@functools.lru_cache(maxsize=64)
+def _jit_pruned_step(metric: str, debias: bool, eps: float, backend: str,
+                     chunk_size, prune_m: int, survivor_frac: float,
+                     bound_scale: float):
+    from repro.core import pruned
+    return jax.jit(functools.partial(
+        pruned._pruned_step, metric=metric, debias=debias, eps=eps,
+        backend=backend, chunk_size=chunk_size, prune_m=prune_m,
+        survivor_frac=survivor_frac, bound_scale=bound_scale))
+
+
+def trace_pruned(x, batch_idx, weights, init_idx, *,
+                 metric: str = "l1", debias: bool = False,
+                 max_swaps: int = 500, eps: float = 0.0,
+                 backend: str = "auto", chunk_size: int | None = None,
+                 prune_m: int | None = None, survivor_frac: float = 0.5,
+                 bound_scale: float = 1.0) -> Trajectory:
+    """Replay ``solve_pruned`` recording every accepted (i, l, gain).
+
+    Matches :func:`pruned.solve_pruned` exactly — each step *is* the
+    solver's loop body (``_pruned_step``), with the (ub, lb) bound
+    caches threaded through the host loop from the same ``+/-BIG``
+    initialisation the ``while_loop`` uses, so every sweep sees the same
+    survivor sets and the same selection floats.
+    """
+    from repro.core import pruned
+    x = jnp.asarray(x)
+    batch_idx = jnp.asarray(batch_idx).astype(jnp.int32)
+    if prune_m is None:
+        prune_m = pruned.default_prune_m(batch_idx.shape[0])
+    xp = solver._prepared(x, metric)
+    b = xp[batch_idx]
+    w = jnp.asarray(weights).astype(jnp.float32)
+    state = solver._init_state_matrix_free(
+        xp, b, w, batch_idx, jnp.asarray(init_idx), metric=metric,
+        debias=debias, backend=backend)
+    n = x.shape[0]
+    k = jnp.asarray(init_idx).shape[0]
+    ub = jnp.full((n, k), pruned.BIG)
+    lb = jnp.full((n, k), -pruned.BIG)
+    step = _jit_pruned_step(metric, debias, eps, backend, chunk_size,
+                            prune_m, survivor_frac, bound_scale)
+    swaps: list[tuple[int, int]] = []
+    gains: list[float] = []
+    converged = False
+    while len(swaps) < max_swaps:
+        new_state, ub_n, lb_n, improved, best, i, l, _ = step(
+            xp, b, w, batch_idx, state, ub, lb)
+        if not bool(improved):
+            converged = True
+            break
+        swaps.append((int(i), int(l)))
+        gains.append(float(best))
+        state, ub, lb = new_state, ub_n, lb_n
     result = solver.SolveResult(state.medoid_idx, jnp.int32(len(swaps)),
                                 jnp.mean(state.d1), jnp.bool_(converged))
     return Trajectory(tuple(swaps), tuple(gains), result)

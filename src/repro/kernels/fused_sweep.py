@@ -42,7 +42,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from . import metrics
-from .swap_gain import SG_TM, SG_TN, _accumulate_gain, _select_reduce
+from .swap_gain import SG_TM, SG_TN, _NEG, _accumulate_gain, _select_reduce
 
 # Finite debias sentinel, as a python float: jnp constants cannot be
 # closed over by a Pallas kernel body (== float(ref.LARGE)).
@@ -93,6 +93,134 @@ def _fused_sweep_kernel(x_ref, b_ref, w_ref, d1_ref, d2_ref, nh_ref,
     @pl.when(jk == m_steps - 1)
     def _reduce():
         _select_reduce(acc_ref, mask_ref, g_ref, f_ref, k_true=k_true)
+
+
+def _rowmax_reduce(acc_ref, off_ref, g_ref, l_ref, *, k_true):
+    """Per-row reduction of the accumulated (TN, K) gain tile: each row's
+    maximum gain and the first slot attaining it (jnp.argmax(axis=1)
+    tie-break — the per-row half of ``_select_reduce``). ``off_ref`` is a
+    (1, K) per-slot additive offset folded in before the reduce (0 for
+    exact sweeps; the pruned sweep's phase-1 interval endpoints
+    otherwise). No row mask: the pruned sweep caches *unmasked* row
+    maxima so bounds stay sound when a row leaves the medoid set."""
+    tn, kp = acc_ref.shape
+    gain = acc_ref[...] + off_ref[...]
+    col = jax.lax.broadcasted_iota(jnp.int32, (tn, kp), 1)
+    gain = jnp.where(col < k_true, gain, _NEG)
+    rmax = jnp.max(gain, axis=1, keepdims=True)            # (TN, 1)
+    l_row = jnp.min(jnp.where(gain == rmax, col, kp),
+                    axis=1, keepdims=True)                 # (TN, 1)
+    g_ref[...] = rmax
+    l_ref[...] = l_row
+
+
+def _fused_sweep_rowmax_kernel(x_ref, b_ref, w_ref, d1_ref, d2_ref, nh_ref,
+                               own_ref, off_ref, g_ref, l_ref, acc_ref, *,
+                               k_true, m_steps, metric):
+    """The fused-sweep grid step with a per-row reduction instead of the
+    per-tile argmax: same VMEM-resident B / m-vectors, same
+    ``_accumulate_gain``, but the output is the full (n, 1) row-max gain
+    and slot vectors — what the pruned sweep (core/pruned.py) caches and
+    bounds per candidate."""
+    jk = pl.program_id(1)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    i = pl.program_id(0)
+    spec = metrics.get(metric)
+    cols = pl.ds(jk * SG_TM, SG_TM)
+    x = x_ref[...].astype(jnp.float32)                   # (TN, P)
+    bt = b_ref[cols, :].astype(jnp.float32)              # (TM, P) slice
+    d = spec.finalize(spec.tile(x, bt))                  # (TN, TM) distances
+    rows = i * SG_TN + jax.lax.broadcasted_iota(
+        jnp.int32, (SG_TN, SG_TM), 0)
+    d = jnp.where(own_ref[:, cols] == rows, _LARGE, d)
+    d = d * w_ref[:, cols].astype(jnp.float32)           # (1, TM) weights
+
+    d1 = d1_ref[:, cols].astype(jnp.float32)             # (1, TM)
+    d2 = d2_ref[:, cols].astype(jnp.float32)             # (1, TM)
+    nh = nh_ref[cols, :].astype(jnp.float32)             # (TM, K)
+    _accumulate_gain(d, d1, d2, nh, acc_ref)
+
+    @pl.when(jk == m_steps - 1)
+    def _reduce():
+        _rowmax_reduce(acc_ref, off_ref, g_ref, l_ref, k_true=k_true)
+
+
+@functools.partial(jax.jit, static_argnames=("k_true", "metric", "interpret"))
+def fused_sweep_rowmax(
+    x: jnp.ndarray,            # (n, p) candidate rows (prepared, padded)
+    b: jnp.ndarray,            # (m, p) batch rows (prepared, padded)
+    w: jnp.ndarray,            # (m,) f32 batch weights (0 on padded cols)
+    d1: jnp.ndarray,           # (m,)
+    d2: jnp.ndarray,           # (m,)
+    near_onehot: jnp.ndarray,  # (m, k_pad)
+    owner: jnp.ndarray,        # (m,) i32 global row owning column j, -1 = none
+    offset: jnp.ndarray,       # (k_pad,) f32 per-slot additive offset
+    *,
+    k_true: int,
+    metric: str = "l1",
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Matrix-free per-row swap-gain maxima.
+
+    Same fused dataflow as :func:`fused_sweep` (VMEM-resident B and
+    m-vectors, one DMA per sweep, O(np + mp) HBM traffic), but instead
+    of collapsing each row tile to one argmax partial it writes, per
+    row, ``max_l (G(i, l) + offset_l)`` and the first slot attaining it
+    — shapes (n, 1) f32 / (n, 1) i32. The per-slot ``offset`` lets the
+    pruned sweep turn one kernel into both interval endpoints of its
+    phase-1 bounds (DESIGN.md §2c); exact callers pass zeros (x + 0.0
+    is the identity, so the maxima are bit-for-bit the offset-free
+    gains). No row masking — see ``_rowmax_reduce``.
+    """
+    n, p = x.shape
+    m = b.shape[0]
+    kp = near_onehot.shape[1]
+    spec = metrics.get(metric)
+    if spec.tile is None:  # pragma: no cover — ops guards before calling
+        raise ValueError(f"metric {metric!r} has no in-kernel tile math")
+    if p % spec.tile.p_mult:
+        raise ValueError(
+            f"p={p} must be padded to a {spec.tile.p_mult} multiple")
+    resident = (m * p + m * kp) * 4 + 4 * m * 4
+    if resident > 8 * 2**20:
+        raise ValueError(
+            f"matrix-free needs B (m x p) + one-hot (m x k) resident in "
+            f"VMEM; m={m}, p={p}, k_pad={kp} needs {resident / 2**20:.1f} "
+            "MiB > 8 MiB — shrink m (the paper regime is m ~ 100 log kn) "
+            "or fall back to the block path")
+    grid = (n // SG_TN, m // SG_TM)
+    return pl.pallas_call(
+        functools.partial(_fused_sweep_rowmax_kernel, k_true=k_true,
+                          m_steps=grid[1], metric=metric),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((SG_TN, p), lambda i, jk: (i, 0)),
+            # Constant index maps: one DMA per sweep, then VMEM-resident.
+            pl.BlockSpec((m, p), lambda i, jk: (0, 0)),
+            pl.BlockSpec((1, m), lambda i, jk: (0, 0)),
+            pl.BlockSpec((1, m), lambda i, jk: (0, 0)),
+            pl.BlockSpec((1, m), lambda i, jk: (0, 0)),
+            pl.BlockSpec((m, kp), lambda i, jk: (0, 0)),
+            pl.BlockSpec((1, m), lambda i, jk: (0, 0)),
+            pl.BlockSpec((1, kp), lambda i, jk: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((SG_TN, 1), lambda i, jk: (i, 0)),
+            pl.BlockSpec((SG_TN, 1), lambda i, jk: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((SG_TN, kp), jnp.float32)],
+        interpret=interpret,
+    )(x, b, w.reshape(1, m), d1.reshape(1, m), d2.reshape(1, m),
+      near_onehot, owner.reshape(1, m).astype(jnp.int32),
+      offset.reshape(1, kp).astype(jnp.float32))
 
 
 @functools.partial(jax.jit, static_argnames=("k_true", "metric", "interpret"))

@@ -171,6 +171,101 @@ def swap_select(
     return _reduce_partials(gains, flats, tn, k)
 
 
+def fused_swap_select_rowmax(
+    x: jnp.ndarray,            # (n, p) candidate rows (f32 or bf16)
+    b: jnp.ndarray,            # (m, p) batch rows
+    weights: jnp.ndarray,      # (m,) f32 batch weights
+    d1: jnp.ndarray,
+    d2: jnp.ndarray,
+    near_onehot: jnp.ndarray,
+    *,
+    metric: str = "l1",
+    owner: jnp.ndarray | None = None,
+    offset: jnp.ndarray | None = None,
+    backend: str = "auto",
+    skip_prepare: bool = False,
+    row_chunk: int | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Matrix-free per-row swap-gain maxima: ``(row_gain, row_slot)`` of
+    shapes (n,) f32 / (n,) i32 — for every candidate row,
+    ``max_l (G(i, l) + offset_l)`` and the first slot attaining it.
+
+    The per-row sibling of :func:`fused_swap_select`, built on the same
+    fused dataflow (kernels/fused_sweep.py): the (n, m) weighted block
+    never exists, and per-row gains go through the identical float chain
+    as the block path, so a host-side ``jnp.argmax`` over ``row_gain``
+    (first-row tie-break) recovers exactly the fused selection. The
+    per-slot ``offset`` (k,) f32, default zeros, is how the pruned sweep
+    (core/pruned.py) evaluates both confidence-interval endpoints of its
+    subsample bounds with this one primitive; it is added before the
+    row reduce and does not perturb exact callers (x + 0 is exact).
+
+    No row masking, by design: the pruned sweep caches *unmasked* row
+    maxima so its bounds survive rows entering/leaving the medoid set;
+    callers mask at selection time. vmap-safe on every backend, like
+    :func:`fused_swap_select`.
+    """
+    from . import ref
+
+    backend = _resolve(backend)
+    spec = metrics.get(metric)
+    if spec.prepare is not None and not skip_prepare:
+        x = spec.prepare(x)
+        b = spec.prepare(b)
+    n, p = x.shape
+    m = b.shape[0]
+    k = near_onehot.shape[1]
+    if owner is None:
+        owner = jnp.full((m,), -1, jnp.int32)
+    if offset is None:
+        offset = jnp.zeros((k,), jnp.float32)
+
+    if backend == "ref":
+        if row_chunk is None or row_chunk >= n:
+            return ref.fused_swap_select_rowmax(
+                x, b, weights, d1, d2, near_onehot, owner, offset,
+                metric=metric)
+        # Stream in row chunks — row-local math, identical floats per row
+        # (same floor-of-8 rationale as fused_swap_select).
+        row_chunk = max(row_chunk, 8)
+        pad = (-n) % row_chunk
+        xp = jnp.pad(x, ((0, pad), (0, 0)))
+        c = (n + pad) // row_chunk
+        offs = jnp.arange(c, dtype=jnp.int32) * row_chunk
+
+        def chunk(args):
+            xi, off = args
+            return ref.fused_swap_select_rowmax(
+                xi, b, weights, d1, d2, near_onehot, owner, offset,
+                metric=metric, row_offset=off)
+        gains, slots = jax.lax.map(chunk, (xp.reshape(c, row_chunk, p), offs))
+        return gains.reshape(-1)[:n], slots.reshape(-1)[:n]
+
+    interpret = backend == "interpret"
+    if spec.tile is None:
+        raise ValueError(
+            f"metric {metric!r} has no in-kernel tile math; register a "
+            "MetricSpec.tile to use the matrix-free kernel path, or run "
+            "with backend='ref'")
+    tn, tm = swap_gain_mod.SG_TN, swap_gain_mod.SG_TM
+    tp = spec.tile.p_mult
+    xp = _pad_to(_pad_to(x, 0, tn), 1, tp)
+    bp = _pad_to(_pad_to(b, 0, tm), 1, tp)
+    # Same padding contract as fused_swap_select; padded k columns are
+    # masked in-kernel (col < k_true), so the padded offset slots are
+    # inert; padded rows produce garbage maxima that are sliced off.
+    wp = _pad_to(weights.astype(jnp.float32), 0, tm)
+    d1p = _pad_to(d1, 0, tm)
+    d2p = _pad_to(d2, 0, tm)
+    nhp = _pad_to(_pad_to(near_onehot, 0, tm), 1, 128)
+    ownp = _pad_to(owner.astype(jnp.int32), 0, tm, value=-1)
+    offp = _pad_to(offset.astype(jnp.float32), 0, 128)
+    gains, slots = fused_sweep_mod.fused_sweep_rowmax(
+        xp, bp, wp, d1p, d2p, nhp, ownp, offp, k_true=k, metric=metric,
+        interpret=interpret)
+    return gains[:n, 0], slots[:n, 0]
+
+
 def _reduce_partials(gains, flats, tn, k):
     """Tree-reduce per-row-tile (best_gain, best_flat) partials to the
     global ``(best, i, l)``: ``jnp.argmax`` over the tile maxima keeps

@@ -210,6 +210,52 @@ def fused_swap_select(
                        d1, d2, near_onehot, row_mask)
 
 
+def swap_gain_rowmax(
+    d: jnp.ndarray,
+    d1: jnp.ndarray,
+    d2: jnp.ndarray,
+    near_onehot: jnp.ndarray,
+    offset: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row swap-gain maxima: ``(max_l (G + offset_l), argmax_l)`` of
+    shapes (n,) f32 / (n,) i32, first-slot tie-break (``jnp.argmax`` along
+    axis 1). The rowmax contract the fused kernel's ``_rowmax_reduce``
+    must match exactly; no row masking (the pruned sweep caches unmasked
+    maxima — see core/pruned.py)."""
+    gain = swap_gain(d, d1, d2, near_onehot)
+    if offset is not None:
+        gain = gain + offset[None, :].astype(jnp.float32)
+    return (jnp.max(gain, axis=1),
+            jnp.argmax(gain, axis=1).astype(jnp.int32))
+
+
+def fused_swap_select_rowmax(
+    x: jnp.ndarray,            # (n, p) candidate rows (already prepared)
+    b: jnp.ndarray,            # (m, p) batch rows (already prepared)
+    w: jnp.ndarray,            # (m,) batch weights
+    d1: jnp.ndarray,
+    d2: jnp.ndarray,
+    near_onehot: jnp.ndarray,
+    owner: jnp.ndarray | None = None,
+    offset: jnp.ndarray | None = None,
+    *,
+    metric: str = "l1",
+    row_offset: int | jnp.ndarray = 0,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Matrix-free per-row maxima oracle: the weighted block through the
+    identical float chain as :func:`fused_swap_select`, reduced per row
+    by :func:`swap_gain_rowmax`. Ground truth for
+    ``ops.fused_swap_select_rowmax``."""
+    from . import metrics  # deferred: metrics.py imports this module
+
+    spec = metrics.get(metric)
+    d = spec.finalize(spec.ref(x, b))
+    if owner is not None:
+        d = apply_debias(d, owner, row_offset)
+    return swap_gain_rowmax(d * w[None, :].astype(jnp.float32),
+                            d1, d2, near_onehot, offset)
+
+
 def swap_select(
     d: jnp.ndarray,
     d1: jnp.ndarray,

@@ -1,0 +1,122 @@
+"""Deterministic stand-in for the optional ``hypothesis`` dependency.
+
+The property suites guard ``from hypothesis import ...`` and fall back
+here, so environments without hypothesis (the dependency stays in
+requirements-dev.txt, never a hard requirement) still *run* the
+property tests instead of skipping them: each ``@given`` test executes
+a fixed number of examples drawn from a seeded generator instead of a
+shrinking search. The seed mixes the test's module-qualified name and
+its (parametrized) call arguments, so every example set is stable
+across runs and processes — rerunning a red test replays the identical
+failure.
+
+Only the API surface the repo's suites use is provided: ``given``
+(keyword form), ``settings`` (no-op decorator), and the strategies
+``integers``, ``floats``, ``booleans``, ``sampled_from`` and ``data``
+(with ``draw(strategy, label=...)``). With real hypothesis installed
+this module is never imported.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import zlib
+
+import numpy as np
+
+# Mirror the conftest profiles loosely: the ci profile runs more seeded
+# examples; both stay far below real hypothesis' search budget (this is
+# a determinism fallback, not a search engine).
+_EXAMPLES = {"ci": 10, "dev": 5}.get(
+    os.environ.get("HYPOTHESIS_PROFILE", "dev"), 5)
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng):
+        return self._draw(rng)
+
+
+class _DataStrategy(_Strategy):
+    def __init__(self):
+        super().__init__(None)
+
+
+class _DataObject:
+    """The ``st.data()`` value: sequential draws off one example rng."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy.example_from(self._rng)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (the used subset)."""
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(
+            lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+    @staticmethod
+    def data():
+        return _DataStrategy()
+
+
+def _example_seed(fn, call_args, call_kw, example) -> int:
+    """Stable per-example seed: test identity + parametrization + index."""
+    tag = (f"{fn.__module__}.{fn.__qualname__}|{call_args!r}|"
+           f"{sorted(call_kw.items())!r}|{example}")
+    return zlib.crc32(tag.encode())
+
+
+def given(**strategies_kw):
+    """Keyword-only ``@given``: runs ``_EXAMPLES`` seeded examples."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kw):
+            for example in range(_EXAMPLES):
+                rng = np.random.default_rng(
+                    _example_seed(fn, args, kw, example))
+                drawn = {}
+                for name, strat in strategies_kw.items():
+                    if isinstance(strat, _DataStrategy):
+                        drawn[name] = _DataObject(rng)
+                    else:
+                        drawn[name] = strat.example_from(rng)
+                fn(*args, **kw, **drawn)
+        # Hide the strategy-supplied parameters from pytest's fixture
+        # resolution, as real hypothesis does.
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for p in sig.parameters.values()
+            if p.name not in strategies_kw])
+        return wrapper
+    return deco
+
+
+def settings(**_kw):
+    """No-op decorator; example counts come from ``_EXAMPLES``."""
+    def deco(fn):
+        return fn
+    return deco

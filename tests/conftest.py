@@ -9,8 +9,9 @@ Registers hypothesis profiles so CI is deterministic (ISSUE 3):
   * ``dev`` — the local default: fewer examples, still no deadline.
 
 hypothesis stays optional (requirements-dev.txt): without it the
-property tests skip via the guarded imports in the test modules and this
-conftest is a no-op.
+property tests fall back to tests/_hypothesis_stub.py — deterministic
+seeded example draws through the same @given API, honouring the same
+HYPOTHESIS_PROFILE env var — and this conftest is a no-op.
 """
 import os
 

@@ -1,8 +1,8 @@
 """System-behaviour tests for the OneBatchPAM core library.
 
-hypothesis is optional (requirements-dev.txt): without it the example-based
-tests still run and the property tests are skipped instead of breaking
-collection for the whole module.
+hypothesis is optional (requirements-dev.txt): without it the property
+tests run through the deterministic seeded-example stub
+(tests/_hypothesis_stub.py) instead of skipping.
 """
 import jax
 import jax.numpy as jnp
@@ -11,22 +11,8 @@ import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
-except ImportError:  # property tests skip, everything else still collects
-    def settings(**_kw):
-        def deco(fn):
-            return fn
-        return deco
-
-    def given(**_kw):
-        def deco(fn):
-            return pytest.mark.skip(reason="hypothesis not installed")(fn)
-        return deco
-
-    class _AnyStrategy:
-        def __getattr__(self, _name):
-            return lambda *a, **k: None
-
-    st = _AnyStrategy()
+except ImportError:  # deterministic fallback, same tests still run
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core import baselines, sampling, solver
 from repro.core.selector import MedoidSelector

@@ -29,24 +29,9 @@ import pytest
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True
-except ImportError:
+except ImportError:  # deterministic fallback, same tests still run
     HAVE_HYPOTHESIS = False
-
-    def settings(**_kw):
-        def deco(fn):
-            return fn
-        return deco
-
-    def given(**_kw):
-        def deco(fn):
-            return pytest.mark.skip(reason="hypothesis not installed")(fn)
-        return deco
-
-    class _AnyStrategy:
-        def __getattr__(self, _name):
-            return lambda *a, **k: None
-
-    st = _AnyStrategy()
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core import baselines, trace
 from repro.kernels import metrics, ops

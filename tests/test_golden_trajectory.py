@@ -41,6 +41,20 @@ def _assert_matches(tr, want, name):
 
 @pytest.mark.parametrize("case", CASES, ids=[c["name"] for c in CASES])
 def test_golden_trajectory(case):
+    if case["kind"] == "pruned":
+        # Bound-pruned replay (ISSUE 6): most sweeps only exactly rescore
+        # bound-surviving candidates, yet the committed swap sequence —
+        # generated with a three-way identity assert against the
+        # matrix-free and block traces — must replay exactly.
+        spec = case["spec"]
+        x, batch, init = matrix_free_instance(spec)
+        np.testing.assert_array_equal(np.asarray(init), case["init"])
+        tr = trace.trace_pruned(x, batch.idx, batch.weights, init,
+                                metric=spec["metric"],
+                                debias=(spec["variant"] == "debias"),
+                                backend="ref")
+        _assert_matches(tr, case["batched"], case["name"])
+        return
     if case["kind"] == "matrix_free":
         # Block-free replay (ISSUE 4): the (n, m) block is never built,
         # yet the committed swap sequence — generated with a cross-path

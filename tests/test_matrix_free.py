@@ -18,7 +18,8 @@ movement* — so every test here is an exact-equality test, not allclose:
     hard 3 GB RLIMIT_AS cap.
 
 hypothesis is optional (requirements-dev.txt): without it the property
-tests skip and everything else still collects.
+tests run through the deterministic seeded-example stub
+(tests/_hypothesis_stub.py) instead of skipping.
 """
 import os
 import pathlib
@@ -33,22 +34,8 @@ import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
-except ImportError:  # property tests skip, everything else still collects
-    def settings(**_kw):
-        def deco(fn):
-            return fn
-        return deco
-
-    def given(**_kw):
-        def deco(fn):
-            return pytest.mark.skip(reason="hypothesis not installed")(fn)
-        return deco
-
-    class _AnyStrategy:
-        def __getattr__(self, _name):
-            return lambda *a, **k: None
-
-    st = _AnyStrategy()
+except ImportError:  # deterministic fallback, same tests still run
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core import restarts as restarts_mod
 from repro.core import sampling, solver, streaming, trace

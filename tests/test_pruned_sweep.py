@@ -1,0 +1,396 @@
+"""Bound-pruned sweep exactness proof-harness (ISSUE 6 acceptance).
+
+The pruned solver's headline invariant is *bitwise* trajectory identity
+with the matrix-free sweep (and hence with the block path) — not
+approximate agreement — so every comparison here is exact equality, and
+every gain is evaluated through jitted entry points: eager (op-by-op)
+execution rounds some l2 chains differently from compiled code, so the
+solvers, the traces, and the direct bound probes below all go through
+``jax.jit`` like the production paths do.
+
+The harness has teeth: the adversarial-bounds test shrinks every
+interval width (``bound_scale < 1``, deliberately un-sound) and asserts
+the differential comparison *catches* the resulting wrong swap — a
+mutation check proving a broken bound cannot slip through this suite.
+
+hypothesis is optional (requirements-dev.txt): without it the property
+suites run through the deterministic seeded-example stub
+(tests/_hypothesis_stub.py). Under the derandomized "ci" profile the
+differential suite runs >= 50 cases per metric (tests/conftest.py).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback, same tests still run
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.core import pruned, sampling, solver, trace
+from repro.core import restarts as restarts_mod
+from repro.core.selector import MedoidSelector
+from repro.kernels import metrics, ops
+
+METRICS = metrics.names()
+VARIANTS = ["unif", "debias", "nniw", "lwcs"]
+# A small fixed shape pool keeps XLA recompilation bounded while the
+# example draws cover metrics x dtypes x k x variants x prune knobs.
+SHAPES = [(64, 6, 24), (96, 5, 32), (48, 4, 16)]
+
+
+def _assert_same_solve(a, b, ctx=""):
+    np.testing.assert_array_equal(np.asarray(a.medoid_idx),
+                                  np.asarray(b.medoid_idx), err_msg=str(ctx))
+    assert int(a.n_swaps) == int(b.n_swaps), ctx
+    np.testing.assert_array_equal(np.float32(a.est_objective),
+                                  np.float32(b.est_objective))
+    assert bool(a.converged) == bool(b.converged), ctx
+
+
+def _instance(seed, n, p, k, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+    if dtype is not np.float32:
+        x = x.astype(dtype)
+    init = jnp.asarray(rng.choice(n, size=k, replace=False))
+    return x, init
+
+
+def _dyadic_instance(seed, n, p, k):
+    """Integer features in [0, 8): every distance/gain sum the solvers
+    form is exact in f32, so bound containment is a hard inequality."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 8, size=(n, p)).astype(np.float32))
+    init = jnp.asarray(rng.choice(n, size=k, replace=False))
+    return x, init
+
+
+def _batches(seed, x, m, variant, metric, backend="ref"):
+    key = jax.random.PRNGKey(seed)
+    blk = sampling.build_batch(key, x, m, variant=variant, metric=metric,
+                               backend=backend)
+    mf = sampling.build_batch(key, x, m, variant=variant, metric=metric,
+                              backend=backend, materialize=False)
+    return blk, mf
+
+
+# ------------------------------------------- differential (hypothesis) --
+
+@pytest.mark.parametrize("metric", METRICS)
+@settings(deadline=None)
+@given(data=st.data())
+def test_property_pruned_matches_matrix_free_and_block(metric, data):
+    """ISSUE 6 acceptance: pruned == matrix-free == block, bitwise, per
+    metric x {f32, bf16} x k x variant x prune knobs."""
+    dtype = data.draw(st.sampled_from([np.float32, jnp.bfloat16]),
+                      label="dtype")
+    seed = data.draw(st.integers(0, 2**16), label="seed")
+    k = data.draw(st.integers(2, 7), label="k")
+    variant = data.draw(st.sampled_from(VARIANTS), label="variant")
+    n, p, m = data.draw(st.sampled_from(SHAPES), label="shape")
+    prune_m = data.draw(st.sampled_from([None, 1, m // 4]), label="prune_m")
+    survivor_frac = data.draw(st.sampled_from([0.25, 0.5, 1.0]),
+                              label="survivor_frac")
+    x, init = _instance(seed, n, p, k, dtype=dtype)
+    blk, mf = _batches(seed, x, m, variant, metric)
+    debias = variant == "debias"
+    r_blk = solver.solve_batched(blk.d, init, backend="ref")
+    r_mf = solver.solve_matrix_free(x, mf.idx, mf.weights, init,
+                                    metric=metric, debias=debias,
+                                    backend="ref")
+    r_pr = pruned.solve_pruned(x, mf.idx, mf.weights, init, metric=metric,
+                               debias=debias, backend="ref",
+                               prune_m=prune_m,
+                               survivor_frac=survivor_frac)
+    ctx = (metric, np.dtype(dtype).name if dtype is np.float32 else "bf16",
+           seed, k, variant, prune_m, survivor_frac)
+    _assert_same_solve(r_mf, r_blk, ctx)
+    _assert_same_solve(r_pr, r_mf, ctx)
+
+
+@settings(deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_pruned_never_falls_back_still_exact(seed):
+    """survivor_frac=1.0 disables the dense fallback entirely (the
+    threshold is n, never exceeded), so every sweep past the vacuous
+    first one runs the bound-pruned scan — and the trajectory must still
+    be bitwise the full sweep's. This is the end-to-end form of
+    'the survivor set always contains the exact argmax'."""
+    x, init = _dyadic_instance(seed, 72, 5, 4)
+    _, mf = _batches(seed, x, 24, "unif", "l1")
+    r_mf = solver.solve_matrix_free(x, mf.idx, mf.weights, init,
+                                    metric="l1", backend="ref")
+    r_pr, stats = pruned.solve_pruned_stats(
+        x, mf.idx, mf.weights, init, metric="l1", backend="ref",
+        survivor_frac=1.0)
+    _assert_same_solve(r_pr, r_mf, seed)
+    sw = int(stats.sweeps)
+    assert not np.asarray(stats.fallback)[1:sw].any()
+
+
+# ------------------------------------------------- bound properties -----
+
+@functools.partial(jax.jit, static_argnames=("metric", "debias", "prune_m"))
+def _bounds_and_exact(x, batch_idx, weights, init_idx, *, metric, debias,
+                      prune_m):
+    """One jitted program: the phase-1 interval through the solver's own
+    helper, and the exact per-row max gains through the identical fused
+    rowmax chain the dense sweep uses."""
+    xp = solver._prepared(x, metric)
+    b = xp[batch_idx]
+    w = weights.astype(jnp.float32)
+    batch_idx = batch_idx.astype(jnp.int32)
+    state = solver._init_state_matrix_free(xp, b, w, batch_idx, init_idx,
+                                           metric=metric, debias=debias,
+                                           backend="ref")
+    hi, lo, slack = pruned._phase1_bounds(
+        xp, b, w, batch_idx, state, metric=metric, debias=debias,
+        backend="ref", row_chunk=solver._mf_chunk(None), prune_m=prune_m)
+    k = init_idx.shape[0]
+    nh = jax.nn.one_hot(state.near, k, dtype=jnp.float32)
+    exact, _ = ops.fused_swap_select_rowmax(
+        xp, b, w, state.d1, state.d2, nh, metric=metric,
+        owner=batch_idx if debias else None, backend="ref",
+        skip_prepare=True)
+    valid = jnp.ones((x.shape[0],), jnp.bool_).at[state.medoid_idx].set(False)
+    return hi, lo, slack, exact, valid
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@settings(deadline=None)
+@given(seed=st.integers(0, 10_000), prune_m=st.integers(1, 12))
+def test_property_interval_contains_exact_gain(metric, seed, prune_m):
+    """On dyadic grids (all sums exact in f32) the phase-1 interval must
+    contain the exact max gain of every row: lo <= G_max <= hi."""
+    x, init = _dyadic_instance(seed, 60, 5, 4)
+    _, mf = _batches(seed, x, 20, "unif", metric)
+    hi, lo, slack, exact, valid = _bounds_and_exact(
+        x, mf.idx, mf.weights, init, metric=metric, debias=False,
+        prune_m=prune_m)
+    hi, lo, exact = (np.asarray(hi), np.asarray(lo), np.asarray(exact))
+    ok = np.asarray(valid)
+    assert (lo[ok] <= exact[ok]).all(), (metric, seed, prune_m)
+    assert (exact[ok] <= hi[ok]).all(), (metric, seed, prune_m)
+    assert float(slack) >= 0.0
+
+
+@settings(deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_survivors_contain_exact_argmax(seed):
+    """The phase-1 survivor rule (UB >= best LB) keeps every row
+    attaining the exact max — the single-sweep core of the exactness
+    proof (non-survivors are *strictly* below the best lower bound)."""
+    x, init = _dyadic_instance(seed, 80, 6, 5)
+    _, mf = _batches(seed, x, 28, "unif", "l1")
+    hi, lo, _, exact, valid = _bounds_and_exact(
+        x, mf.idx, mf.weights, init, metric="l1", debias=False, prune_m=3)
+    hi, lo, exact = (np.asarray(hi), np.asarray(lo), np.asarray(exact))
+    ok = np.asarray(valid)
+    best_lb = lo[ok].max()
+    surv = ok & (hi >= best_lb)
+    gmax = exact[ok].max()
+    attain = ok & (exact == gmax)
+    assert (surv | ~attain).all(), seed     # every argmax row survives
+
+
+@settings(deadline=None)
+@given(seed=st.integers(0, 10_000),
+       survivor_frac=st.sampled_from([0.1, 0.3, 0.6]))
+def test_property_fallback_triggers_exactly_when_predicted(seed,
+                                                           survivor_frac):
+    """The recorded per-sweep fallback flag must equal the documented
+    predicate on the recorded survivor count — no hidden hysteresis."""
+    x, init = _dyadic_instance(seed, 64, 5, 4)
+    _, mf = _batches(seed, x, 24, "unif", "l1")
+    _, stats = pruned.solve_pruned_stats(
+        x, mf.idx, mf.weights, init, metric="l1", backend="ref",
+        survivor_frac=survivor_frac)
+    sw = int(stats.sweeps)
+    surv = np.asarray(stats.survivors)[:sw]
+    fb = np.asarray(stats.fallback)[:sw]
+    np.testing.assert_array_equal(
+        fb, surv > int(survivor_frac * x.shape[0]))
+
+
+def test_stats_accounting():
+    """scored <= survivors on non-fallback sweeps (the ordered scan can
+    only shrink the survivor set), sweep 0 always falls back (vacuous
+    caches), and entries past ``sweeps`` stay zero."""
+    x, init = _dyadic_instance(3, 100, 6, 5)
+    _, mf = _batches(3, x, 30, "unif", "l1")
+    res, stats = pruned.solve_pruned_stats(
+        x, mf.idx, mf.weights, init, metric="l1", backend="ref",
+        max_swaps=50)
+    sw = int(stats.sweeps)
+    assert sw >= int(res.n_swaps)
+    scored = np.asarray(stats.scored)
+    surv = np.asarray(stats.survivors)
+    fb = np.asarray(stats.fallback)
+    assert bool(fb[0])
+    assert (scored[:sw] >= 1).all()
+    nonfb = ~fb[:sw]
+    assert (scored[:sw][nonfb] <= surv[:sw][nonfb]).all()
+    assert (scored[sw:] == 0).all() and (surv[sw:] == 0).all()
+    assert not fb[sw:].any()
+
+
+# ------------------------------------------------ adversarial bounds ----
+
+def test_adversarial_bounds_are_caught():
+    """Mutation check: ``bound_scale=0.0`` collapses every interval to
+    the subsample point estimate — deliberately un-sound — and the
+    differential harness must CATCH the resulting wrong swap on at least
+    one seed. If this test ever fails, the suite has lost its teeth (a
+    broken bound would pass the trajectory comparison)."""
+    caught = 0
+    for seed in range(25):
+        x, init = _instance(seed, 64, 6, 4)
+        _, mf = _batches(seed, x, 24, "unif", "l2")
+        r_mf = solver.solve_matrix_free(x, mf.idx, mf.weights, init,
+                                        metric="l2", backend="ref")
+        r_bad = pruned.solve_pruned(x, mf.idx, mf.weights, init,
+                                    metric="l2", backend="ref", prune_m=1,
+                                    survivor_frac=1.0, bound_scale=0.0)
+        same = (np.array_equal(np.asarray(r_mf.medoid_idx),
+                               np.asarray(r_bad.medoid_idx))
+                and int(r_mf.n_swaps) == int(r_bad.n_swaps))
+        if not same:
+            caught += 1
+    assert caught > 0, ("bound_scale=0.0 never changed a trajectory — "
+                        "the exactness harness cannot detect broken bounds")
+
+
+def test_sound_scale_is_the_default():
+    """bound_scale is a test-only knob: the public entry points run at
+    1.0 (sound) and accept no override through one_batch_pam."""
+    import inspect
+    sig = inspect.signature(solver.one_batch_pam)
+    assert "bound_scale" not in sig.parameters
+    assert inspect.signature(
+        pruned.solve_pruned_stats).parameters["bound_scale"].default == 1.0
+
+
+# ----------------------------------------------------- trace parity -----
+
+def test_trace_pruned_matches_solver_and_peers():
+    """trace_pruned replays solve_pruned bit-for-bit (it drives the
+    literal loop body with the same cache init), and the recorded swap
+    sequence equals the matrix-free and block traces'."""
+    x, init = _instance(5, 96, 6, 5)
+    blk, mf = _batches(5, x, 30, "nniw", "l1")
+    tr_blk = trace.trace_batched(blk.d, init, backend="ref")
+    tr_mf = trace.trace_matrix_free(x, mf.idx, mf.weights, init,
+                                    backend="ref")
+    tr_pr = trace.trace_pruned(x, mf.idx, mf.weights, init, backend="ref")
+    assert tr_pr.swaps == tr_mf.swaps == tr_blk.swaps
+    assert tr_pr.gains == tr_mf.gains == tr_blk.gains
+    res = pruned.solve_pruned(x, mf.idx, mf.weights, init, backend="ref")
+    _assert_same_solve(tr_pr.result, res)
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_pruned_interpret_backend(seed):
+    """The Pallas rowmax kernel (interpret) feeds phase 1 the same
+    bounds the ref oracle computes, so the interpret trajectory equals
+    ref's — and both equal the interpret block path's."""
+    x, init = _dyadic_instance(300 + seed, 64, 5, 4)
+    blk, mf = _batches(300 + seed, x, 24, "unif", "l1",
+                       backend="interpret")
+    r_blk = solver.solve_batched(blk.d, init, backend="interpret")
+    r_ref = pruned.solve_pruned(x, mf.idx, mf.weights, init, metric="l1",
+                                backend="ref")
+    r_int = pruned.solve_pruned(x, mf.idx, mf.weights, init, metric="l1",
+                                backend="interpret")
+    _assert_same_solve(r_int, r_blk, seed)
+    _assert_same_solve(r_int, r_ref, seed)
+
+
+# ------------------------------------------------ pipeline threading ----
+
+def test_one_batch_pam_pruned_matches_matrix_free():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(150, 6)).astype(np.float32))
+    key = jax.random.PRNGKey(2)
+    r_mf, b_mf = solver.one_batch_pam(key, x, 5, strategy="matrix_free",
+                                      backend="ref")
+    r_pr, b_pr = solver.one_batch_pam(key, x, 5, strategy="pruned",
+                                      backend="ref")
+    assert b_pr.d is None
+    np.testing.assert_array_equal(np.asarray(b_mf.idx), np.asarray(b_pr.idx))
+    np.testing.assert_array_equal(np.asarray(b_mf.weights),
+                                  np.asarray(b_pr.weights))
+    _assert_same_solve(r_pr, r_mf)
+
+
+def test_one_batch_pam_pruned_rejects_block_dtype():
+    x = jnp.zeros((20, 3))
+    with pytest.raises(ValueError, match="block_dtype"):
+        solver.one_batch_pam(jax.random.PRNGKey(0), x, 3,
+                             strategy="pruned", block_dtype="bfloat16")
+
+
+def test_restart_lanes_pruned_bitwise():
+    """Pruned restart lanes == matrix-free lanes (same draws, same
+    per-lane swaps, same election); each vmapped lane == the unbatched
+    pruned solver; all lanes share the positional phase-1 subsample."""
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(160, 6)).astype(np.float32))
+    key = jax.random.PRNGKey(6)
+    rr_m, pool_m = restarts_mod.one_batch_pam_restarts(
+        key, x, 4, restarts=3, m=20, backend="ref",
+        strategy="matrix_free")
+    rr_p, pool_p = restarts_mod.one_batch_pam_restarts(
+        key, x, 4, restarts=3, m=20, backend="ref", strategy="pruned")
+    assert pool_p.d is None
+    np.testing.assert_array_equal(np.asarray(pool_m.weights),
+                                  np.asarray(pool_p.weights))
+    np.testing.assert_array_equal(np.asarray(rr_m.results.medoid_idx),
+                                  np.asarray(rr_p.results.medoid_idx))
+    assert int(rr_m.best_restart) == int(rr_p.best_restart)
+    np.testing.assert_array_equal(np.asarray(rr_m.eval_objectives),
+                                  np.asarray(rr_p.eval_objectives))
+    # lane r of the vmapped program == the unbatched pruned solver
+    init = restarts_mod._init_draws(jax.random.split(key)[1], 160, 4, 3)
+    lanes = restarts_mod.solve_restarts_pruned(
+        x, pool_p.idx, pool_p.weights, init, backend="ref")
+    for r in range(3):
+        solo = pruned.solve_pruned(x, pool_p.idx[r], pool_p.weights[r],
+                                   init[r], backend="ref")
+        _assert_same_solve(jax.tree.map(lambda a: a[r], lanes), solo, r)
+    # the phase-1 subsample is positional — static in (m, m'), identical
+    # across lanes by construction, never a per-lane data draw
+    sel = pruned._prune_positions(20, pruned.default_prune_m(20))
+    assert isinstance(sel, np.ndarray)
+    np.testing.assert_array_equal(
+        sel, pruned._prune_positions(20, pruned.default_prune_m(20)))
+    assert (np.diff(sel) > 0).all() and sel[0] == 0 and sel[-1] < 20
+
+
+def test_restarts_pruned_mesh_rejected():
+    with pytest.raises(ValueError, match="mesh"):
+        restarts_mod.one_batch_pam_restarts(
+            jax.random.PRNGKey(0), jnp.zeros((40, 3)), 3, restarts=2,
+            m=10, strategy="pruned", mesh=object())
+
+
+def test_selector_pruned_strategy():
+    rng = np.random.default_rng(9)
+    x = rng.normal(size=(120, 5)).astype(np.float32)
+    a = MedoidSelector(k=4, strategy="matrix_free", backend="ref",
+                       seed=3).fit(x)
+    b = MedoidSelector(k=4, strategy="pruned", backend="ref", seed=3,
+                       prune_m=4, survivor_frac=0.5).fit(x)
+    np.testing.assert_array_equal(a.medoid_indices_, b.medoid_indices_)
+    assert a.n_swaps_ == b.n_swaps_
+    assert np.float32(a.est_objective_) == np.float32(b.est_objective_)
+    # restart path threads the knobs too
+    c = MedoidSelector(k=4, strategy="pruned", backend="ref", seed=3,
+                       restarts=2, m=20).fit(x)
+    d = MedoidSelector(k=4, strategy="matrix_free", backend="ref", seed=3,
+                       restarts=2, m=20).fit(x)
+    np.testing.assert_array_equal(c.medoid_indices_, d.medoid_indices_)
+    assert c.best_restart_ == d.best_restart_

@@ -55,6 +55,20 @@ def compare(baseline: dict[str, dict], fresh: dict[str, dict], *,
                 f"{name}: hbm_bytes_per_sweep changed "
                 f"{b_bytes:.0f} -> {n_bytes:.0f} (dataflow change — "
                 "regenerate the baseline deliberately)")
+        # Same exact-equality contract for the pruned sweep's scoring
+        # count (ISSUE 6): on the dyadic acceptance instance every bound
+        # comparison is exact in f32, so the count is a deterministic
+        # property of the pruning dataflow — any drift means the bounds,
+        # the survivor rule, or the scan-order changed, and must ship
+        # with a regenerated baseline (a *wrong* bound that still picks
+        # the right swaps would otherwise be invisible to the gate).
+        b_sc = base.get("derived", {}).get("candidates_scored_per_sweep")
+        n_sc = new.get("derived", {}).get("candidates_scored_per_sweep")
+        if b_sc is not None and n_sc is not None and b_sc != n_sc:
+            failures.append(
+                f"{name}: candidates_scored_per_sweep changed "
+                f"{b_sc:.1f} -> {n_sc:.1f} (pruning dataflow change — "
+                "regenerate the baseline deliberately)")
     if not ratios and shared:
         failures.append(
             f"no timed records above --min-us={min_us:.0f} to compare — "

@@ -53,6 +53,18 @@ MF_CASES = [
                                             variant="debias",
                                             metric="sqeuclidean")),
 ]
+# Pruned-sweep cases (ISSUE 6): the bound-pruned sweep replayed through
+# trace_pruned. Generation asserts the trajectory equals BOTH the
+# matrix-free and the block trace — the committed fixture pins the
+# three-way cross-path identity, not just the pruned decisions. prune_m
+# is left at its default (m // 8) so the fixture also pins the default
+# phase-1 subsample geometry.
+PRUNED_CASES = [
+    ("pruned_nniw_l1", dict(seed=7, n=128, p=4, k=5, m=32,
+                            variant="nniw", metric="l1")),
+    ("pruned_debias_l2", dict(seed=8, n=64, p=8, k=4, m=32,
+                              variant="debias", metric="l2")),
+]
 
 
 def matrix_instance(spec):
@@ -138,6 +150,30 @@ def main():
             "batched": record(tr),
         })
         print(f"{name}: {cases[-1]['batched']['n_swaps']} matrix-free swaps")
+    for name, spec in PRUNED_CASES:
+        x, batch, init = matrix_free_instance(spec)
+        tr = trace.trace_pruned(x, batch.idx, batch.weights, init,
+                                metric=spec["metric"],
+                                debias=(spec["variant"] == "debias"),
+                                backend="ref")
+        # Three-way cross-path identity, enforced at generation time: the
+        # committed pruned trajectory IS the matrix-free trajectory IS
+        # the block trajectory.
+        mf_tr = trace.trace_matrix_free(x, batch.idx, batch.weights, init,
+                                        metric=spec["metric"],
+                                        debias=(spec["variant"] == "debias"),
+                                        backend="ref")
+        blk = sampling.build_batch(jax.random.PRNGKey(spec["seed"]), x,
+                                   spec["m"], variant=spec["variant"],
+                                   metric=spec["metric"], backend="ref")
+        blk_tr = trace.trace_batched(blk.d, init, backend="ref")
+        assert tr.swaps == mf_tr.swaps == blk_tr.swaps, name
+        cases.append({
+            "name": name, "kind": "pruned", "spec": spec,
+            "init": np.asarray(init).tolist(),
+            "batched": record(tr),
+        })
+        print(f"{name}: {cases[-1]['batched']['n_swaps']} pruned swaps")
     OUT.parent.mkdir(parents=True, exist_ok=True)
     OUT.write_text(json.dumps({"format": 1, "cases": cases}, indent=1)
                    + "\n")
