@@ -290,6 +290,45 @@ def _pruned_scored_stats(lines, n, m, p, k, max_swaps):
         f"prune_m={pruned.default_prune_m(m)}"))
 
 
+def _bench_guard_overhead(lines, n, m, k, reps):
+    """The validate= tiers' cost at a bench shape (DESIGN.md §6).
+    ``off`` IS the historical jitted while_loop solve — the
+    ``one_batch_pam`` default path, untouched, so its record doubles as
+    the zero-overhead claim check; ``cheap`` runs the host-driven
+    runtime loop plus O(m) per-sweep invariant scalars; ``paranoid``
+    adds a full exact (n, k) selection-oracle sweep per sweep. All
+    three must make the identical swaps (asserted in-bench)."""
+    from repro.core import runtime
+    rng = np.random.default_rng(9)
+    p = 16
+    x = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+    key = jax.random.PRNGKey(9)
+
+    def go_off():
+        return solver.one_batch_pam(key, x, k, m=m, backend="ref")[0]
+
+    def go(mode):
+        return runtime.solve_fault_tolerant(
+            key, x, k, m=m, backend="ref", validate=mode)[0]
+
+    res = go_off()
+    iters = int(res.n_swaps) + 1
+    ts = {"off": _time(lambda _=None: go_off().medoid_idx, None,
+                       reps=reps)}
+    for mode in ("cheap", "paranoid"):
+        r = go(mode)
+        assert np.array_equal(np.asarray(r.medoid_idx),
+                              np.asarray(res.medoid_idx)), \
+            f"validate={mode} diverged from the plain solve"
+        ts[mode] = _time(lambda _=None, mode=mode: go(mode).medoid_idx,
+                         None, reps=reps)
+    for mode, t in ts.items():
+        lines.append(csv_line(
+            f"kernel/guards/validate_{mode}", t * 1e6,
+            f"us_per_sweep={t*1e6/iters:.1f} "
+            f"overhead_vs_off={t/ts['off']:.2f}x sweeps={iters}"))
+
+
 def _smoke_select_checks(lines):
     """Interpret-mode kernel sanity on ragged shapes: fail-fast coverage
     for shape/pad/tie regressions, no timing involved."""
@@ -377,6 +416,7 @@ def run(smoke: bool = False) -> list[str]:
     _bench_matrix_free(lines, n, m, p, k, reps)
     _bench_solver_sweep(lines, sweep_n, sweep_m, sweep_k, reps)
     _bench_pruned(lines, sweep_n, sweep_m, p, sweep_k, reps)
+    _bench_guard_overhead(lines, sweep_n, sweep_m, sweep_k, reps)
     # ISSUE 6 acceptance counts, always at the full standard shape (the
     # sweep budget is capped so the record stays cheap enough for CI).
     _pruned_scored_stats(lines, 32_768, 512, 64, 64, max_swaps=10)

@@ -1,1 +1,8 @@
-from .checkpoint import all_steps, latest_step, restore, save  # noqa: F401
+from .checkpoint import (  # noqa: F401
+    all_steps,
+    latest_step,
+    manifest,
+    restore,
+    restore_latest_valid,
+    save,
+)

@@ -19,6 +19,7 @@ import json
 import os
 import re
 import shutil
+import warnings
 
 import jax
 import numpy as np
@@ -92,12 +93,33 @@ def latest_step(root: str) -> int | None:
     return steps[-1] if steps else None
 
 
+def manifest(root: str, step: int | None = None) -> dict:
+    """The manifest dict of checkpoint ``step`` (default: latest) —
+    ``{"step", "extra", "leaves": [{"name", "shape", "dtype"}, ...]}``.
+    Callers use it to build a restore target without knowing the
+    schema up front (selector ``from_checkpoint``)."""
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {root}")
+    with open(os.path.join(root, f"step_{step:08d}", "manifest.json")) as f:
+        return json.load(f)
+
+
 def restore(root: str, target, step: int | None = None, *,
             shardings=None):
     """Restore into the structure of `target` (a pytree of arrays or
     ShapeDtypeStructs). Returns (state, extra). With `shardings` (a
     matching pytree of NamedSharding), leaves are device_put sharded —
-    this is the elastic-rescale path."""
+    this is the elastic-rescale path.
+
+    Robust to schema drift in both directions: every missing /
+    unloadable / shape-mismatched leaf is collected and reported in ONE
+    aggregated ``ValueError`` (a schema migration sees the full diff,
+    not the first casualty), and leaves present on disk but absent from
+    ``target`` are tolerated with a warning (an older reader can open a
+    newer writer's checkpoint).
+    """
     _gc_tmp(root)
     if step is None:
         step = latest_step(root)
@@ -105,21 +127,70 @@ def restore(root: str, target, step: int | None = None, *,
             raise FileNotFoundError(f"no checkpoints under {root}")
     d = os.path.join(root, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
+        man = json.load(f)
+    on_disk = {leaf["name"] for leaf in man.get("leaves", [])}
 
-    flat, treedef = jax.tree_util.tree_flatten_with_path(target)
+    flat, _ = jax.tree_util.tree_flatten_with_path(target)
     shard_flat = (jax.tree_util.tree_flatten(shardings)[0]
                   if shardings is not None else [None] * len(flat))
-    leaves = []
+    leaves, problems, wanted = [], [], set()
     for (path, tgt), shd in zip(flat, shard_flat):
         name = _leafname(path)
-        arr = np.load(os.path.join(d, name + ".npy"))
+        wanted.add(name)
+        fname = os.path.join(d, name + ".npy")
+        if not os.path.exists(fname):
+            problems.append(f"{name}: missing from checkpoint "
+                            f"(manifest {'lists' if name in on_disk else 'omits'} it)")
+            leaves.append(None)
+            continue
+        try:
+            arr = np.load(fname)
+        except Exception as e:
+            problems.append(f"{name}: unreadable ({e})")
+            leaves.append(None)
+            continue
         want_shape = tuple(tgt.shape)
         if tuple(arr.shape) != want_shape:
-            raise ValueError(
-                f"checkpoint leaf {name}: shape {arr.shape} != {want_shape}")
+            problems.append(
+                f"{name}: shape {tuple(arr.shape)} != expected {want_shape}")
+            leaves.append(None)
+            continue
         arr = arr.astype(tgt.dtype)
         leaves.append(jax.device_put(arr, shd) if shd is not None else arr)
+    if problems:
+        raise ValueError(
+            f"checkpoint {d} does not match the restore target "
+            f"({len(problems)} leaf problem(s)):\n  " +
+            "\n  ".join(problems))
+    unknown = sorted(on_disk - wanted)
+    if unknown:
+        warnings.warn(
+            f"checkpoint {d} carries {len(unknown)} leaf(s) unknown to "
+            f"this reader (ignored): {', '.join(unknown)}",
+            UserWarning, stacklevel=2)
     state = jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(target), leaves)
-    return state, manifest.get("extra", {})
+    return state, man.get("extra", {})
+
+
+def restore_latest_valid(root: str, target, *, shardings=None):
+    """Restore the newest checkpoint that actually loads, walking
+    backwards over older steps when the newest is truncated/corrupt
+    (each skip warns with the reason). Returns ``(state, extra, step)``;
+    raises FileNotFoundError when no step restores."""
+    steps = all_steps(root)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {root}")
+    last_err = None
+    for step in reversed(steps):
+        try:
+            state, extra = restore(root, target, step, shardings=shardings)
+            return state, extra, step
+        except Exception as e:
+            last_err = e
+            warnings.warn(
+                f"skipping corrupt checkpoint step {step} under {root}: "
+                f"{e}", UserWarning, stacklevel=2)
+    raise FileNotFoundError(
+        f"no restorable checkpoint under {root} "
+        f"({len(steps)} step(s) present, all failed; last: {last_err})")

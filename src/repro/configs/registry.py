@@ -38,7 +38,7 @@ def cells():
 
     long_500k requires sub-quadratic attention: runs only for ssm/hybrid
     archs (xlstm, jamba); skipped (and recorded) for pure full-attention
-    archs — see DESIGN.md §6.
+    archs — see DESIGN.md §6a.
     """
     out = []
     for arch_id in ARCH_IDS:

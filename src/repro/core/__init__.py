@@ -9,9 +9,13 @@ Public API:
   make_distributed_obp / _e2e / _restarts (distributed.py)
   trace_batched / trace_eager             (trace.py — swap-sequence replay)
   solve_pruned / PrunedStats              (pruned.py — bound-pruned sweep)
+  solve_fault_tolerant, SolveReport       (runtime.py — checkpoint/resume + guards)
+  GuardViolation, check_inputs            (guards.py — validate= tiers)
   baselines.ALL_BASELINES                 (paper competitors, counted)
 """
+from .guards import VALIDATE_MODES, GuardViolation, check_inputs  # noqa: F401
 from .pruned import PrunedStats, solve_pruned, solve_pruned_stats  # noqa: F401
+from .runtime import SolveReport, solve_fault_tolerant  # noqa: F401
 from .restarts import Pool, RestartResult, one_batch_pam_restarts  # noqa: F401
 from .sampling import Batch, VARIANTS, build_batch, default_batch_size  # noqa: F401
 from .selector import MedoidSelector  # noqa: F401

@@ -1,0 +1,278 @@
+"""Runtime invariant guards: the ``validate=`` tiers (DESIGN.md §6).
+
+The solvers' correctness rests on invariants that until now were only
+*tested* (the differential/golden suites) — never *checked at run time*,
+where a NaN row, a bit-flipped bound cache, or a buggy refactor poisons
+a multi-minute solve silently. This module promotes the strongest of
+those test-time properties to production tripwires, in three tiers:
+
+  ``off``      — nothing. The default path is the historical jitted
+      solver, untouched; zero overhead (benchmarks/kernel_bench.py
+      records it, tools/bench_compare.py gates it).
+  ``cheap``    — input guards at the API boundary (non-finite rows via
+      ``jax.experimental.checkify``, empty/degenerate X, k > n, integer
+      dtype — each a clear ``ValueError`` naming the offence) plus O(m)
+      per-sweep state invariants: all state finite, ``d1 <= d2``
+      everywhere (a *bitwise* property of ``_top2``/``_repair_top2`` —
+      both are mins over the same candidate set), the acceptance
+      comparison consistent with the step's own floats, and the batch
+      objective monotone non-increasing on accepted swaps (within an
+      ``m · 2^-22`` relative float slack, the pruned sweep's rounding
+      envelope).
+  ``paranoid`` — cheap, plus an *independent selection oracle* per
+      sweep: the exact (n, k) gain matrix recomputed through the
+      solver's own float chain (``_weighted_rows`` -> ``ops.swap_gain``
+      — the chain the pruned phase-2 rescore and the pre-fusion naive
+      solver use), reduced with the naive first-(i, l) argmax that PR 2
+      pinned bitwise against the fused selection. The sweep's selected
+      (gain, i, l) must match the oracle's bitwise; for the pruned
+      strategy the pre-sweep bound caches must additionally *contain*
+      the exact gains (lo <= G <= hi — the test-only ``bound_scale``
+      harness of DESIGN.md §2c, promoted to a run-time tripwire).
+      Costs one extra full sweep per sweep; that is the contract.
+
+Violations never raise from inside the solve: ``core/runtime.py``
+catches them and walks the degradation ladder (pruned -> matrix-free
+for the sweep, bf16 -> f32 re-score, state re-anchor), recording every
+firing in the SolveReport. A :class:`GuardViolation` escapes only when
+recovery itself fails.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import solver
+from repro.kernels import ops
+from repro.kernels.ref import NEG
+
+VALIDATE_MODES = ("off", "cheap", "paranoid")
+
+# Monotonicity slack per accepted swap, relative to the pre-swap batch
+# objective mass: worst-case f32 summation error is ~m * 2^-24 of the
+# summed magnitudes; 2^-22 leaves the same 4x margin core/pruned.py uses
+# for its interval arithmetic, so a genuine objective *increase* (state
+# corruption, broken repair) can never hide inside rounding.
+_MONO_REL = 2.0 ** -22
+
+
+class GuardViolation(RuntimeError):
+    """An invariant violation the runtime could not recover from.
+
+    ``names`` lists the violated guard(s); ``sweep`` the sweep index the
+    violation fired on (None for API-boundary input guards).
+    """
+
+    def __init__(self, names, sweep=None, detail=""):
+        self.names = tuple(names)
+        self.sweep = sweep
+        where = f" at sweep {sweep}" if sweep is not None else ""
+        msg = f"invariant violation{where}: {', '.join(self.names)}"
+        if detail:
+            msg += f" ({detail})"
+        super().__init__(msg)
+
+
+def check_validate(mode: str) -> str:
+    if mode not in VALIDATE_MODES:
+        raise ValueError(
+            f"unknown validate mode {mode!r}; options {VALIDATE_MODES}")
+    return mode
+
+
+# --------------------------------------------------------------- inputs --
+
+def _finite_scan(x):
+    """checkify-guarded finite scan: fails with the bad-row census."""
+    from jax.experimental import checkify
+    row_ok = jnp.all(jnp.isfinite(x), axis=-1)
+    checkify.check(
+        jnp.all(row_ok),
+        "X contains non-finite values: {nbad} row(s) affected, first at "
+        "row {first}",
+        nbad=jnp.sum(~row_ok), first=jnp.argmin(row_ok))
+
+
+@functools.lru_cache(maxsize=1)
+def _finite_scan_jit():
+    """One checkified jit for the process: ``checkify.checkify`` returns
+    a fresh function object per call, so wrapping it in ``jax.jit``
+    inline would miss the jit cache — and recompile — on every solve."""
+    from jax.experimental import checkify
+    return jax.jit(checkify.checkify(_finite_scan))
+
+
+def check_inputs(x, k: int, *, m: int | None = None,
+                 restarts: int = 1) -> None:
+    """API-boundary input guards (validate != "off"): raise a clear
+    ``ValueError`` before any solver work touches a poisoned input.
+
+    Structural checks (shape, dtype, k vs n) run on the host; the
+    non-finite scan runs as one jitted ``jax.experimental.checkify``
+    pass so the error carries the bad-row census without a host copy of
+    X.
+    """
+    from jax.experimental import checkify
+    if getattr(x, "ndim", None) != 2:
+        raise ValueError(
+            f"X must be a 2-d (n, p) array, got shape "
+            f"{getattr(x, 'shape', None)}")
+    n, p = x.shape
+    if n == 0 or p == 0:
+        raise ValueError(f"X is empty/degenerate: shape {x.shape} — every "
+                         "row needs at least one feature and n >= 1")
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        raise ValueError(
+            f"X has dtype {x.dtype}, expected a floating dtype (cast "
+            "explicitly — distances on integer/bool arrays are a silent "
+            "unit bug)")
+    if not 1 <= k <= n:
+        raise ValueError(f"k must satisfy 1 <= k <= n, got k={k}, n={n}")
+    if m is not None and m < 1:
+        raise ValueError(f"batch size m must be >= 1, got {m}")
+    if restarts >= 1 and restarts * k > n:
+        # every restart draws k distinct medoids from n rows
+        raise ValueError(
+            f"k={k} medoids cannot be drawn from n={n} rows "
+            f"(restarts={restarts})")
+    err = _finite_scan_jit()(x)[0]
+    try:
+        err.throw()
+    except checkify.JaxRuntimeError as e:
+        raise ValueError(str(e)) from None
+
+
+# ---------------------------------------------------- cheap sweep tier --
+
+def cheap_stats(prev_state, new_state, improved, best, eps, mono_scale):
+    """Per-sweep invariant scalars, evaluated on-device (jit/vmap this).
+
+    Returns four bools: ``(finite, order, accept, mono)`` — True means
+    the invariant holds. ``prev_state`` is the state the sweep scored
+    against, ``new_state`` the candidate post-swap state, ``improved``/
+    ``best`` the step's own acceptance outputs. ``mono_scale`` scales
+    the monotonicity slack (1 for steepest-descent steps; the eager
+    pass uses 1 + accepted swaps, one rounding envelope per swap).
+
+    The acceptance check re-runs the step's comparison on the identical
+    floats (``jnp.sum(prev.d1)`` is the same array through the same
+    reduction), so it can only fire on corruption, never on rounding.
+    """
+    m = prev_state.d1.shape[0]
+    prev_sum = jnp.sum(prev_state.d1)
+    new_sum = jnp.sum(new_state.d1)
+    finite = (jnp.isfinite(prev_sum) & jnp.isfinite(new_sum)
+              & jnp.all(jnp.isfinite(new_state.d2))
+              & jnp.all(jnp.isfinite(new_state.med_rows)))
+    order = (jnp.all(prev_state.d1 <= prev_state.d2)
+             & jnp.all(new_state.d1 <= new_state.d2))
+    accept = jnp.where(improved, best > eps * prev_sum, True)
+    slack = jnp.abs(prev_sum) * (m * _MONO_REL) * mono_scale
+    mono = jnp.where(improved, new_sum <= prev_sum + slack, True)
+    return finite, order, accept, mono
+
+
+def cheap_stats_eager(prev_state, new_state, swapped):
+    """The eager (pass-level) cheap tier: one ``_eager_pass`` applies up
+    to n swaps before control returns to the host, so the monotonicity
+    slack scales with the accepted swap count (``new.t - prev.t``) and
+    there is no single (best, i, l) to re-check — the acceptance flag
+    comes back True vacuously. Same (finite, order, accept, mono) shape
+    as :func:`cheap_stats` so the runtime shares one recovery path.
+    """
+    m = prev_state.d1.shape[0]
+    prev_sum = jnp.sum(prev_state.d1)
+    new_sum = jnp.sum(new_state.d1)
+    finite = (jnp.isfinite(prev_sum) & jnp.isfinite(new_sum)
+              & jnp.all(jnp.isfinite(new_state.d2))
+              & jnp.all(jnp.isfinite(new_state.med_rows)))
+    order = (jnp.all(prev_state.d1 <= prev_state.d2)
+             & jnp.all(new_state.d1 <= new_state.d2))
+    nswaps = (new_state.t - prev_state.t).astype(jnp.float32)
+    slack = jnp.abs(prev_sum) * (m * _MONO_REL) * (1.0 + nswaps)
+    mono = jnp.where(swapped, new_sum <= prev_sum + slack, True)
+    return finite, order, jnp.bool_(True), mono
+
+
+_CHEAP_NAMES = ("state_nonfinite", "top2_order", "acceptance_gain",
+                "objective_increase")
+
+
+def cheap_names(flags) -> list[str]:
+    """Host-side: the violated guard names from a (finite, order, accept,
+    mono) quadruple (scalars or, per restart lane, picked already)."""
+    return [name for ok, name in zip(flags, _CHEAP_NAMES) if not bool(ok)]
+
+
+# ------------------------------------------------------- paranoid tier --
+
+def exact_gains_matrix_free(xp, b, w, batch_idx, state, *, metric: str,
+                            debias: bool, backend: str,
+                            chunk: int) -> jnp.ndarray:
+    """The exact (n, k) gain matrix w.r.t. ``state``, recomputed through
+    the solver's own float chain (``solver._weighted_rows`` ->
+    ``ops.swap_gain`` — the chain the pruned phase-2 rescore uses, row
+    chunks and all, so per-row floats are bitwise the sweep's own).
+    Medoid rows are *not* masked here; :func:`exact_select` masks them.
+    """
+    n = xp.shape[0]
+    k = state.medoid_idx.shape[0]
+    nh = jax.nn.one_hot(state.near, k, dtype=jnp.float32)
+    nchunks = -(-n // chunk)
+
+    def one(c):
+        cid = c * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        ok = cid < n
+        safe = jnp.minimum(cid, n - 1)
+        # The padding sentinel n never matches a batch index, so
+        # duplicated gather rows cannot pick up a spurious debias LARGE
+        # (same discipline as pruned._pruned_step's phase 2).
+        d_rows = solver._weighted_rows(
+            xp[safe], b, w, batch_idx, jnp.where(ok, cid, n),
+            metric=metric, debias=debias, backend=backend)
+        g = ops.swap_gain(d_rows, state.d1, state.d2, nh, backend=backend)
+        return jnp.where(ok[:, None], g, NEG)
+
+    gains = jax.lax.map(one, jnp.arange(nchunks, dtype=jnp.int32))
+    return gains.reshape(nchunks * chunk, k)[:n]
+
+
+def exact_gains_block(d, state, *, backend: str) -> jnp.ndarray:
+    """The exact (n, k) gain matrix from a materialised block — the
+    pre-fusion naive solver's scoring pass (``ops.swap_gain``)."""
+    k = state.medoid_idx.shape[0]
+    nh = jax.nn.one_hot(state.near, k, dtype=jnp.float32)
+    return ops.swap_gain(d, state.d1, state.d2, nh, backend=backend)
+
+
+def exact_select(gains, medoid_idx):
+    """The naive selection reduce over an exact gain matrix: flat argmax
+    with current medoids masked to NEG — first-(i, l) on ties, which
+    PR 2 pinned bitwise against the fused ``swap_select`` and PR 5
+    against the pruned branch-and-bound scan. Returns (best, i, l)."""
+    k = gains.shape[1]
+    gains = gains.at[medoid_idx].set(NEG)
+    flat = jnp.argmax(gains)
+    return (gains.reshape(-1)[flat], (flat // k).astype(jnp.int32),
+            (flat % k).astype(jnp.int32))
+
+
+def selection_mismatch(best, i, l, o_best, o_i, o_l) -> bool:
+    """Host-side bitwise compare of a sweep's selection against the
+    oracle's. Gains compare as raw f32 bit patterns (NaN-proof)."""
+    import numpy as np
+    return (np.float32(best).tobytes() != np.float32(o_best).tobytes()
+            or int(i) != int(o_i) or int(l) != int(o_l))
+
+
+def bound_containment(gains, ub, lb, medoid_idx):
+    """Pruned-cache containment (DESIGN.md §2c promoted to run time):
+    per-slot ``lb <= G <= ub`` on every non-medoid row. Returns
+    ``(ok, n_bad, first_bad_row)`` — evaluate on-device, pull scalars.
+    """
+    n = gains.shape[0]
+    valid = jnp.ones((n,), jnp.bool_).at[medoid_idx].set(False)
+    row_ok = jnp.all((lb <= gains) & (gains <= ub), axis=1) | ~valid
+    return jnp.all(row_ok), jnp.sum(~row_ok), jnp.argmin(row_ok)

@@ -1,0 +1,895 @@
+"""Fault-tolerant solve runtime: checkpoint/resume + guard ladder
+(DESIGN.md §6).
+
+``one_batch_pam`` runs each local search as one opaque
+``lax.while_loop``: fast, but a preempted solve loses everything, and an
+invariant violation (poisoned input, corrupted bound cache, a bad bf16
+sweep) surfaces — if at all — as a silently wrong answer minutes later.
+This module re-hosts the *identical* loop bodies (``solver._fused_step``
+/ ``_matrix_free_step`` / ``pruned._pruned_step`` / ``_eager_pass`` —
+the same jitted step functions ``core/trace.py`` already proves replay
+the while_loop solvers bit for bit) in a host-driven sweep loop that
+can, between sweeps:
+
+  * **checkpoint** the full solver state through the ``repro.checkpoint``
+    atomic-rename machinery — medoids, the (k, m)/top-2 state, the
+    pruned (n, k) bound caches, per-lane restart states, the swap count
+    — every ``ckpt_every`` sweeps. The batch/pool is *not* stored: it is
+    rebuilt bitwise from the run's PRNG key (``sampling.build_batch`` /
+    ``restarts.build_pool`` are deterministic in (key, shape, config)),
+    so a checkpoint is O(km + nk·pruned) on disk, and ``resume="auto"``
+    continues a SIGKILL'd solve with a bitwise-identical remaining
+    trajectory (tests/helpers/kill_resume_check.py kills at every sweep
+    and diffs the logs).
+  * **guard** the sweep with the ``validate=`` tiers (core/guards.py)
+    and, on a violation, walk the degradation ladder instead of
+    crashing: ``pruned`` falls back to the matrix-free sweep for the
+    offending sweep (bound caches reset — the selection chain *is* the
+    exactness oracle, so the trajectory stays bitwise-correct); bf16
+    blocks escalate the offending sweep to an f32 re-score on the
+    deterministically rebuilt f32 block; anything else re-anchors the
+    top-2 state from the medoid set (``_top2`` is value-exact with the
+    incremental repair, so re-anchoring preserves the swap trajectory
+    bitwise) and redoes the sweep. A violation that survives its
+    recovery raises :class:`guards.GuardViolation`.
+  * **report** everything in a structured :class:`SolveReport` — sweeps,
+    swaps, per-sweep wall times (``monitoring.StepTimer``), every
+    checkpoint write, fallback, and violation.
+
+Restart lanes (R > 1) run through the vmapped step functions with the
+per-lane freeze/accept semantics of the batched ``while_loop``
+(inactive lanes compute and discard, exactly like vmap's select), so
+the R-lane trajectory — and its checkpoints — match
+``one_batch_pam(restarts=R)`` lane for lane, bit for bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import guards, sampling, solver
+from repro.core import trace as trace_mod
+from repro.monitoring import StepTimer
+
+_CKPT_VERSION = 1
+
+
+# ----------------------------------------------------------- reporting --
+
+@dataclasses.dataclass
+class SolveReport:
+    """Structured account of a fault-tolerant solve.
+
+    ``sweep_log`` has one entry per executed sweep: ``{"sweep", "accepted",
+    "i", "l", "gain"}`` (per-lane lists when ``restarts > 1``, plus
+    ``"active"``) — gains are f32 values (exact through JSON: every f32
+    is a double). ``fallbacks``/``violations`` record the degradation
+    ladder's firings; ``checkpoint_writes`` the persisted steps;
+    ``timer`` the per-sweep wall times (``timer.summary()`` has
+    p50/p95/max and the straggler count); ``election`` the restart
+    winner (None for a single restart). ``resumed_from`` is the sweep a
+    ``resume="auto"`` run continued from (None = fresh start).
+    """
+    strategy: str = "batched"
+    validate: str = "off"
+    restarts: int = 1
+    sweeps: int = 0
+    swaps: int = 0
+    converged: bool = False
+    resumed_from: int | None = None
+    checkpoint_writes: list = dataclasses.field(default_factory=list)
+    fallbacks: list = dataclasses.field(default_factory=list)
+    violations: list = dataclasses.field(default_factory=list)
+    sweep_log: list = dataclasses.field(default_factory=list)
+    timer: StepTimer = dataclasses.field(default_factory=StepTimer)
+    election: dict | None = None
+
+    def to_dict(self) -> dict:
+        """JSON-safe snapshot (rides checkpoint extras; the timer is
+        summarised, not persisted — wall times don't survive a kill)."""
+        d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)
+             if f.name != "timer"}
+        d["timer_summary"] = self.timer.summary()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SolveReport":
+        kw = {f.name: d[f.name] for f in dataclasses.fields(cls)
+              if f.name != "timer" and f.name in d}
+        return cls(**kw)
+
+
+# ------------------------------------------------- jitted step plumbing --
+# Single-restart steps reuse core/trace.py's lru-cached jits (the proof
+# that host-replay == while_loop rides on those exact functions); the
+# vmapped variants below are their R-lane twins, in_axes matching the
+# solve_restarts* wrappers (X/pool broadcast, lane state batched).
+
+@functools.lru_cache(maxsize=64)
+def _jit_fused_step_v(eps: float, backend: str):
+    return jax.jit(jax.vmap(functools.partial(
+        solver._fused_step, eps=eps, backend=backend)))
+
+
+@functools.lru_cache(maxsize=64)
+def _jit_mf_step_v(metric: str, debias: bool, eps: float, backend: str,
+                   chunk_size):
+    return jax.jit(jax.vmap(functools.partial(
+        solver._matrix_free_step, metric=metric, debias=debias, eps=eps,
+        backend=backend, chunk_size=chunk_size),
+        in_axes=(None, 0, 0, 0, 0)))
+
+
+@functools.lru_cache(maxsize=64)
+def _jit_pruned_step_v(metric: str, debias: bool, eps: float, backend: str,
+                       chunk_size, prune_m: int, survivor_frac: float):
+    from repro.core import pruned
+    return jax.jit(jax.vmap(functools.partial(
+        pruned._pruned_step, metric=metric, debias=debias, eps=eps,
+        backend=backend, chunk_size=chunk_size, prune_m=prune_m,
+        survivor_frac=survivor_frac),
+        in_axes=(None, 0, 0, 0, 0, 0, 0)))
+
+
+@functools.lru_cache(maxsize=8)
+def _jit_init_state_v():
+    return jax.jit(jax.vmap(solver._init_state))
+
+
+@functools.lru_cache(maxsize=64)
+def _jit_init_state_mf(metric: str, debias: bool, backend: str,
+                       vmapped: bool):
+    f = functools.partial(solver._init_state_matrix_free, metric=metric,
+                          debias=debias, backend=backend)
+    if vmapped:
+        f = jax.vmap(f, in_axes=(None, 0, 0, 0, 0))
+    return jax.jit(f)
+
+
+@functools.lru_cache(maxsize=8)
+def _jit_reanchor_block(vmapped: bool):
+    def f(d, state):
+        med_rows = d[state.medoid_idx].astype(jnp.float32)
+        d1, d2, near, near2 = solver._top2(med_rows)
+        return state._replace(med_rows=med_rows, d1=d1, d2=d2,
+                              near=near, near2=near2)
+    return jax.jit(jax.vmap(f) if vmapped else f)
+
+
+@functools.lru_cache(maxsize=64)
+def _jit_reanchor_mf(metric: str, debias: bool, backend: str,
+                     vmapped: bool):
+    def f(xp, b, w, bidx, state):
+        med_rows = solver._weighted_rows(
+            xp[state.medoid_idx], b, w, bidx, state.medoid_idx,
+            metric=metric, debias=debias, backend=backend)
+        d1, d2, near, near2 = solver._top2(med_rows)
+        return state._replace(med_rows=med_rows, d1=d1, d2=d2,
+                              near=near, near2=near2)
+    if vmapped:
+        return jax.jit(jax.vmap(f, in_axes=(None, 0, 0, 0, 0)))
+    return jax.jit(f)
+
+
+@functools.lru_cache(maxsize=8)
+def _jit_cheap(vmapped: bool):
+    f = guards.cheap_stats
+    if vmapped:
+        f = jax.vmap(f, in_axes=(0, 0, 0, 0, None, None))
+    return jax.jit(f)
+
+
+@functools.lru_cache(maxsize=8)
+def _jit_cheap_eager():
+    return jax.jit(guards.cheap_stats_eager)
+
+
+@functools.lru_cache(maxsize=8)
+def _jit_oracle_block(backend: str, vmapped: bool):
+    def f(d, state):
+        g = guards.exact_gains_block(d, state, backend=backend)
+        return guards.exact_select(g, state.medoid_idx)
+    return jax.jit(jax.vmap(f) if vmapped else f)
+
+
+@functools.lru_cache(maxsize=64)
+def _jit_oracle_mf(metric: str, debias: bool, backend: str, chunk: int,
+                   vmapped: bool):
+    def f(xp, b, w, bidx, state):
+        g = guards.exact_gains_matrix_free(
+            xp, b, w, bidx, state, metric=metric, debias=debias,
+            backend=backend, chunk=chunk)
+        return (*guards.exact_select(g, state.medoid_idx), g)
+    if vmapped:
+        return jax.jit(jax.vmap(f, in_axes=(None, 0, 0, 0, 0)))
+    return jax.jit(f)
+
+
+def _lane_where(mask, a, b):
+    """Per-lane select with trailing-axis broadcast; a pure bit-move."""
+    m = jnp.asarray(mask)
+    return jnp.where(m.reshape(m.shape + (1,) * (jnp.ndim(a) - m.ndim)),
+                     a, b)
+
+
+def _sub_lanes(mask, new, old):
+    return jax.tree.map(lambda a, b: _lane_where(mask, a, b), new, old)
+
+
+# ------------------------------------------------------- checkpointing --
+
+def _state_leaves(state, ub=None, lb=None) -> dict:
+    d = {"medoid_idx": state.medoid_idx, "med_rows": state.med_rows,
+         "d1": state.d1, "d2": state.d2, "near": state.near,
+         "near2": state.near2, "t": state.t, "done": state.done}
+    if ub is not None:
+        d["ub"], d["lb"] = ub, lb
+    return d
+
+
+def _state_from_leaves(leaves: dict):
+    state = solver._State(*(jnp.asarray(leaves[f]) for f in
+                            solver._State._fields))
+    ub = jnp.asarray(leaves["ub"]) if "ub" in leaves else None
+    lb = jnp.asarray(leaves["lb"]) if "lb" in leaves else None
+    return state, ub, lb
+
+
+def _key_bits(key) -> list[int]:
+    try:
+        data = jax.random.key_data(key)
+    except TypeError:
+        data = key
+    return np.asarray(data).astype(np.uint32).reshape(-1).tolist()
+
+
+def _fingerprint(key, *, n, p, k, m, variant, metric, strategy, max_swaps,
+                 eps, backend, chunk_size, block_dtype, restarts, eval_m,
+                 prune_m, survivor_frac) -> dict:
+    """Everything the remaining trajectory depends on. ``validate`` /
+    ``ckpt_every`` / ``keep`` are deliberately absent: they change what
+    is checked or written, never the floats, so a resume may tighten or
+    relax them."""
+    return {"version": _CKPT_VERSION, "key": _key_bits(key), "n": int(n),
+            "p": int(p), "k": int(k), "m": int(m), "variant": variant,
+            "metric": metric, "strategy": strategy,
+            "max_swaps": int(max_swaps), "eps": float(eps),
+            "backend": backend, "chunk_size": chunk_size,
+            "block_dtype": solver._dtype_name(block_dtype),
+            "restarts": int(restarts),
+            "eval_m": None if eval_m is None else int(eval_m),
+            "prune_m": None if prune_m is None else int(prune_m),
+            "survivor_frac": float(survivor_frac)}
+
+
+def _check_fingerprint(saved: dict, current: dict) -> None:
+    keys = sorted(set(saved) | set(current))
+    diffs = [f"{kk}: checkpoint has {saved.get(kk)!r}, "
+             f"this run has {current.get(kk)!r}"
+             for kk in keys if saved.get(kk) != current.get(kk)]
+    if diffs:
+        raise ValueError(
+            "cannot resume: checkpoint was written by a run with a "
+            "different configuration —\n  " + "\n  ".join(diffs) +
+            "\nPass resume='never' (or a fresh checkpoint_dir) to start "
+            "over.")
+
+
+class _Checkpointer:
+    """Sweep-granular persistence through ``repro.checkpoint``."""
+
+    def __init__(self, root: str | None, *, every: int, keep: int,
+                 fingerprint: dict):
+        self.root, self.every, self.keep = root, max(1, every), keep
+        self.fingerprint = fingerprint
+        self._last = None
+
+    def maybe_save(self, done_sweeps: int, leaves: dict,
+                   report: SolveReport, *, final: bool = False) -> None:
+        if self.root is None or done_sweeps == self._last:
+            return
+        if not final and done_sweeps % self.every != 0:
+            return
+        from repro import checkpoint as ckpt
+        extra = {"version": _CKPT_VERSION, "sweep": done_sweeps,
+                 "fingerprint": self.fingerprint,
+                 "report": report.to_dict()}
+        ckpt.save(self.root, done_sweeps, leaves, extra=extra,
+                  keep=self.keep)
+        self._last = done_sweeps
+        report.checkpoint_writes.append(done_sweeps)
+
+    def try_resume(self, template: dict):
+        """-> (leaves, sweep, report) from the newest valid checkpoint,
+        or None when the directory holds none (or none restores — a
+        fully corrupt directory warns and starts fresh rather than
+        failing an otherwise-runnable solve)."""
+        import os
+        import warnings
+
+        from repro import checkpoint as ckpt
+        if self.root is None or not os.path.isdir(self.root):
+            return None
+        steps = ckpt.all_steps(self.root)
+        if not steps:
+            return None
+        # Config mismatch must surface as the clear fingerprint error,
+        # not masquerade as corruption: check it from the newest
+        # readable manifest BEFORE any leaf touches the shape check.
+        for step in reversed(steps):
+            try:
+                saved = ckpt.manifest(self.root, step).get("extra", {})
+            except Exception:
+                continue
+            _check_fingerprint(saved.get("fingerprint", {}),
+                               self.fingerprint)
+            break
+        try:
+            leaves, extra, step = ckpt.restore_latest_valid(self.root,
+                                                            template)
+        except FileNotFoundError as e:
+            warnings.warn(
+                f"resume='auto': no restorable checkpoint under "
+                f"{self.root} ({e}); starting fresh", UserWarning,
+                stacklevel=2)
+            return None
+        report = SolveReport.from_dict(extra.get("report", {}))
+        report.timer = StepTimer()
+        self._last = step
+        return leaves, int(extra["sweep"]), report
+
+
+# ------------------------------------------------------------ the loop --
+
+def solve_fault_tolerant(
+    key: jax.Array,
+    x: jnp.ndarray,
+    k: int,
+    *,
+    m: int | None = None,
+    variant: str = "nniw",
+    metric: str = "l1",
+    strategy: str = "batched",
+    max_swaps: int = 500,
+    eps: float = 0.0,
+    backend: str = "auto",
+    chunk_size: int | None = None,
+    block_dtype: str | jnp.dtype | None = None,
+    restarts: int = 1,
+    eval_m: int | None = None,
+    prune_m: int | None = None,
+    survivor_frac: float = 0.5,
+    validate: str = "off",
+    checkpoint_dir: str | None = None,
+    ckpt_every: int = 1,
+    resume: str = "auto",
+    keep: int = 3,
+    _fault_hook=None,
+) -> tuple[solver.SolveResult, sampling.Batch, SolveReport]:
+    """Fault-tolerant OneBatchPAM: ``one_batch_pam``'s trajectory, bit
+    for bit, plus checkpoint/resume, invariant guards, and degradation
+    (module docstring). Returns ``(result, batch, report)``.
+
+    ``_fault_hook(run)`` is the test seam: called at the top of every
+    sweep with a mutable ``{"sweep", "state", "ub", "lb"}`` dict whose
+    (possibly mutated) entries are read back — tests/faults.py injects
+    corruption and kills through it. Exceptions it raises propagate
+    (completed sweeps are already checkpointed).
+    """
+    guards.check_validate(validate)
+    if resume not in ("auto", "never"):
+        raise ValueError(f"resume must be 'auto' or 'never', got {resume!r}")
+    if strategy not in ("batched", "matrix_free", "pruned", "eager"):
+        raise ValueError(f"unknown strategy {strategy!r}")
+    x = jnp.asarray(x)
+    if validate != "off":
+        guards.check_inputs(x, k, m=m, restarts=restarts)
+    n, p = x.shape
+    user_m = m
+    m = m if m is not None else sampling.default_batch_size(n, k)
+    m = min(m, n)
+    if restarts < 1:
+        raise ValueError(f"restarts must be >= 1, got {restarts}")
+    block_free = strategy in ("matrix_free", "pruned")
+    if block_free and block_dtype is not None:
+        raise ValueError(
+            f"strategy={strategy!r} builds no block; block_dtype does not "
+            "apply (tiles are recomputed in f32 on chip, DESIGN.md §2b)")
+    if restarts > 1 and strategy == "eager":
+        raise ValueError(
+            "restarts > 1 supports strategy='batched', 'matrix_free' "
+            "or 'pruned'")
+    debias = variant == "debias"
+    if strategy == "pruned" and prune_m is None:
+        from repro.core import pruned as pruned_mod
+        prune_m_eff = pruned_mod.default_prune_m(
+            solver._clamp_pool_m(n, restarts, m, user_m=None)
+            if restarts > 1 else m)
+    else:
+        prune_m_eff = prune_m
+
+    if restarts > 1:
+        return _solve_restarts(
+            key, x, k, m=m, user_m=user_m, variant=variant, metric=metric,
+            strategy=strategy, max_swaps=max_swaps, eps=eps,
+            backend=backend, chunk_size=chunk_size, block_dtype=block_dtype,
+            restarts=restarts, eval_m=eval_m, prune_m=prune_m_eff,
+            survivor_frac=survivor_frac, validate=validate,
+            checkpoint_dir=checkpoint_dir, ckpt_every=ckpt_every,
+            resume=resume, keep=keep, fault_hook=_fault_hook)
+    return _solve_single(
+        key, x, k, m=m, variant=variant, metric=metric, strategy=strategy,
+        max_swaps=max_swaps, eps=eps, backend=backend,
+        chunk_size=chunk_size, block_dtype=block_dtype, eval_m=eval_m,
+        prune_m=prune_m_eff, survivor_frac=survivor_frac,
+        validate=validate, checkpoint_dir=checkpoint_dir,
+        ckpt_every=ckpt_every, resume=resume, keep=keep,
+        fault_hook=_fault_hook)
+
+
+def _hook(fault_hook, sweep, state, ub, lb):
+    if fault_hook is None:
+        return state, ub, lb
+    run: dict[str, Any] = {"sweep": sweep, "state": state, "ub": ub,
+                           "lb": lb}
+    fault_hook(run)
+    return run["state"], run["ub"], run["lb"]
+
+
+def _record_violation(report, sweep, names, *, lanes=None, detail=""):
+    entry = {"sweep": int(sweep), "guards": list(names)}
+    if lanes is not None:
+        entry["lanes"] = [int(r) for r in lanes]
+    if detail:
+        entry["detail"] = detail
+    report.violations.append(entry)
+
+
+def _record_fallback(report, sweep, kind, *, lanes=None):
+    entry = {"sweep": int(sweep), "kind": kind}
+    if lanes is not None:
+        entry["lanes"] = [int(r) for r in lanes]
+    report.fallbacks.append(entry)
+
+
+# --------------------------------------------------------- one restart --
+
+def _solve_single(key, x, k, *, m, variant, metric, strategy, max_swaps,
+                  eps, backend, chunk_size, block_dtype, eval_m, prune_m,
+                  survivor_frac, validate, checkpoint_dir, ckpt_every,
+                  resume, keep, fault_hook):
+    from repro.core import pruned as pruned_mod
+    n, p = x.shape
+    debias = variant == "debias"
+    key_b, key_i = jax.random.split(key)
+    init_idx = jax.random.choice(key_i, n, shape=(k,), replace=False)
+    batch = sampling.build_batch(
+        key_b, x, m, variant=variant, metric=metric, backend=backend,
+        chunk_size=chunk_size, block_dtype=block_dtype,
+        materialize=strategy not in ("matrix_free", "pruned"))
+
+    pruned_caches = strategy == "pruned"
+    if strategy in ("matrix_free", "pruned"):
+        xp = solver._prepared(x, metric)
+        b = xp[batch.idx]
+        w = batch.weights.astype(jnp.float32)
+        bidx = batch.idx.astype(jnp.int32)
+        state = _jit_init_state_mf(metric, debias, backend, False)(
+            xp, b, w, bidx, init_idx)
+    else:
+        d = batch.d
+        state = solver._init_state(d, init_idx)
+    ub = jnp.full((n, k), pruned_mod.BIG) if pruned_caches else None
+    lb = jnp.full((n, k), -pruned_mod.BIG) if pruned_caches else None
+
+    fp = _fingerprint(key, n=n, p=p, k=k, m=m, variant=variant,
+                      metric=metric, strategy=strategy, max_swaps=max_swaps,
+                      eps=eps, backend=backend, chunk_size=chunk_size,
+                      block_dtype=block_dtype, restarts=1, eval_m=eval_m,
+                      prune_m=prune_m, survivor_frac=survivor_frac)
+    ckpt = _Checkpointer(checkpoint_dir, every=ckpt_every, keep=keep,
+                         fingerprint=fp)
+    report = SolveReport(strategy=strategy, validate=validate, restarts=1)
+    sweep = 0
+    if resume == "auto":
+        got = ckpt.try_resume(_state_leaves(state, ub, lb))
+        if got is not None:
+            leaves, sweep, report = got
+            state, ub, lb = _state_from_leaves(leaves)
+            report.resumed_from = sweep
+            report.strategy, report.validate = strategy, validate
+
+    cheap = _jit_cheap(False)
+    eps_a = jnp.float32(eps)
+
+    if strategy == "eager":
+        _run_eager(d, state, report=report, ckpt=ckpt, sweep=sweep,
+                   max_swaps=max_swaps, eps=eps, validate=validate,
+                   fault_hook=fault_hook)
+        # state was rebound inside; re-fetch the loop's final state
+        state = report._eager_final  # set by _run_eager
+        del report._eager_final
+        res = solver.SolveResult(state.medoid_idx, state.t,
+                                 jnp.mean(state.d1), state.done)
+        report.sweeps = len(report.sweep_log)
+        report.swaps = int(state.t)
+        report.converged = bool(state.done)
+        return res, batch, report
+
+    if strategy == "batched":
+        step = trace_mod._jit_fused_step(eps, backend)
+    elif strategy == "matrix_free":
+        step = trace_mod._jit_matrix_free_step(metric, debias, eps,
+                                               backend, chunk_size)
+    else:
+        step = trace_mod._jit_pruned_step(metric, debias, eps, backend,
+                                          chunk_size, prune_m,
+                                          survivor_frac, 1.0)
+    mf_step = (trace_mod._jit_matrix_free_step(metric, debias, eps,
+                                               backend, chunk_size)
+               if pruned_caches else None)
+    d32 = None  # lazily rebuilt f32 block for the bf16 escalation
+
+    def run_step(st, u, lo):
+        if strategy == "batched":
+            out = step(d, st)
+            return (*out, u, lo)
+        if strategy == "matrix_free":
+            out = step(xp, b, w, bidx, st)
+            return (*out, u, lo)
+        new_state, ub_n, lb_n, improved, best, i, l, _ = step(
+            xp, b, w, bidx, st, u, lo)
+        return new_state, improved, best, i, l, ub_n, lb_n
+
+    def run_oracle(st):
+        if strategy == "batched":
+            o_best, o_i, o_l = _jit_oracle_block(backend, False)(d, st)
+            return o_best, o_i, o_l, None
+        return _jit_oracle_mf(metric, debias, backend,
+                              pruned_mod._chunk_q(n), False)(
+            xp, b, w, bidx, st)
+
+    while not bool(state.done) and int(state.t) < max_swaps:
+        state, ub, lb = _hook(fault_hook, sweep, state, ub, lb)
+        t0 = time.perf_counter()
+        new_state, improved, best, i, l, ub_n, lb_n = run_step(state, ub, lb)
+
+        if validate != "off":
+            names = guards.cheap_names(cheap(state, new_state, improved,
+                                             best, eps_a, 1.0))
+            detail = ""
+            if validate == "paranoid" and not names:
+                o_best, o_i, o_l, g = run_oracle(state)
+                if pruned_caches:
+                    ok, nbad, row = guards.bound_containment(
+                        g, ub, lb, state.medoid_idx)
+                    if not bool(ok):
+                        names.append("bound_containment")
+                        detail = (f"{int(nbad)} row(s) outside the cache "
+                                  f"interval, first at row {int(row)}")
+                if guards.selection_mismatch(best, i, l, o_best, o_i, o_l):
+                    names.append("selection_mismatch")
+            if names:
+                _record_violation(report, sweep, names, detail=detail)
+                # ---- degradation ladder ----------------------------
+                if pruned_caches:
+                    # The matrix-free sweep IS the exactness oracle:
+                    # same selection floats, no caches to trust.
+                    new_state, improved, best, i, l = mf_step(
+                        xp, b, w, bidx, state)
+                    ub_n = jnp.full((n, k), pruned_mod.BIG)
+                    lb_n = jnp.full((n, k), -pruned_mod.BIG)
+                    _record_fallback(report, sweep, "pruned->matrix_free")
+                elif (strategy == "batched"
+                      and block_dtype is not None):
+                    if d32 is None:
+                        d32 = sampling.build_batch(
+                            key_b, x, m, variant=variant, metric=metric,
+                            backend=backend, chunk_size=chunk_size,
+                            block_dtype=None).d
+                    state = _jit_reanchor_block(False)(d32, state)
+                    new_state, improved, best, i, l = \
+                        trace_mod._jit_fused_step(eps, backend)(d32, state)
+                    _record_fallback(report, sweep, "bf16->f32_rescore")
+                else:
+                    if strategy == "batched":
+                        state = _jit_reanchor_block(False)(d, state)
+                    else:
+                        state = _jit_reanchor_mf(metric, debias, backend,
+                                                 False)(xp, b, w, bidx,
+                                                        state)
+                    new_state, improved, best, i, l, ub_n, lb_n = \
+                        run_step(state, ub, lb)
+                    _record_fallback(report, sweep, "state_reanchor")
+                still = guards.cheap_names(cheap(state, new_state,
+                                                 improved, best, eps_a,
+                                                 1.0))
+                if still:
+                    raise guards.GuardViolation(still, sweep=sweep,
+                                                detail="after recovery")
+        report.timer.record(time.perf_counter() - t0)
+
+        acc = bool(improved)
+        report.sweep_log.append({"sweep": sweep, "accepted": acc,
+                                 "i": int(i), "l": int(l),
+                                 "gain": float(best)})
+        if acc:
+            state, ub, lb = new_state, ub_n, lb_n
+        else:
+            state = state._replace(done=jnp.bool_(True))
+        sweep += 1
+        ckpt.maybe_save(sweep, _state_leaves(state, ub, lb), report)
+
+    ckpt.maybe_save(sweep, _state_leaves(state, ub, lb), report,
+                    final=True)
+    res = solver.SolveResult(state.medoid_idx, state.t,
+                             jnp.mean(state.d1), state.done)
+    report.sweeps = len(report.sweep_log)
+    report.swaps = int(state.t)
+    report.converged = bool(state.done)
+    return res, batch, report
+
+
+def _run_eager(d, state, *, report, ckpt, sweep, max_swaps, eps, validate,
+               fault_hook):
+    """Pass-level host loop for the eager strategy (cheap tier only —
+    a first-improvement pass has no single selection to oracle)."""
+    scan = trace_mod._jit_eager_pass(eps)
+    cheap = _jit_cheap_eager()
+    reanchor = _jit_reanchor_block(False)
+    max_passes = max(2, max_swaps // max(int(state.medoid_idx.shape[0]), 1))
+    while not bool(state.done) and sweep < max_passes:
+        state, _, _ = _hook(fault_hook, sweep, state, None, None)
+        t0 = time.perf_counter()
+        new_state, swapped, flags, slots = scan(d, state)
+        if validate != "off":
+            names = guards.cheap_names(cheap(state, new_state, swapped))
+            if names:
+                _record_violation(report, sweep, names)
+                state = reanchor(d, state)
+                new_state, swapped, flags, slots = scan(d, state)
+                _record_fallback(report, sweep, "state_reanchor")
+                still = guards.cheap_names(cheap(state, new_state, swapped))
+                if still:
+                    raise guards.GuardViolation(still, sweep=sweep,
+                                                detail="after recovery")
+        report.timer.record(time.perf_counter() - t0)
+        nsw = np.flatnonzero(np.asarray(flags))
+        report.sweep_log.append(
+            {"sweep": sweep, "accepted": bool(swapped),
+             "i": [int(c) for c in nsw],
+             "l": [int(np.asarray(slots)[c]) for c in nsw],
+             "gain": []})
+        state = new_state._replace(done=~swapped)
+        sweep += 1
+        ckpt.maybe_save(sweep, _state_leaves(state), report)
+    ckpt.maybe_save(sweep, _state_leaves(state), report, final=True)
+    report._eager_final = state
+
+
+# ------------------------------------------------------- restart lanes --
+
+def _solve_restarts(key, x, k, *, m, user_m, variant, metric, strategy,
+                    max_swaps, eps, backend, chunk_size, block_dtype,
+                    restarts, eval_m, prune_m, survivor_frac, validate,
+                    checkpoint_dir, ckpt_every, resume, keep, fault_hook):
+    from repro.core import pruned as pruned_mod
+    from repro.core import restarts as restarts_mod
+    n, p = x.shape
+    debias = variant == "debias"
+    block_free = strategy in ("matrix_free", "pruned")
+    rm = solver._clamp_pool_m(n, restarts, m, user_m=user_m)
+    key_b, key_i = jax.random.split(key)
+    init_idx = restarts_mod._init_draws(key_i, n, k, restarts)
+    pool = restarts_mod.build_pool(
+        key_b, x, rm, restarts, eval_m=eval_m, variant=variant,
+        metric=metric, backend=backend, chunk_size=chunk_size,
+        block_dtype=block_dtype, materialize=not block_free)
+
+    pruned_caches = strategy == "pruned"
+    if block_free:
+        xp = solver._prepared(x, metric)
+        b = xp[pool.idx]                                   # (R, m, p)
+        w = pool.weights.astype(jnp.float32)
+        bidx = pool.idx.astype(jnp.int32)
+        state = _jit_init_state_mf(metric, debias, backend, True)(
+            xp, b, w, bidx, init_idx)
+        d_pool = None
+    else:
+        d_pool = pool.d
+        state = _jit_init_state_v()(d_pool, init_idx)
+    ub = jnp.full((restarts, n, k), pruned_mod.BIG) if pruned_caches else None
+    lb = (jnp.full((restarts, n, k), -pruned_mod.BIG)
+          if pruned_caches else None)
+
+    fp = _fingerprint(key, n=n, p=p, k=k, m=rm, variant=variant,
+                      metric=metric, strategy=strategy, max_swaps=max_swaps,
+                      eps=eps, backend=backend, chunk_size=chunk_size,
+                      block_dtype=block_dtype, restarts=restarts,
+                      eval_m=eval_m, prune_m=prune_m,
+                      survivor_frac=survivor_frac)
+    ckpt = _Checkpointer(checkpoint_dir, every=ckpt_every, keep=keep,
+                         fingerprint=fp)
+    report = SolveReport(strategy=strategy, validate=validate,
+                         restarts=restarts)
+    sweep = 0
+    if resume == "auto":
+        got = ckpt.try_resume(_state_leaves(state, ub, lb))
+        if got is not None:
+            leaves, sweep, report = got
+            state, ub, lb = _state_from_leaves(leaves)
+            report.resumed_from = sweep
+            report.strategy, report.validate = strategy, validate
+
+    if strategy == "batched":
+        step_v = _jit_fused_step_v(eps, backend)
+    elif strategy == "matrix_free":
+        step_v = _jit_mf_step_v(metric, debias, eps, backend, chunk_size)
+    else:
+        step_v = _jit_pruned_step_v(metric, debias, eps, backend,
+                                    chunk_size, prune_m, survivor_frac)
+    mf_step_v = (_jit_mf_step_v(metric, debias, eps, backend, chunk_size)
+                 if pruned_caches else None)
+    cheap_v = _jit_cheap(True)
+    eps_a = jnp.float32(eps)
+    d32_pool = None
+
+    def run_step(st, u, lo):
+        if strategy == "batched":
+            out = step_v(d_pool, st)
+            return (*out, u, lo)
+        if strategy == "matrix_free":
+            out = step_v(xp, b, w, bidx, st)
+            return (*out, u, lo)
+        new_state, ub_n, lb_n, improved, best, i, l, _ = step_v(
+            xp, b, w, bidx, st, u, lo)
+        return new_state, improved, best, i, l, ub_n, lb_n
+
+    def lanes_active(st):
+        return np.asarray(~st.done & (st.t < max_swaps))
+
+    active = lanes_active(state)
+    while active.any():
+        state, ub, lb = _hook(fault_hook, sweep, state, ub, lb)
+        t0 = time.perf_counter()
+        new_state, improved, best, i, l, ub_n, lb_n = run_step(state, ub, lb)
+
+        if validate != "off":
+            flags = cheap_v(state, new_state, improved, best, eps_a, 1.0)
+            flags = [np.asarray(f) for f in flags]
+            bad = active & ~(flags[0] & flags[1] & flags[2] & flags[3])
+            names = sorted({nm for r in np.flatnonzero(bad)
+                            for nm in guards.cheap_names(
+                                [f[r] for f in flags])})
+            if validate == "paranoid" and not bad.any():
+                if strategy == "batched":
+                    o_best, o_i, o_l = _jit_oracle_block(backend, True)(
+                        d_pool, state)
+                    g = None
+                else:
+                    o_best, o_i, o_l, g = _jit_oracle_mf(
+                        metric, debias, backend, pruned_mod._chunk_q(n),
+                        True)(xp, b, w, bidx, state)
+                for r in np.flatnonzero(active):
+                    lane_names = []
+                    if pruned_caches:
+                        ok, nbad, row = guards.bound_containment(
+                            g[r], ub[r], lb[r], state.medoid_idx[r])
+                        if not bool(ok):
+                            lane_names.append("bound_containment")
+                    if guards.selection_mismatch(
+                            best[r], i[r], l[r], o_best[r], o_i[r], o_l[r]):
+                        lane_names.append("selection_mismatch")
+                    if lane_names:
+                        bad[r] = True
+                        names = sorted(set(names) | set(lane_names))
+            if bad.any():
+                lanes = np.flatnonzero(bad)
+                _record_violation(report, sweep, names, lanes=lanes)
+                badm = jnp.asarray(bad)
+                if pruned_caches:
+                    alt = mf_step_v(xp, b, w, bidx, state)
+                    new_state = _sub_lanes(badm, alt[0], new_state)
+                    improved, best, i, l = (
+                        _lane_where(badm, a, o) for a, o in
+                        zip(alt[1:], (improved, best, i, l)))
+                    ub_n = _lane_where(
+                        badm, jnp.full((restarts, n, k), pruned_mod.BIG),
+                        ub_n)
+                    lb_n = _lane_where(
+                        badm, jnp.full((restarts, n, k), -pruned_mod.BIG),
+                        lb_n)
+                    _record_fallback(report, sweep, "pruned->matrix_free",
+                                     lanes=lanes)
+                elif strategy == "batched" and block_dtype is not None:
+                    if d32_pool is None:
+                        d32_pool = restarts_mod.build_pool(
+                            key_b, x, rm, restarts, eval_m=eval_m,
+                            variant=variant, metric=metric,
+                            backend=backend, chunk_size=chunk_size,
+                            block_dtype=None).d
+                    re32 = _jit_reanchor_block(True)(d32_pool, state)
+                    state = _sub_lanes(badm, re32, state)
+                    alt = _jit_fused_step_v(eps, backend)(d32_pool, state)
+                    new_state = _sub_lanes(badm, alt[0], new_state)
+                    improved, best, i, l = (
+                        _lane_where(badm, a, o) for a, o in
+                        zip(alt[1:], (improved, best, i, l)))
+                    _record_fallback(report, sweep, "bf16->f32_rescore",
+                                     lanes=lanes)
+                else:
+                    if strategy == "batched":
+                        re = _jit_reanchor_block(True)(d_pool, state)
+                    else:
+                        re = _jit_reanchor_mf(metric, debias, backend,
+                                              True)(xp, b, w, bidx, state)
+                    state = _sub_lanes(badm, re, state)
+                    alt = run_step(state, ub, lb)
+                    new_state = _sub_lanes(badm, alt[0], new_state)
+                    improved, best, i, l = (
+                        _lane_where(badm, a, o) for a, o in
+                        zip(alt[1:5], (improved, best, i, l)))
+                    if pruned_caches:
+                        ub_n = _lane_where(badm, alt[5], ub_n)
+                        lb_n = _lane_where(badm, alt[6], lb_n)
+                    _record_fallback(report, sweep, "state_reanchor",
+                                     lanes=lanes)
+                flags = cheap_v(state, new_state, improved, best, eps_a,
+                                1.0)
+                flags = [np.asarray(f) for f in flags]
+                still = jnp.asarray(bad) & ~(flags[0] & flags[1]
+                                             & flags[2] & flags[3])
+                if bool(np.asarray(still).any()):
+                    raise guards.GuardViolation(
+                        names, sweep=sweep,
+                        detail=f"after recovery on lanes "
+                               f"{np.flatnonzero(np.asarray(still)).tolist()}")
+        report.timer.record(time.perf_counter() - t0)
+
+        improved_h = np.asarray(improved)
+        report.sweep_log.append({
+            "sweep": sweep,
+            "active": [bool(a) for a in active],
+            "accepted": [bool(a and im) for a, im in
+                         zip(active, improved_h)],
+            "i": [int(v) for v in np.asarray(i)],
+            "l": [int(v) for v in np.asarray(l)],
+            "gain": [float(v) for v in np.asarray(best)]})
+        take = jnp.asarray(active) & jnp.asarray(improved)
+        nxt = _sub_lanes(take, new_state, state)
+        nxt = nxt._replace(done=jnp.where(
+            jnp.asarray(active) & ~jnp.asarray(improved),
+            jnp.bool_(True), nxt.done))
+        state = nxt
+        if pruned_caches:
+            ub = _lane_where(take, ub_n, ub)
+            lb = _lane_where(take, lb_n, lb)
+        sweep += 1
+        ckpt.maybe_save(sweep, _state_leaves(state, ub, lb), report)
+        active = lanes_active(state)
+
+    ckpt.maybe_save(sweep, _state_leaves(state, ub, lb), report,
+                    final=True)
+    results = solver.SolveResult(state.medoid_idx, state.t,
+                                 jax.vmap(jnp.mean)(state.d1), state.done)
+    best_r, evals = restarts_mod.elect(
+        x, results.medoid_idx, pool.eval_idx, metric=metric,
+        backend=backend, chunk_size=chunk_size, block_dtype=block_dtype)
+    res = jax.tree.map(lambda a: a[best_r], results)
+    r = int(best_r)
+    d_best = None if pool.d is None else pool.d[r]
+    batch = sampling.Batch(idx=pool.idx[r], weights=pool.weights[r],
+                           d=d_best)
+    report.sweeps = len(report.sweep_log)
+    report.swaps = int(jnp.sum(results.n_swaps))
+    report.converged = bool(jnp.all(results.converged))
+    report.election = {"best_restart": r,
+                       "eval_objectives": [float(v) for v in
+                                           np.asarray(evals)]}
+    return res, batch, report

@@ -7,6 +7,15 @@ active-learning batch picking, prompt clustering in serving). sklearn-like:
     sel = sel.fit(embeddings)          # embeddings: (n, p) array
     sel.medoid_indices_                # (k,) indices into the input
     labels = sel.predict(embeddings)   # nearest-medoid assignment
+
+Fitted selectors are durable: ``sel.save(path)`` writes the medoids +
+config through the atomic ``repro.checkpoint`` machinery, and
+``MedoidSelector.from_checkpoint(path)`` (or ``sel.load(path)`` onto a
+matching config) restores them without refitting — the serving-path
+warm-start artifact (ROADMAP). Long fits are themselves restartable:
+``checkpoint_dir=`` checkpoints solver state every ``ckpt_every``
+sweeps and ``resume="auto"`` continues a killed fit bitwise
+(DESIGN.md §6); ``validate=`` turns on runtime invariant guards.
 """
 from __future__ import annotations
 
@@ -17,6 +26,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import solver, streaming
+
+_SAVE_VERSION = 1
+
+# The config fields a saved selector pins: loading onto an instance whose
+# values differ is an error (the fitted arrays would not correspond to
+# the config the caller thinks it has). ``mesh`` is excluded (not
+# serializable, orthogonal to the fitted result); the robustness knobs
+# are excluded (they never change the floats).
+CONFIG_FIELDS = ("k", "m", "variant", "metric", "strategy", "max_swaps",
+                 "seed", "backend", "chunk_size", "block_dtype",
+                 "restarts", "eval_m", "prune_m", "survivor_frac")
 
 
 @dataclasses.dataclass
@@ -52,6 +72,15 @@ class MedoidSelector:
     # survivor_frac the dense-fallback threshold on the survivor count.
     prune_m: int | None = None
     survivor_frac: float = 0.5
+    # Robustness knobs (DESIGN.md §6): any of validate != "off" /
+    # checkpoint_dir routes fit() through the fault-tolerant runtime —
+    # same trajectory bit for bit, plus sweep-level checkpoints
+    # (resume="auto" continues a killed fit), invariant guards, and a
+    # structured report_ after fit.
+    validate: str = "off"
+    checkpoint_dir: str | None = None
+    ckpt_every: int = 1
+    resume: str = "auto"
 
     medoid_indices_: np.ndarray | None = None
     medoids_: np.ndarray | None = None
@@ -59,10 +88,34 @@ class MedoidSelector:
     n_swaps_: int | None = None
     best_restart_: int | None = None
     eval_objectives_: np.ndarray | None = None
+    report_: object | None = None
+
+    def _robust(self) -> bool:
+        return self.validate != "off" or self.checkpoint_dir is not None
 
     def fit(self, x) -> "MedoidSelector":
         x = jnp.asarray(x)
-        if self.restarts > 1:
+        if self._robust():
+            # The runtime path handles restarts itself and reports the
+            # election through SolveReport.
+            res, _, report = solver.one_batch_pam(
+                jax.random.PRNGKey(self.seed), x, self.k, m=self.m,
+                variant=self.variant, metric=self.metric,
+                strategy=self.strategy, max_swaps=self.max_swaps,
+                backend=self.backend, chunk_size=self.chunk_size,
+                block_dtype=self.block_dtype, mesh=self.mesh,
+                restarts=self.restarts, eval_m=self.eval_m,
+                prune_m=self.prune_m, survivor_frac=self.survivor_frac,
+                validate=self.validate,
+                checkpoint_dir=self.checkpoint_dir,
+                ckpt_every=self.ckpt_every, resume=self.resume,
+                return_report=True)
+            self.report_ = report
+            if report.election is not None:
+                self.best_restart_ = int(report.election["best_restart"])
+                self.eval_objectives_ = np.asarray(
+                    report.election["eval_objectives"], np.float32)
+        elif self.restarts > 1:
             if self.strategy not in ("batched", "matrix_free", "pruned"):
                 # Same contract as solver.one_batch_pam: restart lanes
                 # are the vmapped batched / block-free sweeps only.
@@ -118,3 +171,77 @@ class MedoidSelector:
                                       jnp.asarray(self.medoid_indices_),
                                       metric=self.metric, backend=self.backend,
                                       chunk_size=self.chunk_size))
+
+    # ------------------------------------------------ durable artifact --
+
+    def _config(self) -> dict:
+        return {f: getattr(self, f) for f in CONFIG_FIELDS}
+
+    def save(self, path: str) -> str:
+        """Persist the fitted selector (medoid indices, medoid rows,
+        config, eval objectives) through ``repro.checkpoint`` —
+        atomic-rename durable, versioned. Returns the checkpoint dir."""
+        if self.medoid_indices_ is None:
+            raise RuntimeError("call fit() before save() — there is no "
+                               "fitted state to persist")
+        from repro import checkpoint as ckpt
+        state = {"medoid_indices": np.asarray(self.medoid_indices_),
+                 "medoids": np.asarray(self.medoids_)}
+        if self.eval_objectives_ is not None:
+            state["eval_objectives"] = np.asarray(self.eval_objectives_,
+                                                  np.float32)
+        extra = {"save_version": _SAVE_VERSION,
+                 "config": self._config(),
+                 "fitted": {"est_objective": self.est_objective_,
+                            "n_swaps": self.n_swaps_,
+                            "best_restart": self.best_restart_}}
+        return ckpt.save(path, 0, state, extra=extra, keep=1)
+
+    def load(self, path: str) -> "MedoidSelector":
+        """Restore fitted state saved by :meth:`save` into *this*
+        instance. The saved config must match this instance's
+        (:data:`CONFIG_FIELDS`) — a clear error lists every mismatched
+        field, because fitted arrays divorced from their config are a
+        silent-wrong-answer factory. Use :meth:`from_checkpoint` to
+        build the matching instance from the artifact itself."""
+        from repro import checkpoint as ckpt
+        man = ckpt.manifest(path)
+        extra = man.get("extra", {})
+        version = extra.get("save_version")
+        if version != _SAVE_VERSION:
+            raise ValueError(
+                f"selector checkpoint at {path} has save_version "
+                f"{version!r}; this build reads version {_SAVE_VERSION}")
+        saved = extra.get("config", {})
+        mine = self._config()
+        diffs = [f"{f}: saved {saved.get(f)!r} != this instance "
+                 f"{mine.get(f)!r}" for f in CONFIG_FIELDS
+                 if saved.get(f) != mine.get(f)]
+        if diffs:
+            raise ValueError(
+                f"selector checkpoint at {path} was fitted under a "
+                "different config —\n  " + "\n  ".join(diffs) +
+                "\nUse MedoidSelector.from_checkpoint(path) to build the "
+                "matching instance.")
+        target = {leaf["name"]: jax.ShapeDtypeStruct(tuple(leaf["shape"]),
+                                                     leaf["dtype"])
+                  for leaf in man["leaves"]}
+        state, _ = ckpt.restore(path, target)
+        self.medoid_indices_ = np.asarray(state["medoid_indices"])
+        self.medoids_ = np.asarray(state["medoids"])
+        if "eval_objectives" in state:
+            self.eval_objectives_ = np.asarray(state["eval_objectives"])
+        fitted = extra.get("fitted", {})
+        self.est_objective_ = fitted.get("est_objective")
+        self.n_swaps_ = fitted.get("n_swaps")
+        self.best_restart_ = fitted.get("best_restart")
+        return self
+
+    @classmethod
+    def from_checkpoint(cls, path: str) -> "MedoidSelector":
+        """Build a selector from a :meth:`save` artifact: config comes
+        from the checkpoint, fitted arrays load straight in."""
+        from repro import checkpoint as ckpt
+        saved = ckpt.manifest(path).get("extra", {}).get("config", {})
+        sel = cls(**{f: saved[f] for f in CONFIG_FIELDS if f in saved})
+        return sel.load(path)

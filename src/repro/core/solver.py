@@ -471,6 +471,11 @@ def one_batch_pam(
     eval_m: int | None = None,
     prune_m: int | None = None,
     survivor_frac: float = 0.5,
+    validate: str = "off",
+    checkpoint_dir: str | None = None,
+    ckpt_every: int = 1,
+    resume: str = "auto",
+    return_report: bool = False,
 ) -> tuple[SolveResult, sampling.Batch]:
     """End-to-end OneBatchPAM (Algorithm 1).
 
@@ -514,7 +519,37 @@ def one_batch_pam(
     ``"matrix_free"`` swaps — core/pruned.py). ``prune_m`` is the
     phase-1 subsample width (default m // 8) and ``survivor_frac`` the
     dense-fallback threshold; both are ignored by other strategies.
+
+    **Robustness knobs** (DESIGN.md §6; ``core/runtime.py``): setting
+    ``validate`` ("off" | "cheap" | "paranoid"), ``checkpoint_dir``, or
+    ``return_report=True`` routes the solve through the fault-tolerant
+    runtime — the identical trajectory, bit for bit, driven sweep by
+    sweep from the host so it can checkpoint solver state every
+    ``ckpt_every`` sweeps (``resume="auto"`` continues a killed solve;
+    "never" starts over), check runtime invariants, and degrade
+    gracefully on violations. With ``return_report=True`` the return
+    becomes ``(result, batch, report)`` with a
+    :class:`runtime.SolveReport` third. Not composed with ``mesh=`` yet.
     """
+    robust = (validate != "off" or checkpoint_dir is not None
+              or return_report)
+    if robust:
+        if mesh is not None:
+            raise ValueError(
+                "the fault-tolerant runtime (validate/checkpoint_dir/"
+                "return_report) is host-side only; mesh= is not composed "
+                "yet — drop mesh or the robustness knobs")
+        from repro.core import runtime
+        res, batch, report = runtime.solve_fault_tolerant(
+            key, x, k, m=m, variant=variant, metric=metric,
+            strategy=strategy, max_swaps=max_swaps, eps=eps,
+            backend=backend, chunk_size=chunk_size,
+            block_dtype=block_dtype, restarts=restarts, eval_m=eval_m,
+            prune_m=prune_m, survivor_frac=survivor_frac,
+            validate=validate, checkpoint_dir=checkpoint_dir,
+            ckpt_every=ckpt_every, resume=resume)
+        return (res, batch, report) if return_report else (res, batch)
+
     n = x.shape[0]
     user_m = m
     m = m if m is not None else sampling.default_batch_size(n, k)

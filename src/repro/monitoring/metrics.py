@@ -8,6 +8,7 @@ checkpoint + launcher path.
 """
 from __future__ import annotations
 
+import csv
 import dataclasses
 import time
 
@@ -44,14 +45,63 @@ class StepTimer:
         self.ema = self.ema_decay * self.ema + (1 - self.ema_decay) * dt
         return flagged
 
+    def summary(self) -> dict:
+        """Wall-time percentiles over the recorded steps, warmup
+        excluded when enough post-warmup samples exist (the warmup steps
+        are compile time, which would dominate every percentile).
+        ``{"count", "p50", "p95", "max", "mean", "stragglers"}`` —
+        consumed by ``runtime.SolveReport``."""
+        steady = self.history[self.warmup:] or self.history
+        if not steady:
+            return {"count": 0, "p50": 0.0, "p95": 0.0, "max": 0.0,
+                    "mean": 0.0, "stragglers": self.stragglers}
+        xs = sorted(steady)
+
+        def pct(q: float) -> float:
+            return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+        return {"count": self.count, "p50": pct(0.50), "p95": pct(0.95),
+                "max": xs[-1], "mean": sum(xs) / len(xs),
+                "stragglers": self.stragglers}
+
 
 class CSVLogger:
+    """Append-only CSV with real quoting and durable writes.
+
+    The former implementation joined raw ``str(value)`` with commas — a
+    logged value containing a comma or newline silently sheared every
+    later column — and reopened the file per row with no flush, so a
+    SIGKILL could lose the tail of the log. Now: the ``csv`` module
+    quotes per RFC 4180, one handle stays open (``newline=""`` so the
+    writer controls line endings), and every row is flushed to the OS on
+    write. Usable as a context manager; ``close()`` is idempotent.
+    """
+
     def __init__(self, path: str, fields):
         self.path = path
         self.fields = list(fields)
-        with open(path, "w") as f:
-            f.write(",".join(self.fields) + "\n")
+        self._f = open(path, "w", newline="")
+        self._w = csv.writer(self._f)
+        self._w.writerow(self.fields)
+        self._f.flush()
 
     def log(self, **kw):
-        with open(self.path, "a") as f:
-            f.write(",".join(str(kw.get(k, "")) for k in self.fields) + "\n")
+        self._w.writerow([kw.get(k, "") for k in self.fields])
+        self._f.flush()
+
+    def close(self):
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass

@@ -1,0 +1,110 @@
+"""Fault injectors for the fault-tolerant runtime (DESIGN.md §6).
+
+Each injector is either a ``_fault_hook`` factory — called by
+``runtime.solve_fault_tolerant`` at the top of every sweep with a
+mutable ``{"sweep", "state", "ub", "lb"}`` dict whose entries are read
+back — or a filesystem mutation against a checkpoint directory.
+tests/test_solver_faults.py drives every one of them through the guard
+ladder; tests/helpers/kill_resume_check.py uses :func:`kill_at` for the
+real-SIGKILL resume tests.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class StopRun(Exception):
+    """Raised by :func:`stop_at` to abandon a solve mid-run — a
+    controlled in-process stand-in for preemption (completed sweeps are
+    already checkpointed when the hook fires)."""
+
+
+def stop_at(sweep: int):
+    def hook(run):
+        if run["sweep"] == sweep:
+            raise StopRun(f"injected stop at sweep {sweep}")
+    return hook
+
+
+def kill_at(sweep: int):
+    """SIGKILL the current process at the top of sweep ``sweep`` — the
+    real thing; only usable from a subprocess."""
+    def hook(run):
+        if run["sweep"] == sweep:
+            os.kill(os.getpid(), signal.SIGKILL)
+    return hook
+
+
+def state_poison(sweep: int, mode: str = "nan"):
+    """Corrupt the solver state ahead of sweep ``sweep``. ``"nan"``
+    writes NaN into d1 (trips the nonfinite/objective guards);
+    ``"order"`` lifts d1 above d2 (trips top2_order / the objective
+    guard, depending on where the poison surfaces first). Works on
+    single-restart and R-lane states alike (leading axes broadcast)."""
+    def hook(run):
+        if run["sweep"] != sweep:
+            return
+        st = run["state"]
+        if mode == "nan":
+            run["state"] = st._replace(d1=st.d1.at[..., 0].set(jnp.nan))
+        elif mode == "order":
+            run["state"] = st._replace(d1=st.d2 + 1.0)
+        else:
+            raise ValueError(f"unknown state_poison mode {mode!r}")
+    return hook
+
+
+def cache_poison(sweep: int, mode: str = "ub"):
+    """Corrupt the pruned strategy's bound caches ahead of sweep
+    ``sweep``: ``"ub"`` clamps every upper bound below any true gain,
+    ``"lb"`` lifts every lower bound above it — both break the
+    lo <= G <= hi containment invariant the paranoid tier checks.
+    No-op for strategies without caches."""
+    def hook(run):
+        if run["sweep"] != sweep or run["ub"] is None:
+            return
+        from repro.core import pruned
+        if mode == "ub":
+            run["ub"] = jnp.full_like(run["ub"], -pruned.BIG)
+        elif mode == "lb":
+            run["lb"] = jnp.full_like(run["lb"], pruned.BIG)
+        else:
+            raise ValueError(f"unknown cache_poison mode {mode!r}")
+    return hook
+
+
+def corrupt_latest_checkpoint(root: str, mode: str) -> int:
+    """Damage the newest checkpoint under ``root``; returns the damaged
+    step. ``restore_latest_valid`` must skip it (warning) and fall back
+    to the next-older step; ``"truncate_manifest"`` removes the manifest
+    entirely, which makes the step invisible (an interrupted writer
+    would never have renamed the dir, so a manifest-less step dir is by
+    definition debris)."""
+    from repro import checkpoint as ckpt
+    step = ckpt.latest_step(root)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {root}")
+    d = os.path.join(root, f"step_{step:08d}")
+    if mode == "truncate_manifest":
+        os.remove(os.path.join(d, "manifest.json"))
+    elif mode == "garbage_manifest":
+        with open(os.path.join(d, "manifest.json"), "w") as f:
+            f.write("{this is not json")
+    elif mode == "missing_leaf":
+        with open(os.path.join(d, "manifest.json")) as f:
+            man = json.load(f)
+        os.remove(os.path.join(d, man["leaves"][0]["name"] + ".npy"))
+    elif mode == "shape":
+        with open(os.path.join(d, "manifest.json")) as f:
+            man = json.load(f)
+        leaf = man["leaves"][0]
+        np.save(os.path.join(d, leaf["name"] + ".npy"),
+                np.zeros((1,) + tuple(leaf["shape"]), np.float32))
+    else:
+        raise ValueError(f"unknown corruption mode {mode!r}")
+    return step

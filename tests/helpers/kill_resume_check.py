@@ -1,0 +1,74 @@
+"""Subprocess body for the kill/resume bitwise-identity tests
+(tests/test_solver_faults.py).
+
+Modes (argv[1]):
+  straight — run the fault-tolerant solve start-to-finish with no
+             checkpointing; dump the trajectory payload as JSON.
+  kill     — run with ``checkpoint_dir``; SIGKILL ourselves at the top
+             of sweep ``kill_at``. The parent asserts we died with
+             -SIGKILL and left checkpoints behind.
+  resume   — run with the same ``checkpoint_dir``, ``resume="auto"``;
+             dump the payload. The parent diffs it against "straight":
+             medoid slots, swap count, the objective's f32 bit pattern,
+             and the full per-sweep log must all be identical.
+
+argv: mode strategy restarts kill_at ckpt_dir out_json [backend]
+
+The problem is pinned (n=96, p=6, k=4, m=24, key=PRNGKey(7), nniw,
+validate="cheap", ckpt_every=1) so all three runs share one trajectory.
+"""
+import json
+import os
+import signal
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import runtime
+
+
+def main() -> None:
+    mode, strategy = sys.argv[1], sys.argv[2]
+    restarts, kill_at = int(sys.argv[3]), int(sys.argv[4])
+    ckpt_dir, out = sys.argv[5], sys.argv[6]
+    backend = sys.argv[7] if len(sys.argv) > 7 else "auto"
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(96, 6)).astype(np.float32))
+    key = jax.random.PRNGKey(7)
+    kw = dict(m=24, variant="nniw", strategy=strategy, restarts=restarts,
+              backend=backend, validate="cheap", ckpt_every=1)
+
+    if mode == "straight":
+        res, _, rep = runtime.solve_fault_tolerant(key, x, 4, **kw)
+    elif mode == "kill":
+        def hook(run):
+            if run["sweep"] == kill_at:
+                os.kill(os.getpid(), signal.SIGKILL)
+        runtime.solve_fault_tolerant(key, x, 4, checkpoint_dir=ckpt_dir,
+                                     _fault_hook=hook, **kw)
+        raise SystemExit(f"kill hook never fired (solve ended before "
+                         f"sweep {kill_at})")
+    elif mode == "resume":
+        res, _, rep = runtime.solve_fault_tolerant(
+            key, x, 4, checkpoint_dir=ckpt_dir, resume="auto", **kw)
+    else:
+        raise SystemExit(f"unknown mode {mode!r}")
+
+    payload = {
+        "medoids": np.asarray(res.medoid_idx).tolist(),
+        "n_swaps": int(res.n_swaps),
+        "objective_hex": np.float32(res.est_objective).tobytes().hex(),
+        "converged": bool(res.converged),
+        "resumed_from": rep.resumed_from,
+        "log": rep.sweep_log,
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f)
+    print(f"OK {mode} {strategy} r={restarts}")
+
+
+if __name__ == "__main__":
+    main()

@@ -112,3 +112,162 @@ def test_straggler_detection():
     assert not any(flags)
     assert t.record(1.0) is True      # 10x EMA -> straggler
     assert t.stragglers == 1
+
+
+def test_steptimer_summary_excludes_warmup():
+    t = StepTimer(warmup=2, threshold=100.0)
+    for dt in (9.0, 9.0, 0.1, 0.2, 0.3, 0.4):   # 2 compile-ish outliers
+        t.record(dt)
+    s = t.summary()
+    assert s["count"] == 6
+    assert s["max"] == 0.4            # warmup steps out of the stats
+    assert 0.1 <= s["p50"] <= s["p95"] <= s["max"]
+    assert s["stragglers"] == 0
+    empty = StepTimer().summary()
+    assert empty["count"] == 0 and empty["p50"] == 0.0
+
+
+def test_csvlogger_quotes_and_flushes(tmp_path):
+    """Values containing commas/newlines/quotes survive the round-trip
+    (RFC 4180 quoting), and every row is on disk immediately — a
+    SIGKILL'd run loses nothing already logged."""
+    import csv
+
+    from repro.monitoring import CSVLogger
+    path = str(tmp_path / "log.csv")
+    nasty = 'a,b\n"c"'
+    with CSVLogger(path, ["step", "msg"]) as log:
+        log.log(step=1, msg=nasty)
+        log.log(step=2)                       # missing field -> ""
+        # read back BEFORE close: rows must already be flushed
+        with open(path, newline="") as f:
+            rows = list(csv.reader(f))
+        assert rows[0] == ["step", "msg"]
+        assert rows[1] == ["1", nasty]
+        assert rows[2] == ["2", ""]
+    log.close()                               # idempotent
+
+
+def test_restore_aggregates_all_leaf_problems(tmproot):
+    """One error lists EVERY missing/mismatched leaf (a schema
+    migration sees the full diff, not the first casualty); unknown
+    extra leaves on disk are tolerated with a warning."""
+    ckpt.save(tmproot, 1, {"a": jnp.zeros((2, 3)), "b": jnp.ones((4,)),
+                           "c": jnp.zeros((5,))})
+    target = {"a": jnp.zeros((9, 9)),          # shape mismatch
+              "b": jnp.zeros((4,)),            # fine
+              "missing": jnp.zeros((1,))}      # not on disk
+    with pytest.raises(ValueError) as ei:
+        ckpt.restore(tmproot, target)
+    msg = str(ei.value)
+    assert "2 leaf problem(s)" in msg
+    assert "a: shape (2, 3) != expected (9, 9)" in msg
+    assert "missing: missing from checkpoint" in msg
+    # older reader, newer writer: extra leaf "c" ignored with a warning
+    with pytest.warns(UserWarning, match="unknown to this reader"):
+        got, _ = ckpt.restore(tmproot, {"a": jnp.zeros((2, 3)),
+                                        "b": jnp.zeros((4,))})
+    np.testing.assert_array_equal(np.asarray(got["b"]), np.ones((4,)))
+
+
+def test_restore_latest_valid_walks_back(tmproot):
+    state = _tiny_state()
+    ckpt.save(tmproot, 1, state)
+    ckpt.save(tmproot, 2, state)
+    # corrupt the newest step's manifest
+    with open(os.path.join(tmproot, "step_00000002", "manifest.json"),
+              "w") as f:
+        f.write("not json")
+    with pytest.warns(UserWarning, match="skipping corrupt checkpoint"):
+        got, _, step = ckpt.restore_latest_valid(
+            tmproot, jax.tree.map(jnp.zeros_like, state))
+    assert step == 1
+    assert int(got["step"]) == 7
+    # all corrupt -> FileNotFoundError naming the failure
+    with open(os.path.join(tmproot, "step_00000001", "manifest.json"),
+              "w") as f:
+        f.write("also not json")
+    with pytest.warns(UserWarning):
+        with pytest.raises(FileNotFoundError, match="no restorable"):
+            ckpt.restore_latest_valid(tmproot,
+                                      jax.tree.map(jnp.zeros_like, state))
+
+
+# --------------------------------------------- durable fitted selectors --
+
+def _fitted_selector(**kw):
+    from repro.core import MedoidSelector
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(60, 4)).astype(np.float32)
+    return MedoidSelector(k=3, m=16, **kw).fit(x), x
+
+
+def test_selector_save_load_roundtrip(tmp_path):
+    from repro.core import MedoidSelector
+    sel, x = _fitted_selector(restarts=2)
+    path = str(tmp_path / "sel")
+    sel.save(path)
+    fresh = MedoidSelector(k=3, m=16, restarts=2).load(path)
+    np.testing.assert_array_equal(fresh.medoid_indices_,
+                                  sel.medoid_indices_)
+    np.testing.assert_array_equal(fresh.medoids_, sel.medoids_)
+    np.testing.assert_array_equal(fresh.eval_objectives_,
+                                  sel.eval_objectives_)
+    assert fresh.est_objective_ == sel.est_objective_
+    assert fresh.n_swaps_ == sel.n_swaps_
+    assert fresh.best_restart_ == sel.best_restart_
+    np.testing.assert_array_equal(fresh.predict(x), sel.predict(x))
+
+
+def test_selector_load_config_mismatch_lists_fields(tmp_path):
+    from repro.core import MedoidSelector
+    sel, _ = _fitted_selector()
+    path = str(tmp_path / "sel")
+    sel.save(path)
+    other = MedoidSelector(k=3, m=32, metric="l2")
+    with pytest.raises(ValueError) as ei:
+        other.load(path)
+    msg = str(ei.value)
+    assert "m: saved 16" in msg and "metric: saved 'l1'" in msg
+    assert "from_checkpoint" in msg
+
+
+def test_selector_from_checkpoint_rebuilds_config(tmp_path):
+    from repro.core import MedoidSelector
+    sel, x = _fitted_selector(strategy="pruned")
+    path = str(tmp_path / "sel")
+    sel.save(path)
+    fresh = MedoidSelector.from_checkpoint(path)
+    assert fresh.k == 3 and fresh.m == 16 and fresh.strategy == "pruned"
+    np.testing.assert_array_equal(fresh.medoid_indices_,
+                                  sel.medoid_indices_)
+    np.testing.assert_array_equal(fresh.predict(x), sel.predict(x))
+
+
+def test_selector_save_requires_fit(tmp_path):
+    from repro.core import MedoidSelector
+    with pytest.raises(RuntimeError, match="fit"):
+        MedoidSelector(k=3).save(str(tmp_path / "sel"))
+
+
+def test_selector_robust_fit_reports_and_resumes(tmp_path):
+    """validate= routes fit() through the fault-tolerant runtime
+    (bitwise — seed discipline unchanged), attaches the SolveReport,
+    and checkpoint_dir makes the fit itself restartable."""
+    from repro.core import MedoidSelector
+    sel_plain, x = _fitted_selector()
+    d = str(tmp_path / "fitckpt")
+    sel = MedoidSelector(k=3, m=16, validate="paranoid",
+                         checkpoint_dir=d).fit(x)
+    np.testing.assert_array_equal(sel.medoid_indices_,
+                                  sel_plain.medoid_indices_)
+    assert sel.report_ is not None
+    assert sel.report_.violations == []
+    assert sel.report_.checkpoint_writes
+    assert os.path.isdir(d)
+    # a second fit resumes from the finished checkpoint: zero sweeps
+    sel2 = MedoidSelector(k=3, m=16, validate="cheap",
+                          checkpoint_dir=d).fit(x)
+    assert sel2.report_.resumed_from is not None
+    np.testing.assert_array_equal(sel2.medoid_indices_,
+                                  sel_plain.medoid_indices_)

@@ -1,0 +1,386 @@
+"""Fault-injection tests for the fault-tolerant runtime (DESIGN.md §6).
+
+Every injector in tests/faults.py must trip its guard, and every
+recovery must leave the trajectory bitwise-identical to a clean run:
+
+  * SIGKILL at sweep s (subprocess) + resume="auto" == the straight
+    run — medoids, swap count, objective f32 bits, full sweep log —
+    across strategies x restart counts.
+  * state/cache poison under validate="cheap"/"paranoid" -> violation
+    recorded, degradation ladder fires (state_reanchor /
+    pruned->matrix_free / bf16->f32_rescore), final result bitwise
+    clean.
+  * corrupt checkpoints are skipped with a warning; resume continues
+    from the newest healthy step.
+  * poisoned inputs never reach the solver (clear ValueError).
+"""
+import json
+import os
+import pathlib
+import signal
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import faults
+from repro.core import runtime, solver
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+HELPER = ROOT / "tests" / "helpers" / "kill_resume_check.py"
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _problem(n=96, p=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+
+
+def _payload(res, rep):
+    return {"medoids": np.asarray(res.medoid_idx).tolist(),
+            "n_swaps": int(res.n_swaps),
+            "objective_hex": np.float32(res.est_objective).tobytes().hex(),
+            "converged": bool(res.converged),
+            "resumed_from": rep.resumed_from,
+            "log": rep.sweep_log}
+
+
+def _solve(strategy, restarts=1, backend="auto", **kw):
+    kw.setdefault("validate", "cheap")
+    return runtime.solve_fault_tolerant(
+        KEY, _problem(), 4, m=24, variant="nniw", strategy=strategy,
+        restarts=restarts, backend=backend, **kw)
+
+
+# ------------------------------------------------- kill/resume (SIGKILL) --
+
+def _child(mode, strategy, restarts, kill_at, ckpt_dir, out,
+           backend="auto", expect_kill=False):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{ROOT / 'src'}:{env.get('PYTHONPATH', '')}"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    p = subprocess.run(
+        [sys.executable, str(HELPER), mode, strategy, str(restarts),
+         str(kill_at), ckpt_dir, out, backend],
+        capture_output=True, text=True, env=env, timeout=600)
+    if expect_kill:
+        assert p.returncode == -signal.SIGKILL, \
+            f"rc={p.returncode}\nSTDOUT:\n{p.stdout}\nSTDERR:\n{p.stderr}"
+    else:
+        assert p.returncode == 0, \
+            f"rc={p.returncode}\nSTDOUT:\n{p.stdout}\nSTDERR:\n{p.stderr}"
+    return p
+
+
+@pytest.mark.parametrize("strategy,restarts,kill_at,backend", [
+    ("batched", 1, 1, "auto"),
+    ("batched", 1, 3, "auto"),
+    ("batched", 4, 2, "auto"),
+    ("matrix_free", 1, 2, "auto"),
+    ("matrix_free", 4, 2, "auto"),
+    ("pruned", 1, 2, "auto"),
+    ("pruned", 4, 2, "auto"),
+    ("batched", 1, 2, "interpret"),
+])
+def test_sigkill_resume_bitwise(tmp_path, strategy, restarts, kill_at,
+                                backend):
+    """A solve SIGKILL'd at sweep ``kill_at`` and resumed from its
+    checkpoints replays the remaining trajectory bitwise: the resumed
+    run's payload equals the straight run's, entry for entry."""
+    # straight reference, in-process (same platform; jits are cached
+    # across params so only the first case pays compilation)
+    res, _, rep = _solve(strategy, restarts, backend=backend)
+    straight = _payload(res, rep)
+    assert len(straight["log"]) > kill_at, "problem too easy to kill"
+
+    ckpt_dir = str(tmp_path / "ck")
+    out = str(tmp_path / "resumed.json")
+    _child("kill", strategy, restarts, kill_at, ckpt_dir, out,
+           backend=backend, expect_kill=True)
+    _child("resume", strategy, restarts, kill_at, ckpt_dir, out,
+           backend=backend)
+    with open(out) as f:
+        resumed = json.load(f)
+
+    assert resumed["resumed_from"] == kill_at
+    assert resumed["medoids"] == straight["medoids"]
+    assert resumed["n_swaps"] == straight["n_swaps"]
+    assert resumed["objective_hex"] == straight["objective_hex"]
+    assert resumed["converged"] == straight["converged"]
+    # pre-kill entries come back from the checkpointed report; post-kill
+    # entries are recomputed — together they must be the straight log
+    assert resumed["log"] == straight["log"]
+
+
+# ------------------------------------- clean runs == one_batch_pam, bitwise --
+
+@pytest.mark.parametrize("strategy",
+                         ["batched", "matrix_free", "pruned", "eager"])
+def test_runtime_bitwise_matches_solver(strategy):
+    """validate="paranoid" re-derives every sweep's selection through
+    the exact oracle: a clean solve must sail through with zero
+    violations and the exact one_batch_pam trajectory."""
+    x = _problem()
+    res, _, rep = _solve(strategy, validate="paranoid")
+    ref, _ = solver.one_batch_pam(KEY, x, 4, m=24, variant="nniw",
+                                  strategy=strategy)
+    np.testing.assert_array_equal(np.asarray(res.medoid_idx),
+                                  np.asarray(ref.medoid_idx))
+    assert (np.float32(res.est_objective).tobytes()
+            == np.float32(ref.est_objective).tobytes())
+    assert int(res.n_swaps) == int(ref.n_swaps)
+    assert rep.violations == [] and rep.fallbacks == []
+    assert rep.sweeps == len(rep.sweep_log) > 0
+    assert rep.converged == bool(ref.converged)
+
+
+@pytest.mark.parametrize("strategy", ["batched", "pruned"])
+def test_runtime_bitwise_matches_solver_restarts(strategy):
+    x = _problem()
+    res, _, rep = _solve(strategy, restarts=4, validate="paranoid")
+    ref, _ = solver.one_batch_pam(KEY, x, 4, m=24, variant="nniw",
+                                  strategy=strategy, restarts=4)
+    np.testing.assert_array_equal(np.asarray(res.medoid_idx),
+                                  np.asarray(ref.medoid_idx))
+    assert (np.float32(res.est_objective).tobytes()
+            == np.float32(ref.est_objective).tobytes())
+    assert rep.violations == [] and rep.fallbacks == []
+    assert rep.election is not None and "best_restart" in rep.election
+
+
+# ------------------------------------------------------------ input guards --
+
+def test_input_guard_nan_rows():
+    x = np.array(_problem())
+    x[3, :] = np.nan
+    x[7, 0] = np.inf
+    with pytest.raises(ValueError, match="non-finite.*2 row"):
+        runtime.solve_fault_tolerant(KEY, jnp.asarray(x), 4, m=24,
+                                     validate="cheap")
+
+
+@pytest.mark.parametrize("bad,match", [
+    (np.zeros((0, 5), np.float32), "empty/degenerate"),
+    (np.zeros((8, 0), np.float32), "empty/degenerate"),
+    (np.zeros((8, 3), np.int32), "floating dtype"),
+    (np.zeros((8,), np.float32), "2-d"),
+])
+def test_input_guard_shape_dtype(bad, match):
+    with pytest.raises(ValueError, match=match):
+        runtime.solve_fault_tolerant(KEY, bad, 4, validate="cheap")
+
+
+def test_input_guard_k_and_restarts():
+    x = _problem(n=8, p=3)
+    with pytest.raises(ValueError, match="1 <= k <= n"):
+        runtime.solve_fault_tolerant(KEY, x, 10, validate="cheap")
+    with pytest.raises(ValueError, match="batch size m"):
+        runtime.solve_fault_tolerant(KEY, x, 2, m=0, validate="cheap")
+    with pytest.raises(ValueError, match="restarts=4"):
+        runtime.solve_fault_tolerant(KEY, x, 4, restarts=4,
+                                     validate="cheap")
+
+
+def test_runtime_rejects_bad_knobs():
+    x = _problem(n=16, p=3)
+    with pytest.raises(ValueError, match="validate"):
+        runtime.solve_fault_tolerant(KEY, x, 2, validate="sometimes")
+    with pytest.raises(ValueError, match="resume"):
+        runtime.solve_fault_tolerant(KEY, x, 2, resume="maybe")
+    with pytest.raises(ValueError, match="block_dtype"):
+        runtime.solve_fault_tolerant(KEY, x, 2, strategy="pruned",
+                                     block_dtype="bfloat16")
+    with pytest.raises(ValueError, match="restarts > 1"):
+        runtime.solve_fault_tolerant(KEY, x, 2, strategy="eager",
+                                     restarts=2)
+
+
+# --------------------------------------------------- guard ladder recovery --
+
+@pytest.mark.parametrize("strategy", ["batched", "matrix_free"])
+def test_state_poison_recovers_bitwise(strategy):
+    """NaN injected into the solver state trips the cheap tier; the
+    re-anchor recovery rebuilds the top-2 state from the medoid set
+    (value-exact), so the remaining trajectory — including the poisoned
+    sweep's own selection — is bitwise the clean run's."""
+    clean_res, _, clean_rep = _solve(strategy)
+    res, _, rep = _solve(strategy,
+                         _fault_hook=faults.state_poison(1, "nan"))
+    assert rep.violations and rep.violations[0]["sweep"] == 1
+    assert rep.fallbacks == [{"sweep": 1, "kind": "state_reanchor"}]
+    assert _payload(res, rep)["medoids"] == \
+        _payload(clean_res, clean_rep)["medoids"]
+    assert rep.sweep_log == clean_rep.sweep_log
+    assert (np.float32(res.est_objective).tobytes()
+            == np.float32(clean_res.est_objective).tobytes())
+
+
+def test_state_poison_order_recovers():
+    res_c, _, rep_c = _solve("batched")
+    res, _, rep = _solve("batched",
+                         _fault_hook=faults.state_poison(1, "order"))
+    assert rep.violations and rep.violations[0]["sweep"] == 1
+    assert rep.fallbacks and rep.fallbacks[0]["kind"] == "state_reanchor"
+    assert rep.sweep_log == rep_c.sweep_log
+
+
+@pytest.mark.parametrize("mode", ["ub", "lb"])
+def test_paranoid_catches_cache_poison(mode):
+    """A corrupted bound cache silently mis-prunes under cheap
+    validation; paranoid detects it (containment / selection oracle),
+    falls back to the matrix-free sweep for that sweep, resets the
+    caches, and the final trajectory stays bitwise-correct."""
+    clean_res, _, clean_rep = _solve("pruned", validate="paranoid")
+    assert clean_rep.violations == []   # no spurious firings
+    res, _, rep = _solve("pruned", validate="paranoid",
+                         _fault_hook=faults.cache_poison(1, mode))
+    assert rep.violations and rep.violations[0]["sweep"] == 1
+    assert rep.fallbacks == [{"sweep": 1, "kind": "pruned->matrix_free"}]
+    assert rep.sweep_log == clean_rep.sweep_log
+    assert _payload(res, rep)["medoids"] == \
+        _payload(clean_res, clean_rep)["medoids"]
+    assert (np.float32(res.est_objective).tobytes()
+            == np.float32(clean_res.est_objective).tobytes())
+
+
+def test_paranoid_cache_poison_restart_lanes():
+    """Same detection through the R-lane ladder: only the poisoned
+    sweep falls back (lane-masked), the election still matches the
+    clean run's."""
+    clean_res, _, clean_rep = _solve("pruned", restarts=4,
+                                     validate="paranoid")
+    res, _, rep = _solve("pruned", restarts=4, validate="paranoid",
+                         _fault_hook=faults.cache_poison(1, "ub"))
+    assert rep.fallbacks and \
+        rep.fallbacks[0]["kind"] == "pruned->matrix_free"
+    assert rep.fallbacks[0]["lanes"], "lane list missing"
+    assert rep.election == clean_rep.election
+    np.testing.assert_array_equal(np.asarray(res.medoid_idx),
+                                  np.asarray(clean_res.medoid_idx))
+
+
+def test_bf16_sweep_escalates_to_f32():
+    """With a bf16 block, a tripped guard escalates the offending sweep
+    to an f32 re-score on the deterministically rebuilt f32 block."""
+    # a clean bf16 run must not trip anything
+    _, _, rep_c = _solve("batched", block_dtype="bfloat16")
+    assert rep_c.violations == [] and rep_c.fallbacks == []
+    res, _, rep = _solve("batched", block_dtype="bfloat16",
+                         _fault_hook=faults.state_poison(1, "nan"))
+    assert rep.violations and rep.violations[0]["sweep"] == 1
+    assert rep.fallbacks == [{"sweep": 1, "kind": "bf16->f32_rescore"}]
+    assert np.isfinite(float(res.est_objective))
+    assert rep.converged
+
+
+def test_eager_state_poison_recovers():
+    clean_res, _, clean_rep = _solve("eager")
+    res, _, rep = _solve("eager",
+                         _fault_hook=faults.state_poison(1, "nan"))
+    assert rep.violations and rep.violations[0]["sweep"] == 1
+    assert rep.fallbacks == [{"sweep": 1, "kind": "state_reanchor"}]
+    assert rep.sweep_log == clean_rep.sweep_log
+    assert (np.float32(res.est_objective).tobytes()
+            == np.float32(clean_res.est_objective).tobytes())
+
+
+# --------------------------------------------- checkpoint-level resilience --
+
+@pytest.mark.parametrize("strategy,every", [("batched", 1), ("pruned", 2),
+                                            ("eager", 1)])
+def test_stop_resume_inprocess(tmp_path, strategy, every):
+    """In-process preemption stand-in: stop at sweep 2, resume, full
+    log + result bitwise vs the straight run (also covers ckpt_every>1:
+    resume then restarts from the newest multiple)."""
+    clean_res, _, clean_rep = _solve(strategy)
+    d = str(tmp_path / "ck")
+    with pytest.raises(faults.StopRun):
+        _solve(strategy, checkpoint_dir=d, ckpt_every=every,
+               _fault_hook=faults.stop_at(2))
+    res, _, rep = _solve(strategy, checkpoint_dir=d, ckpt_every=every)
+    assert rep.resumed_from == 2
+    assert rep.sweep_log == clean_rep.sweep_log
+    assert _payload(res, rep)["medoids"] == \
+        _payload(clean_res, clean_rep)["medoids"]
+    assert (np.float32(res.est_objective).tobytes()
+            == np.float32(clean_res.est_objective).tobytes())
+
+
+@pytest.mark.parametrize("mode", ["truncate_manifest", "garbage_manifest",
+                                  "missing_leaf", "shape"])
+def test_corrupt_checkpoint_skipped_resume_still_bitwise(tmp_path, mode):
+    """A corrupt newest checkpoint is skipped (warning) and the solve
+    resumes from the next-older healthy step — final result still
+    bitwise the straight run's."""
+    clean_res, _, clean_rep = _solve("batched")
+    d = str(tmp_path / "ck")
+    with pytest.raises(faults.StopRun):
+        _solve("batched", checkpoint_dir=d, _fault_hook=faults.stop_at(3))
+    damaged = faults.corrupt_latest_checkpoint(d, mode)
+    assert damaged == 3
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        res, _, rep = _solve("batched", checkpoint_dir=d)
+    if mode != "truncate_manifest":   # manifest-less dirs are invisible
+        assert any("skipping corrupt checkpoint step 3" in str(x.message)
+                   for x in w), [str(x.message) for x in w]
+    assert rep.resumed_from == 2
+    assert rep.sweep_log == clean_rep.sweep_log
+    assert (np.float32(res.est_objective).tobytes()
+            == np.float32(clean_res.est_objective).tobytes())
+
+
+def test_resume_config_mismatch_is_a_clear_error(tmp_path):
+    d = str(tmp_path / "ck")
+    _solve("batched", checkpoint_dir=d)
+    with pytest.raises(ValueError) as ei:
+        runtime.solve_fault_tolerant(KEY, _problem(), 4, m=32,
+                                     variant="nniw", strategy="batched",
+                                     checkpoint_dir=d)
+    msg = str(ei.value)
+    assert "m: checkpoint has 24, this run has 32" in msg
+    assert "resume='never'" in msg
+    # the escape hatch actually works
+    _, _, rep = runtime.solve_fault_tolerant(
+        KEY, _problem(), 4, m=32, variant="nniw", strategy="batched",
+        checkpoint_dir=d, resume="never")
+    assert rep.resumed_from is None
+
+
+def test_fully_corrupt_dir_warns_and_starts_fresh(tmp_path):
+    d = str(tmp_path / "ck")
+    clean_res, _, _ = _solve("batched")
+    _solve("batched", checkpoint_dir=d, keep=1)
+    faults.corrupt_latest_checkpoint(d, "garbage_manifest")
+    with pytest.warns(UserWarning, match="starting fresh"):
+        res, _, rep = _solve("batched", checkpoint_dir=d)
+    assert rep.resumed_from is None
+    assert (np.float32(res.est_objective).tobytes()
+            == np.float32(clean_res.est_objective).tobytes())
+
+
+# ------------------------------------------------------------- API surface --
+
+def test_one_batch_pam_robust_path_bitwise():
+    """one_batch_pam(validate=...) routes through the runtime and stays
+    bitwise the plain call; return_report adds the SolveReport."""
+    x = _problem()
+    ref, ref_batch = solver.one_batch_pam(KEY, x, 4, m=24)
+    res, batch, rep = solver.one_batch_pam(KEY, x, 4, m=24,
+                                           validate="paranoid",
+                                           return_report=True)
+    assert isinstance(rep, runtime.SolveReport)
+    np.testing.assert_array_equal(np.asarray(res.medoid_idx),
+                                  np.asarray(ref.medoid_idx))
+    np.testing.assert_array_equal(np.asarray(batch.idx),
+                                  np.asarray(ref_batch.idx))
+    assert rep.violations == []
+    # report survives a JSON round-trip (it rides checkpoint extras)
+    d = json.loads(json.dumps(rep.to_dict()))
+    assert d["sweeps"] == rep.sweeps
+    assert {"count", "p50", "p95", "max"} <= set(d["timer_summary"])
