@@ -41,7 +41,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table3,fig1,pareto,kernel,"
-                         "roofline,restarts")
+                         "roofline,restarts,serving")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write records as structured JSON (e.g. "
                          "BENCH_PR2.json)")
@@ -51,7 +51,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig1_scaling, kernel_bench, pareto,
-                            restart_bench, roofline_report,
+                            restart_bench, roofline_report, serving_bench,
                             table1_complexity, table3_quality, theorem1)
     suites = {
         "table1": table1_complexity.run,
@@ -62,6 +62,7 @@ def main() -> None:
         "kernel": kernel_bench.run,
         "roofline": roofline_report.run,
         "restarts": restart_bench.run,
+        "serving": serving_bench.run,
     }
     selected = (args.only.split(",") if args.only else list(suites))
     print("name,us_per_call,derived")

@@ -1,0 +1,128 @@
+"""Serving-path benchmark (ISSUE 8): the AssignmentEngine's batched
+assign kernel vs the host ``stream_assign`` loop it replaced, at the
+acceptance shape n_queries=32768, p=512, k=64 (the PR 4 standard shape
+with the roles flipped: medoids are the batch, queries are the rows).
+
+Records:
+
+  serving/assign/engine_32768x512x64      us_per_call = one full pass
+      derived: us_per_query, qps, p50_us/p95_us (per-micro-batch wall
+      latency from the engine's StepTimer, warmup excluded),
+      speedup_vs_loop (>= 1.0 is the ISSUE 8 acceptance bar —
+      tools/bench_compare.py holds it as an absolute gate, not
+      machine-normalised: both sides ran on the same machine).
+  serving/assign/stream_loop_32768x512x64 the replaced path, same shape.
+
+Labels and d1 are asserted *bitwise* equal between the two paths
+in-bench (AssertionError surfaces via run.py): the engine's whole claim
+is throughput, not answers. ``smoke=True`` drops to best-of-1 timing and
+adds an interpret-backend end-to-end engine check at a small shape (the
+kernel-lane fail-fast net; the timed records stay at the full shape so
+the committed BENCH_PR8.json carries the acceptance numbers).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_line
+from repro.core import MedoidSelector, streaming
+from repro.serving import AssignmentEngine
+
+N_QUERIES, P, K = 32_768, 512, 64
+MICRO_BATCH = 4096
+
+
+def _synthetic_selector(x: np.ndarray, k: int, *,
+                        backend: str = "auto") -> MedoidSelector:
+    """A fitted-shaped selector without paying for a fit: the engine only
+    reads the fitted artifacts (medoids_, est_objective_, config)."""
+    sel = MedoidSelector(k=k, metric="l1", backend=backend)
+    sel.medoids_ = x[:k].copy()
+    sel.medoid_indices_ = np.arange(k, dtype=np.int32)
+    sel.est_objective_ = 1.0
+    sel.n_swaps_ = 0
+    return sel
+
+
+def _time_pass(fn, reps: int) -> tuple[float, tuple]:
+    """Best-of-reps wall seconds for one full pass (after the caller's
+    warmup call), plus the last result for the bitwise check."""
+    best, out = float("inf"), None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def _smoke_interpret_check(lines: list) -> None:
+    """End-to-end engine on the interpret backend at a small shape:
+    labels must match the ref backend exactly (cross-backend the d1
+    contract is labels, not bits — DESIGN.md §9)."""
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((300, 24)).astype(np.float32)
+    labels = {}
+    for backend in ("ref", "interpret"):
+        eng = AssignmentEngine.from_selector(
+            _synthetic_selector(x, 8, backend=backend),
+            micro_batch=128, auto_refit=False)
+        labels[backend], _ = eng.assign(x)
+    assert np.array_equal(labels["ref"], labels["interpret"]), \
+        "serving engine labels diverged across backends"
+    lines.append(csv_line("serving/assign/interpret_e2e", 0.0, "check=ok"))
+
+
+def run(smoke: bool = False) -> list[str]:
+    lines: list[str] = []
+    reps = 1 if smoke else 3
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((N_QUERIES, P)).astype(np.float32)
+    shape = f"{N_QUERIES}x{P}x{K}"
+
+    sel = _synthetic_selector(x, K)
+    eng = AssignmentEngine.from_selector(sel, micro_batch=MICRO_BATCH,
+                                         auto_refit=False, warmup=1)
+    eng.assign(x)                       # compile + warm
+    t_eng, (l_eng, d_eng) = _time_pass(lambda: eng.assign(x), reps)
+
+    # The replaced path: host loop over eager stream_assign calls, same
+    # micro-batching (per-call trace + dispatch is exactly the overhead
+    # the engine's cached donated jit removes).
+    b = jnp.asarray(sel.medoids_)
+
+    def loop():
+        labels = np.empty((N_QUERIES,), np.int32)
+        d1 = np.empty((N_QUERIES,), np.float32)
+        for s in range(0, N_QUERIES, MICRO_BATCH):
+            la, da = streaming.stream_assign(
+                jnp.asarray(x[s:s + MICRO_BATCH]), b, metric=sel.metric,
+                backend=sel.backend)
+            labels[s:s + MICRO_BATCH] = np.asarray(la)
+            d1[s:s + MICRO_BATCH] = np.asarray(da)
+        return labels, d1
+
+    loop()                              # warm its compile cache too
+    t_loop, (l_loop, d_loop) = _time_pass(loop, reps)
+
+    assert np.array_equal(l_eng, l_loop) and np.array_equal(
+        d_eng.view(np.uint32), d_loop.view(np.uint32)), \
+        "serving engine diverged from the stream_assign loop"
+
+    lat = eng.timer.summary()
+    lines.append(csv_line(
+        f"serving/assign/engine_{shape}", t_eng * 1e6,
+        f"us_per_query={t_eng*1e6/N_QUERIES:.2f} "
+        f"qps={N_QUERIES/t_eng:.0f} "
+        f"p50_us={lat['p50']*1e6:.0f} p95_us={lat['p95']*1e6:.0f} "
+        f"micro_batch={MICRO_BATCH} speedup_vs_loop={t_loop/t_eng:.2f}x"))
+    lines.append(csv_line(
+        f"serving/assign/stream_loop_{shape}", t_loop * 1e6,
+        f"us_per_query={t_loop*1e6/N_QUERIES:.2f} "
+        f"qps={N_QUERIES/t_loop:.0f} micro_batch={MICRO_BATCH}"))
+
+    if smoke:
+        _smoke_interpret_check(lines)
+    return lines

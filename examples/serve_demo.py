@@ -1,13 +1,14 @@
-"""Batched serving demo + OBP prompt clustering.
+"""k-medoids assignment serving demo (DESIGN.md §9).
 
     PYTHONPATH=src python examples/serve_demo.py
 
-Serves a small gemma2-family model with the KV-cache engine (prefill +
-batched greedy decode), then clusters the prompt embeddings with
-OneBatchPAM — the serving-side use: route prompts to k representative
-"canonical prompts" (prefix-cache seeding / load balancing).
+Embeds a pool of prompts with a small gemma2-family model, fits
+OneBatchPAM medoids on the embeddings, then serves nearest-medoid
+assignment through the AssignmentEngine — the serving-side use: route
+each incoming prompt to one of k representative "canonical prompts"
+(prefix-cache seeding / load balancing). Ends by drifting the query
+stream and letting the engine's monitor trigger a warm-start refit.
 """
-import dataclasses
 import time
 
 import jax
@@ -17,42 +18,51 @@ import numpy as np
 from repro.configs import get, reduced
 from repro.core import MedoidSelector
 from repro.models import transformer
-from repro.serving import Engine
-from repro.training import init_train_state, OptConfig
+from repro.serving import AssignmentEngine
 
 
 def main():
     cfg = reduced(get("gemma2-27b"))
     params = transformer.init_lm(jax.random.PRNGKey(0), cfg)
-    eng = Engine(cfg, params, max_len=96)
 
-    B, S0, NEW = 8, 16, 24
-    prompts = np.random.default_rng(0).integers(
-        0, cfg.vocab_size, size=(B, S0)).astype(np.int32)
-
-    t0 = time.perf_counter()
-    out = eng.generate(prompts, NEW)
-    dt = time.perf_counter() - t0
-    print(f"generated {B} x {NEW} tokens in {dt:.1f}s "
-          f"({B * NEW / dt:.1f} tok/s on CPU)")
-    assert out.shape == (B, S0 + NEW)
-    print("sample continuation ids:", out[0, S0:S0 + 10].tolist())
-
-    # prompt clustering for cache routing
     @jax.jit
     def embed(tokens):
         feats, _ = transformer.forward(params, cfg, tokens, features=True,
                                        remat=False)
         return feats.mean(axis=1)
 
+    S0 = 16
     pool = np.random.default_rng(1).integers(
         0, cfg.vocab_size, size=(512, S0)).astype(np.int32)
     embs = np.asarray(embed(jnp.asarray(pool)))
+
     sel = MedoidSelector(k=8, variant="nniw", seed=0).fit(embs)
-    routes = sel.predict(embs)
-    print(f"prompt pool of {len(pool)} routed to {len(set(routes))} "
-          f"canonical prompts; route sizes: "
+    eng = AssignmentEngine.from_selector(sel, micro_batch=256,
+                                         drift_threshold=1.05,
+                                         refit_window=4096)
+
+    t0 = time.perf_counter()
+    routes, d1 = eng.assign(embs)
+    dt = time.perf_counter() - t0
+    print(f"routed {len(pool)} prompts to {len(set(routes.tolist()))} "
+          f"canonical prompts in {dt * 1e3:.1f} ms "
+          f"({len(pool) / dt:.0f} qps on CPU); route sizes: "
           f"{np.bincount(routes, minlength=8).tolist()}")
+
+    # Drift the stream: new prompts from a shifted distribution push the
+    # assignment objective above the fit-time estimate, the monitor arms
+    # a background refit warm-started from the live medoids, and the new
+    # medoid snapshot swaps in atomically under the serving loop.
+    drifted = embs + np.float32(3.0)
+    for _ in range(8):
+        eng.assign(drifted)
+    while eng.refit_in_flight:
+        time.sleep(0.05)
+    s = eng.stats()
+    print(f"after drift: medoid_version={s['medoid_version']} "
+          f"refits={s['refits']} drift_ratio={s['drift_ratio']:.3f} "
+          f"p50={s['latency']['p50'] * 1e3:.2f} ms "
+          f"p95={s['latency']['p95'] * 1e3:.2f} ms")
 
 
 if __name__ == "__main__":

@@ -58,6 +58,25 @@ NP_METRICS = {
 }
 
 
+def assign(x: np.ndarray, medoids: np.ndarray,
+           metric: str = "l1") -> tuple[np.ndarray, np.ndarray]:
+    """Nearest-medoid top-1, pure numpy: ``(labels, d1)`` of shapes
+    (n,) i32 / (n,) f32, lowest-index tie-break (``np.argmin``).
+
+    The framework-free mirror of ``ops.assign`` / ``ref.assign`` —
+    independent ground truth for the serving path's differential suite
+    (tests/test_assign.py pins label equality and distance closeness
+    against the jax chain, same tolerance discipline as
+    tests/test_baseline_metrics.py).
+    """
+    if metric not in NP_METRICS:
+        raise ValueError(
+            f"unknown metric {metric!r}; options {tuple(NP_METRICS)}")
+    d = NP_METRICS[metric](np.asarray(x, np.float32),
+                           np.asarray(medoids, np.float32))
+    return d.argmin(1).astype(np.int32), d.min(1).astype(np.float32)
+
+
 @dataclasses.dataclass
 class Oracle:
     """Dataset + metric wrapper counting pairwise dissimilarity evaluations."""

@@ -72,7 +72,9 @@ class SolveReport:
     is a double). ``fallbacks``/``violations`` record the degradation
     ladder's firings; ``checkpoint_writes`` the persisted steps;
     ``timer`` the per-sweep wall times (``timer.summary()`` has
-    p50/p95/max and the straggler count); ``election`` the restart
+    p50/p95/max over the steady steps, with ``count``/``warmup_excluded``
+    naming exactly that population, plus the straggler count);
+    ``election`` the restart
     winner (None for a single restart). ``resumed_from`` is the sweep a
     ``resume="auto"`` run continued from (None = fresh start).
     """

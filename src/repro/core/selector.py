@@ -157,11 +157,16 @@ class MedoidSelector:
         return self
 
     def predict(self, x) -> np.ndarray:
+        # block_dtype is threaded, matching fit(): a selector configured
+        # for bf16 tiles serves bf16 assignment too (rounded tiles, f32
+        # accumulation — DESIGN.md §2; it used to be silently dropped
+        # here, so predict() ran f32 regardless of config).
         if self.medoids_ is None:
             raise RuntimeError("call fit() first")
         labels, _ = streaming.stream_assign(
             jnp.asarray(x), jnp.asarray(self.medoids_), metric=self.metric,
-            backend=self.backend, chunk_size=self.chunk_size)
+            backend=self.backend, chunk_size=self.chunk_size,
+            block_dtype=self.block_dtype)
         return np.asarray(labels)
 
     def objective(self, x) -> float:
@@ -170,7 +175,83 @@ class MedoidSelector:
         return float(solver.objective(jnp.asarray(x),
                                       jnp.asarray(self.medoid_indices_),
                                       metric=self.metric, backend=self.backend,
-                                      chunk_size=self.chunk_size))
+                                      chunk_size=self.chunk_size,
+                                      block_dtype=self.block_dtype))
+
+    # ------------------------------------------------------- warm start --
+
+    def warm_init(self, x) -> np.ndarray:
+        """Map the fitted medoid rows onto *rows of x*: a (k,) index
+        vector warm-starting a solve on x from the live medoid set.
+
+        Each medoid snaps to its nearest row of x (one ``stream_assign``
+        with the roles reversed — medoids are the queries). Two medoids
+        may snap to the same row when x drifted; duplicates are repaired
+        greedily in slot order (first slot keeps the row, later slots
+        take their nearest *untaken* row), so the result is always k
+        distinct indices — the solver's init contract.
+        """
+        if self.medoids_ is None:
+            raise RuntimeError("call fit() first")
+        x = np.asarray(x)
+        if len(x) < self.k:
+            raise ValueError(
+                f"warm_init needs at least k={self.k} rows to pick distinct "
+                f"indices from; got n={len(x)}")
+        xj = jnp.asarray(x)
+        med = jnp.asarray(self.medoids_)
+        nearest, _ = streaming.stream_assign(
+            med, xj, metric=self.metric, backend=self.backend,
+            chunk_size=self.chunk_size)
+        init = np.asarray(nearest, np.int64).copy()
+        taken = set()
+        for slot, row in enumerate(init):
+            if int(row) not in taken:
+                taken.add(int(row))
+                continue
+            # O(n·p) repair per colliding slot (rare: drift has to fold
+            # two medoids onto one row): full distance row, mask taken.
+            from repro.kernels import ops
+            d = np.array(ops.pairwise_distance(
+                med[slot][None, :], xj, metric=self.metric,
+                backend=self.backend)[0])
+            d[list(taken)] = np.inf
+            init[slot] = int(d.argmin())
+            taken.add(int(init[slot]))
+        return init.astype(np.int32)
+
+    def refit(self, x) -> "MedoidSelector":
+        """Re-fit on (drifted) data, warm-starting from the live medoid
+        set instead of a random init — the serving engine's background
+        refit entry (DESIGN.md §9).
+
+        The fitted medoids snap onto rows of x (:meth:`warm_init`) and
+        the solve starts there (``one_batch_pam(init_idx=...)``): near a
+        local optimum, steepest descent pays only for the swaps the
+        drift actually caused (FasterPAM's warm-start discipline) —
+        tests/test_serving.py pins ≤ the cold objective in fewer sweeps.
+        Restarts and the robustness knobs are bypassed (warm start *is*
+        the init choice; ``solver.one_batch_pam`` rejects composing
+        them), everything else (metric, strategy, m, block_dtype, ...)
+        comes from this instance's config.
+        """
+        if self.medoids_ is None:
+            raise RuntimeError("call fit() first — refit() warm-starts "
+                               "from the fitted medoids")
+        xj = jnp.asarray(x)
+        res, _ = solver.one_batch_pam(
+            jax.random.PRNGKey(self.seed), xj, self.k, m=self.m,
+            variant=self.variant, metric=self.metric,
+            strategy=self.strategy, max_swaps=self.max_swaps,
+            backend=self.backend, chunk_size=self.chunk_size,
+            block_dtype=self.block_dtype,
+            prune_m=self.prune_m, survivor_frac=self.survivor_frac,
+            init_idx=jnp.asarray(self.warm_init(x)))
+        self.medoid_indices_ = np.asarray(res.medoid_idx)
+        self.medoids_ = np.asarray(xj[res.medoid_idx])
+        self.est_objective_ = float(res.est_objective)
+        self.n_swaps_ = int(res.n_swaps)
+        return self
 
     # ------------------------------------------------ durable artifact --
 

@@ -439,16 +439,20 @@ def solve_eager(
 
 
 def objective(x: jnp.ndarray, medoid_idx: jnp.ndarray, *, metric: str = "l1",
-              backend: str = "auto",
-              chunk_size: int | None = None) -> jnp.ndarray:
+              backend: str = "auto", chunk_size: int | None = None,
+              block_dtype: str | jnp.dtype | None = None) -> jnp.ndarray:
     """Exact k-medoids objective L(M) on the full dataset (Eq. 1 / n).
 
     ``chunk_size`` streams the evaluation in O(chunk * k) memory without
     materialising the (n, k) block (streaming.py, DESIGN.md §4).
+    ``block_dtype`` rounds each distance tile to the narrow dtype before
+    the per-row min, with the mean accumulated in f32 — the stored-block
+    convention in the assignment direction (DESIGN.md §2).
     """
     from repro.core import streaming
     _, dmin = streaming.stream_assign(x, x[medoid_idx], metric=metric,
-                                      backend=backend, chunk_size=chunk_size)
+                                      backend=backend, chunk_size=chunk_size,
+                                      block_dtype=block_dtype)
     return jnp.mean(dmin)
 
 
@@ -476,6 +480,7 @@ def one_batch_pam(
     ckpt_every: int = 1,
     resume: str = "auto",
     return_report: bool = False,
+    init_idx: jnp.ndarray | None = None,
 ) -> tuple[SolveResult, sampling.Batch]:
     """End-to-end OneBatchPAM (Algorithm 1).
 
@@ -489,6 +494,16 @@ def one_batch_pam(
     axes and runs the whole batch build + swap sweep data-parallel under
     shard_map (DESIGN.md §5); the returned batch then has ``d=None`` since
     the block only ever exists shard-wise on the devices.
+    ``init_idx`` (k,) warm-starts the local search from a caller-chosen
+    medoid set instead of the random draw — the serving path's refit
+    entry (``MedoidSelector.refit``, DESIGN.md §9): starting near a
+    local optimum, steepest descent reaches it in the few swaps the
+    drift actually moved, instead of re-climbing from scratch (the
+    FasterPAM warm-start discipline, Schubert & Rousseeuw). The batch
+    draw is unchanged (same ``key_b`` split), so a warm and a cold solve
+    on the same key see the identical batch. Not composed with
+    ``restarts > 1`` (the election exists to pick an init) or the
+    robustness knobs (the runtime owns its init for bitwise resume).
     ``restarts=R > 1`` runs R independent local searches as one vmapped
     program over a pooled R·m column sample and elects the winner on a
     held-out evaluation batch of ``eval_m`` columns (core/restarts.py,
@@ -531,6 +546,22 @@ def one_batch_pam(
     becomes ``(result, batch, report)`` with a
     :class:`runtime.SolveReport` third. Not composed with ``mesh=`` yet.
     """
+    if init_idx is not None:
+        if restarts > 1:
+            raise ValueError(
+                "init_idx warm start and restarts > 1 are mutually "
+                "exclusive: the restart election exists to *choose* an "
+                "init — warm-start a single trajectory instead")
+        if validate != "off" or checkpoint_dir is not None or return_report:
+            raise ValueError(
+                "init_idx is not composed with the fault-tolerant runtime "
+                "yet (the runtime owns its init draw for bitwise resume); "
+                "drop the robustness knobs to warm-start")
+        init_idx = jnp.asarray(init_idx, jnp.int32)
+        if init_idx.shape != (k,):
+            raise ValueError(
+                f"init_idx must have shape ({k},), got {init_idx.shape}")
+
     robust = (validate != "off" or checkpoint_dir is not None
               or return_report)
     if robust:
@@ -581,7 +612,8 @@ def one_batch_pam(
                                        weights=pool.weights[r], d=d_best)
 
     key_b, key_i = jax.random.split(key)
-    init_idx = jax.random.choice(key_i, n, shape=(k,), replace=False)
+    if init_idx is None:
+        init_idx = jax.random.choice(key_i, n, shape=(k,), replace=False)
 
     if mesh is not None:
         from repro.core import distributed

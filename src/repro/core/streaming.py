@@ -262,23 +262,43 @@ def stream_assign(
     metric: str = "l1",
     backend: str = "auto",
     chunk_size: int | None = None,
+    block_dtype: str | jnp.dtype | None = None,
+    skip_prepare: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Nearest-batch assignment without materialising the (n, m) block.
 
     Returns ``(labels, dmin)``: per-row argmin index into b and the
     corresponding distance. This is the O(chunk * m) predict/objective
     path (DESIGN.md §7's memory budget table).
+
+    ``block_dtype`` mirrors ``stream_block``'s stored-block convention
+    for the assignment direction: each chunk's distances are computed in
+    f32, rounded to the narrow dtype, and the argmin/min is taken on the
+    rounded values (the tiles a narrow block would have held), with
+    ``dmin`` returned as the exact f32 upcast — narrow tiles, f32
+    accumulation downstream (DESIGN.md §2). The assign kernel path
+    (ops.assign) applies the identical rounding in-VMEM, so the two stay
+    bitwise-pinned per backend. ``skip_prepare`` is for callers that
+    already hold metric-prepared rows (the serving engine prepares its
+    medoid buffer once per swap, not per query batch).
     """
     _check_chunk(chunk_size)
     n = x.shape[0]
     spec = metrics.get(metric)
-    if spec.prepare is not None:  # once, outside the loop (see stream_block)
+    if spec.prepare is not None and not skip_prepare:
+        # once, outside the loop (see stream_block)
         x = spec.prepare(x)
         b = spec.prepare(b)
 
     def pair(xi):
-        return spec.finalize(ops.pairwise_raw(
+        d = spec.finalize(ops.pairwise_raw(
             xi, b, metric=metric, backend=backend, skip_prepare=True))
+        if block_dtype is not None:
+            # Round then compare in f32: the upcast is exact, so the
+            # argmin/min on the upcasts equals the argmin/min on the
+            # narrow values while dmin comes out f32 for free.
+            d = d.astype(block_dtype).astype(jnp.float32)
+        return d
 
     if chunk_size is None or chunk_size >= n:
         d = pair(x)

@@ -1,10 +1,12 @@
 """Pallas TPU kernels for OneBatchPAM's compute hot spots.
 
 Layout (per repo convention):
-  pairwise.py / swap_gain.py / fused_sweep.py — pl.pallas_call kernels
-      with explicit BlockSpec VMEM tiling (TPU target; interpret=True on
-      CPU). fused_sweep composes pairwise tile math with the swap_gain
-      selection so the (n, m) block never exists (DESIGN.md §2b).
+  pairwise.py / swap_gain.py / fused_sweep.py / assign.py —
+      pl.pallas_call kernels with explicit BlockSpec VMEM tiling (TPU
+      target; interpret=True on CPU). fused_sweep composes pairwise tile
+      math with the swap_gain selection so the (n, m) block never exists
+      (DESIGN.md §2b); assign is its query-side sibling for the serving
+      path (DESIGN.md §9).
   metrics.py — the metric registry: name -> (ref oracle, Pallas kernel,
       tiles + in-kernel tile math, prepare/post transforms, cross-shard
       reduce). DESIGN.md §3.
@@ -14,6 +16,7 @@ Layout (per repo convention):
 from . import metrics  # noqa: F401
 from .metrics import MetricSpec  # noqa: F401
 from .ops import (  # noqa: F401
+    assign,
     fused_swap_select,
     pairwise_distance,
     pairwise_raw,

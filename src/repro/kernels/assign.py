@@ -1,0 +1,139 @@
+"""Batched nearest-medoid top-1 Pallas kernel — the serving hot path
+(DESIGN.md §9).
+
+Assignment is the query-side mirror of the solve-side fused sweep: for a
+query tile X (TN, p) and the medoid rows B (k, p), compute the distance
+tile in VMEM via the metric registry's in-kernel tile math
+(``MetricSpec.tile`` — the exact p-chunk accumulation order of the
+standalone pairwise kernels, DESIGN.md §2b) and reduce each row to its
+top-1 ``(label, d1)``. The (n, k) distance block never reaches HBM: per
+query row only 8 bytes (one i32 label + one f32 distance) are written,
+so the sweep reads O(n·p + k·p) and writes O(n) — the memory profile a
+high-QPS assignment engine needs.
+
+Residency: B uses a constant-index BlockSpec, so the medoid rows are
+DMA'd from HBM once per call and stay VMEM-resident across the whole
+query grid (k·p floats — tiny in the k-medoids regime). k is swept in
+AS_TK-column tiles with a running (min, label) pair accumulated in the
+output refs, so arbitrary k works; the strictly-less update keeps the
+global tie-break at the lowest medoid index, exactly ``jnp.argmin``.
+
+``block_dtype`` (e.g. ``"bfloat16"``) rounds each distance tile to the
+narrow dtype *before* the min/label reduction — the serving analog of
+the PR 2 stored-block convention (tiles narrow, accumulation f32): the
+reduction then sees exactly the values a bf16 block would have held, so
+the kernel stays bitwise ``streaming.stream_assign(block_dtype=...)``.
+The returned d1 is the f32 upcast (exact) of that rounded minimum.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import metrics
+
+AS_TN = 128   # query rows per grid step
+AS_TK = 128   # medoid columns per k-tile (lane-aligned)
+
+# Finite +inf stand-in for masked/padded medoid columns and the running
+# minimum's init, as a python float: jnp constants cannot be closed over
+# by a Pallas kernel body. Far above any finite distance, so padded
+# columns never win the min.
+_BIG = 1e30
+
+
+def _assign_kernel(x_ref, b_ref, d_ref, l_ref, *, k_true, metric,
+                   block_dtype):
+    """One (TN, TK) grid step: distance tile from the query row tile and
+    a slice of the VMEM-resident B -> per-row running (min, label).
+
+    The output refs ignore the k grid index, so the same (TN, 1) tiles
+    are revisited across the k sweep and accumulated in place: init at
+    k-step 0 with +BIG, then a strictly-less merge per step. Labels
+    ascend with the k sweep, and within a tile the first minimal column
+    wins (min over an index where-mask), so the composition equals the
+    global lowest-index argmin — ``jnp.argmin``'s tie-break, which the
+    differential suite pins against ``stream_assign`` ties included.
+    """
+    jk = pl.program_id(1)
+
+    @pl.when(jk == 0)
+    def _init():
+        d_ref[...] = jnp.full_like(d_ref, _BIG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    spec = metrics.get(metric)
+    cols = pl.ds(jk * AS_TK, AS_TK)
+    x = x_ref[...].astype(jnp.float32)                   # (TN, P)
+    bt = b_ref[cols, :].astype(jnp.float32)              # (TK, P) slice
+    d = spec.finalize(spec.tile(x, bt))                  # (TN, TK) distances
+    if block_dtype is not None:
+        # Round to the narrow tile dtype, compare in f32 (the upcast is
+        # exact, so min/equality on the upcasts == min on the narrow
+        # values) — see the module docstring.
+        d = d.astype(block_dtype).astype(jnp.float32)
+    col = jk * AS_TK + jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    d = jnp.where(col < k_true, d, _BIG)
+    tmin = jnp.min(d, axis=1, keepdims=True)             # (TN, 1)
+    tlab = jnp.min(jnp.where(d == tmin, col, jnp.int32(2**30)),
+                   axis=1, keepdims=True)                # first minimal col
+    better = tmin < d_ref[...]
+    l_ref[...] = jnp.where(better, tlab, l_ref[...])
+    d_ref[...] = jnp.where(better, tmin, d_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("k_true", "metric",
+                                             "block_dtype", "interpret"))
+def assign_top1(
+    x: jnp.ndarray,            # (n, p) query rows (prepared, padded)
+    b: jnp.ndarray,            # (k_pad, p) medoid rows (prepared, padded)
+    *,
+    k_true: int,
+    metric: str = "l1",
+    block_dtype: str | None = None,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Nearest-medoid labels + distances: ``(labels, d1)`` of shapes
+    (n, 1) i32 / (n, 1) f32, lowest-index tie-break.
+
+    n must be an AS_TN multiple, k padded to AS_TK, p to the metric
+    tile's ``p_mult`` (ops.assign pads and slices). Padded medoid rows
+    are masked in-kernel (col >= k_true -> +BIG), padded query rows
+    produce garbage rows the caller slices off, and padded p features
+    are zeros — the same operand convention as the pairwise kernels, so
+    the tile values are bit-for-bit the stored block's.
+    """
+    n, p = x.shape
+    kp = b.shape[0]
+    spec = metrics.get(metric)
+    if spec.tile is None:  # pragma: no cover — ops.assign guards first
+        raise ValueError(f"metric {metric!r} has no in-kernel tile math")
+    if p % spec.tile.p_mult:
+        raise ValueError(
+            f"p={p} must be padded to a {spec.tile.p_mult} multiple")
+    grid = (n // AS_TN, kp // AS_TK)
+    d1, labels = pl.pallas_call(
+        functools.partial(_assign_kernel, k_true=k_true, metric=metric,
+                          block_dtype=block_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((AS_TN, p), lambda i, jk: (i, 0)),
+            # Constant index map: one DMA per call, then VMEM-resident
+            # across the whole query grid (the serving engine's medoid
+            # buffer is k·p floats — small by construction).
+            pl.BlockSpec((kp, p), lambda i, jk: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((AS_TN, 1), lambda i, jk: (i, 0)),
+            pl.BlockSpec((AS_TN, 1), lambda i, jk: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, b)
+    return labels, d1

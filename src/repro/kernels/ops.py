@@ -19,7 +19,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from . import fused_sweep as fused_sweep_mod, metrics, swap_gain as swap_gain_mod
+from . import (assign as assign_mod, fused_sweep as fused_sweep_mod, metrics,
+               swap_gain as swap_gain_mod)
 
 
 def _on_tpu() -> bool:
@@ -87,6 +88,67 @@ def pairwise_distance(
     """Distance block between rows of x (n, p) and b (m, p) -> (n, m) f32."""
     spec = metrics.get(metric)
     return spec.finalize(pairwise_raw(x, b, metric=metric, backend=backend))
+
+
+def assign(
+    x: jnp.ndarray,            # (n, p) query rows
+    b: jnp.ndarray,            # (k, p) medoid rows
+    *,
+    metric: str = "l1",
+    backend: str = "auto",
+    block_dtype: str | jnp.dtype | None = None,
+    skip_prepare: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Nearest-medoid top-1: ``(labels, d1)`` of shapes (n,) i32 / (n,)
+    f32 — for every query row, the lowest-index nearest medoid and its
+    distance. The serving hot path (DESIGN.md §9).
+
+    On the kernel path (kernels/assign.py) the (n, k) distance block
+    never reaches HBM: the medoid rows stay VMEM-resident across the
+    whole query grid and each (TN, TK) tile is recomputed from the
+    metric registry's tile math and reduced on-chip to a running
+    (min, label) pair — O(n·p + k·p) read, O(n) written. Labels and d1
+    are bitwise ``ref.assign`` / ``streaming.stream_assign`` on the same
+    backend, ties included (tests/test_assign.py pins it across
+    metrics × dtypes × backends).
+
+    ``block_dtype`` rounds each distance tile to the narrow dtype before
+    the min (f32 accumulation preserved, DESIGN.md §2). ``skip_prepare``
+    is for loop callers (the serving engine) that applied the metric's
+    row transform once, outside the per-batch jit.
+    """
+    from . import ref
+
+    backend = _resolve(backend)
+    spec = metrics.get(metric)
+    if spec.prepare is not None and not skip_prepare:
+        x = spec.prepare(x)
+        b = spec.prepare(b)
+    if block_dtype is not None:
+        block_dtype = jnp.dtype(block_dtype).name   # hashable static arg
+    if backend == "ref":
+        return ref.assign(x, b, metric=metric, block_dtype=block_dtype)
+
+    interpret = backend == "interpret"
+    if spec.tile is None:
+        raise ValueError(
+            f"metric {metric!r} has no in-kernel tile math; register a "
+            "MetricSpec.tile to use the assign kernel path, or run "
+            "with backend='ref'")
+    n = x.shape[0]
+    k = b.shape[0]
+    tn, tk = assign_mod.AS_TN, assign_mod.AS_TK
+    tp = spec.tile.p_mult
+    xp = _pad_to(_pad_to(x, 0, tn), 1, tp)
+    bp = _pad_to(_pad_to(b, 0, tk), 1, tp)
+    # Padded medoid rows are masked in-kernel (col >= k_true -> +BIG, so
+    # a row of zeros can never win the min); padded query rows produce
+    # garbage outputs sliced off here; padded p features are zeros on
+    # both operands (distance contribution 0 for every registered tile).
+    labels, d1 = assign_mod.assign_top1(
+        xp, bp, k_true=k, metric=metric, block_dtype=block_dtype,
+        interpret=interpret)
+    return labels[:n, 0], d1[:n, 0]
 
 
 def swap_gain(

@@ -126,6 +126,34 @@ def pairwise_l2(x: jnp.ndarray, b: jnp.ndarray, *, squared: bool = True) -> jnp.
     return d if squared else jnp.sqrt(d)
 
 
+def assign(
+    x: jnp.ndarray,      # (n, p) query rows (already prepared)
+    b: jnp.ndarray,      # (k, p) medoid rows (already prepared)
+    *,
+    metric: str = "l1",
+    block_dtype: str | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Nearest-medoid top-1 oracle: ``(labels, d1)`` of shapes (n,) i32 /
+    (n,) f32, ``jnp.argmin`` lowest-index tie-break.
+
+    The identical float chain as one ``stream_assign`` chunk — metric
+    ``ref`` on prepared rows, ``finalize``, optional round-trip through
+    the narrow ``block_dtype`` (compare the rounded values, return the
+    exact f32 upcast of the minimum) — so it is the ground truth the
+    assign kernel (kernels/assign.py) must match bitwise per backend.
+    Inputs must already carry the metric's ``prepare`` transform
+    (ops.assign applies it once, outside any loop).
+    """
+    from . import metrics  # deferred: metrics.py imports this module
+
+    spec = metrics.get(metric)
+    d = spec.finalize(spec.ref(x, b))
+    if block_dtype is not None:
+        d = d.astype(block_dtype).astype(jnp.float32)
+    return (jnp.argmin(d, axis=1).astype(jnp.int32),
+            jnp.min(d, axis=1).astype(jnp.float32))
+
+
 def swap_gain(
     d: jnp.ndarray,      # (n, m) weighted distances to the batch
     d1: jnp.ndarray,     # (m,)  distance of batch point j to its nearest medoid

@@ -21,8 +21,8 @@ from repro.configs import SHAPES, cells, get, registry  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models import transformer  # noqa: E402
 from repro.models.sharding import MeshPlan, specs_for_tree  # noqa: E402
-from repro.serving import make_prefill, make_serve_step  # noqa: E402
 from repro.training import OptConfig, make_train_step  # noqa: E402
+from repro.training.trainer import cast_for_compute  # noqa: E402
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                             "artifacts", "dryrun")
@@ -38,6 +38,29 @@ _CACHE_RULES = {
     "m":    [(1, "batch")],
     "enc_out": [(0, "batch")],
 }
+
+
+def make_serve_step(cfg):
+    """decode one token: (params, cache, token (B,), t) -> (logits, cache).
+
+    Lives here (with its only consumer, the dry-run cells) since PR 8:
+    repro.serving now serves the paper's workload — k-medoids assignment
+    (serving.AssignmentEngine) — not LLM decode."""
+
+    def serve_step(params, cache, token, t):
+        pc = cast_for_compute(params, cfg.compute_dtype)
+        return transformer.decode_step(pc, cfg, token, cache, t)
+
+    return serve_step
+
+
+def make_prefill(cfg, max_len: int):
+    def prefill_step(params, tokens, frames=None):
+        pc = cast_for_compute(params, cfg.compute_dtype)
+        return transformer.prefill(pc, cfg, tokens, max_len,
+                                   enc_frames=frames)
+
+    return prefill_step
 
 
 def _cache_specs(cache_shapes, plan):

@@ -33,11 +33,22 @@ class StepTimer:
         self.record(time.perf_counter() - self._t0)
 
     def record(self, dt: float) -> bool:
-        """Returns True if this step is flagged as a straggler."""
+        """Returns True if this step is flagged as a straggler.
+
+        The first post-warmup step *seeds* the steady-state EMA instead
+        of being compared against it: during warmup the EMA holds a
+        compile-step time, so comparing the first real step against it
+        could never flag (compile dwarfs steady steps) *and* the compile
+        value would bleed into the EMA through the decay — every later
+        threshold would be inflated until the decay washed it out.
+        """
         self.count += 1
         self.history.append(dt)
         if self.count <= self.warmup:
             self.ema = dt
+            return False
+        if self.count == self.warmup + 1:
+            self.ema = dt          # seed from the first steady step
             return False
         flagged = dt > self.threshold * self.ema
         if flagged:
@@ -49,18 +60,26 @@ class StepTimer:
         """Wall-time percentiles over the recorded steps, warmup
         excluded when enough post-warmup samples exist (the warmup steps
         are compile time, which would dominate every percentile).
-        ``{"count", "p50", "p95", "max", "mean", "stragglers"}`` —
-        consumed by ``runtime.SolveReport``."""
+        ``count`` is the number of steps the statistics are actually
+        over (it used to report ``self.count`` — warmup included — while
+        p50/p95/mean excluded warmup, so count and percentiles described
+        different populations); ``warmup_excluded`` says how many
+        leading steps were dropped. Keys ``{"count", "warmup_excluded",
+        "p50", "p95", "max", "mean", "stragglers"}`` — consumed by
+        ``runtime.SolveReport`` and the serving engine's stats()."""
         steady = self.history[self.warmup:] or self.history
+        excluded = len(self.history) - len(steady)
         if not steady:
-            return {"count": 0, "p50": 0.0, "p95": 0.0, "max": 0.0,
-                    "mean": 0.0, "stragglers": self.stragglers}
+            return {"count": 0, "warmup_excluded": 0, "p50": 0.0,
+                    "p95": 0.0, "max": 0.0, "mean": 0.0,
+                    "stragglers": self.stragglers}
         xs = sorted(steady)
 
         def pct(q: float) -> float:
             return xs[min(len(xs) - 1, int(q * len(xs)))]
 
-        return {"count": self.count, "p50": pct(0.50), "p95": pct(0.95),
+        return {"count": len(steady), "warmup_excluded": excluded,
+                "p50": pct(0.50), "p95": pct(0.95),
                 "max": xs[-1], "mean": sum(xs) / len(xs),
                 "stragglers": self.stragglers}
 

@@ -1,1 +1,1 @@
-from .engine import Engine, make_prefill, make_serve_step  # noqa: F401
+from .engine import AssignmentEngine  # noqa: F401

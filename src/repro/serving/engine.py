@@ -1,64 +1,346 @@
-"""Serving: prefill + single-token decode steps and a small batched engine.
+"""High-QPS k-medoids assignment serving (DESIGN.md §9).
 
-``make_serve_step``/``make_prefill`` return the pure functions the dry-run
-lowers (decode_32k / long_500k / prefill_32k shapes). ``Engine`` is a
-host-side convenience for the examples: batched greedy generation with a
-fixed cache budget.
+The serving workload for this repo is the paper's own: given a fitted
+medoid set, answer "which medoid, how far" for streams of query rows —
+prompt/embedding clustering, data curation routing, active-learning
+picks. :class:`AssignmentEngine` is the host-side loop around the
+batched nearest-medoid top-1 kernel (``ops.assign``, kernels/assign.py):
+
+  * **Micro-batching** — queries are served in fixed-shape micro-batches
+    (pad the tail, slice the result), so the jitted assign function
+    compiles exactly once per (micro_batch, p) and every call reuses it.
+    The query buffer is *donated* to the jit: the device reuses it
+    in place instead of holding a second (micro_batch, p) allocation.
+  * **Medoid residency** — the metric-prepared (k, p) medoid rows are
+    device-resident across calls and VMEM-resident across each kernel
+    sweep (constant-index BlockSpec — one DMA per call).
+  * **Drift monitor** — an EMA of the per-batch assignment objective
+    (mean d1) is compared against the fit-time ``est_objective_``; when
+    the ratio exceeds ``drift_threshold``, the engine triggers ONE
+    background refit warm-started from the live medoid set
+    (``MedoidSelector.refit`` -> ``solver.one_batch_pam(init_idx=...)``,
+    the FasterPAM warm-start discipline) on a ring buffer of recent
+    query rows.
+  * **Atomic swap** — the refit builds its complete :class:`_Medoids`
+    snapshot off to the side and installs it with a single reference
+    assignment. Serving threads read ``self._model`` exactly once per
+    call, so they see either the old snapshot or the new one, never a
+    torn mix; a refit cancelled (or crashed) mid-flight leaves the old
+    snapshot serving untouched (tests/test_serving.py pins it).
+
+Labels are bitwise ``streaming.stream_assign`` / the numpy mirror in
+``core/baselines.py`` per backend (tests/test_assign.py), so swapping
+the host predict loop for this engine changes throughput, not answers.
 """
 from __future__ import annotations
 
-import dataclasses
+import copy
+import functools
+import threading
+import warnings
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
-from repro.models import transformer
-from repro.training.trainer import cast_for_compute
+# CPU cannot honor buffer donation (XLA:CPU aliasing); the donation is a
+# TPU-path optimisation and the fallback — a copy, exactly what an
+# undonated call does — is correct, so the once-per-compile nag is noise.
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
+
+from repro.core.selector import MedoidSelector
+from repro.kernels import metrics, ops
+from repro.monitoring.metrics import StepTimer
 
 
-def make_serve_step(cfg: ModelConfig):
-    """decode one token: (params, cache, token (B,), t) -> (logits, cache)."""
+class _Medoids:
+    """Immutable snapshot of one medoid generation. Built fully before
+    it is installed; the engine swaps whole snapshots, never fields."""
 
-    def serve_step(params, cache, token, t):
-        pc = cast_for_compute(params, cfg.compute_dtype)
-        return transformer.decode_step(pc, cfg, token, cache, t)
+    __slots__ = ("rows", "prepared", "indices", "est_objective", "version")
 
-    return serve_step
-
-
-def make_prefill(cfg: ModelConfig, max_len: int):
-    def prefill_step(params, tokens, frames=None):
-        pc = cast_for_compute(params, cfg.compute_dtype)
-        return transformer.prefill(pc, cfg, tokens, max_len,
-                                   enc_frames=frames)
-
-    return prefill_step
+    def __init__(self, rows, prepared, indices, est_objective, version):
+        self.rows = rows                    # (k, p) f32 numpy
+        self.prepared = prepared            # (k, p) device array, prepared
+        self.indices = indices              # (k,) i32 numpy (into fit data)
+        self.est_objective = est_objective  # float, fit-time estimate
+        self.version = version              # int, bumps per refit
 
 
-@dataclasses.dataclass
-class Engine:
-    """Batched greedy-decoding engine (host loop) for the examples."""
-    cfg: ModelConfig
-    params: dict
-    max_len: int = 256
+@functools.lru_cache(maxsize=None)
+def _assign_fn(metric: str, backend: str, block_dtype: str | None,
+               micro_batch: int, p: int):
+    """The jitted fixed-shape assign step, one compile per signature.
 
-    def __post_init__(self):
-        self._prefill = jax.jit(make_prefill(self.cfg, self.max_len))
-        self._step = jax.jit(make_serve_step(self.cfg))
+    Prepare runs on the query tile *inside* the jit (row-local, fuses
+    with the kernel launch); the medoid operand arrives pre-prepared
+    (once per snapshot, not per batch). ``donate_argnums=0`` donates the
+    query buffer — it is a fresh host upload every call, so the device
+    may overwrite it freely.
+    """
+    import jax
 
-    def generate(self, prompts: np.ndarray, new_tokens: int,
-                 frames=None) -> np.ndarray:
-        """prompts: (B, S0) int32 -> (B, S0 + new_tokens)."""
-        B, S0 = prompts.shape
-        assert S0 + new_tokens <= self.max_len
-        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
-                                      frames)
-        out = [jnp.argmax(logits, -1)]
-        for i in range(new_tokens - 1):
-            logits, cache = self._step(self.params, cache, out[-1],
-                                       jnp.int32(S0 + i))
-            out.append(jnp.argmax(logits, -1))
-        gen = jnp.stack(out, axis=1)
-        return np.concatenate([prompts, np.asarray(gen)], axis=1)
+    spec = metrics.get(metric)
+
+    def fn(queries, med_prepared):
+        q = spec.prepare(queries) if spec.prepare is not None else queries
+        return ops.assign(q, med_prepared, metric=metric, backend=backend,
+                          block_dtype=block_dtype, skip_prepare=True)
+
+    return jax.jit(fn, donate_argnums=0)
+
+
+class AssignmentEngine:
+    """Serve nearest-medoid assignment at high throughput, with drift
+    detection and background warm-start refit.
+
+    Build one with :meth:`from_selector` (a fitted
+    :class:`MedoidSelector`) or :meth:`from_checkpoint` (a selector
+    ``save()`` artifact). Then::
+
+        labels, d1 = engine.assign(queries)   # (q,) i32, (q,) f32
+        engine.stats()                        # latency + drift + refits
+
+    Knobs: ``micro_batch`` (rows per jitted step), ``drift_threshold``
+    (EMA objective / fit objective ratio that arms a refit),
+    ``drift_decay`` (EMA smoothing), ``refit_window`` (ring-buffer rows
+    the refit trains on; 0 disables buffering and auto-refit),
+    ``auto_refit`` (arm the background refit at all).
+    """
+
+    def __init__(self, selector: MedoidSelector, *, micro_batch: int = 4096,
+                 drift_threshold: float = 1.25, drift_decay: float = 0.9,
+                 refit_window: int = 65536, auto_refit: bool = True,
+                 warmup: int = 1):
+        if selector.medoids_ is None:
+            raise RuntimeError("AssignmentEngine needs a *fitted* selector "
+                               "(call fit() or load a checkpoint)")
+        if micro_batch < 1:
+            raise ValueError(f"micro_batch must be >= 1, got {micro_batch}")
+        self._selector = selector
+        self.metric = selector.metric
+        self.backend = selector.backend
+        self.block_dtype = (None if selector.block_dtype is None
+                            else jnp.dtype(selector.block_dtype).name)
+        self.micro_batch = int(micro_batch)
+        self.k, self.p = np.asarray(selector.medoids_).shape
+        self.drift_threshold = float(drift_threshold)
+        self.drift_decay = float(drift_decay)
+        self.refit_window = int(refit_window)
+        self.auto_refit = bool(auto_refit)
+
+        self._model = self._snapshot(selector, version=0)
+        self._fn = _assign_fn(self.metric, self.backend, self.block_dtype,
+                              self.micro_batch, self.p)
+        self.timer = StepTimer(warmup=warmup)   # per-micro-batch latency
+        self.queries_served = 0
+        self.refits = 0
+        self.last_refit_error: BaseException | None = None
+        self._drift_ema: float | None = None
+        self._window = (np.empty((self.refit_window, self.p), np.float32)
+                        if self.refit_window > 0 else None)
+        self._window_fill = 0
+        self._window_pos = 0
+        self._refit_thread: threading.Thread | None = None
+        self._refit_cancel = threading.Event()
+        self._refit_hook = None       # test seam: runs just before install
+
+    # ------------------------------------------------------ constructors
+
+    @classmethod
+    def from_selector(cls, selector: MedoidSelector,
+                      **kw) -> "AssignmentEngine":
+        return cls(selector, **kw)
+
+    @classmethod
+    def from_checkpoint(cls, path: str, **kw) -> "AssignmentEngine":
+        """Boot straight from a ``MedoidSelector.save()`` artifact — the
+        config and fitted medoids both come from the checkpoint."""
+        return cls(MedoidSelector.from_checkpoint(path), **kw)
+
+    # ---------------------------------------------------------- serving
+
+    def assign(self, queries) -> tuple[np.ndarray, np.ndarray]:
+        """Nearest-medoid labels + distances for query rows (q, p):
+        ``(labels, d1)`` of shapes (q,) i32 / (q,) f32 — index into the
+        *current* medoid snapshot and distance to it. ``q == 0`` returns
+        the empty shapes (the pinned edge contract); a wrong feature
+        width raises."""
+        q = np.asarray(queries, np.float32)
+        if q.ndim != 2:
+            raise ValueError(f"queries must be 2-D (q, p), got {q.shape}")
+        if q.shape[1] != self.p and q.shape[0] != 0:
+            raise ValueError(
+                f"queries have p={q.shape[1]}, engine serves p={self.p}")
+        n = q.shape[0]
+        if n == 0:
+            return (np.zeros((0,), np.int32), np.zeros((0,), np.float32))
+
+        # One read: every micro-batch of this call sees the same snapshot
+        # even if a refit installs a new one mid-call.
+        model = self._model
+        mb = self.micro_batch
+        labels = np.empty((n,), np.int32)
+        d1 = np.empty((n,), np.float32)
+        for s in range(0, n, mb):
+            chunk = q[s:s + mb]
+            rows = chunk.shape[0]
+            if rows < mb:
+                chunk = np.concatenate(
+                    [chunk, np.zeros((mb - rows, self.p), np.float32)])
+            with self.timer, warnings.catch_warnings():
+                # re-assert the module filter: pytest (and any
+                # catch_warnings user) resets the global filter list, and
+                # the nag fires at trace time inside this call
+                warnings.filterwarnings(
+                    "ignore", message="Some donated buffers were not usable")
+                lab, dd = self._fn(jnp.asarray(chunk), model.prepared)
+                lab = np.asarray(lab)       # blocks: the timed latency is
+                dd = np.asarray(dd)         # submit + compute + readback
+            labels[s:s + rows] = lab[:rows]
+            d1[s:s + rows] = dd[:rows]
+        self.queries_served += n
+
+        self._observe(q, float(d1.mean()), model)
+        return labels, d1
+
+    # ---------------------------------------------------- drift + refit
+
+    def _observe(self, q: np.ndarray, batch_objective: float,
+                 model: _Medoids) -> None:
+        if self._window is not None:
+            self._window_push(q)
+        ema = self._drift_ema
+        self._drift_ema = (batch_objective if ema is None else
+                           self.drift_decay * ema +
+                           (1.0 - self.drift_decay) * batch_objective)
+        if (self.auto_refit and self._window is not None
+                and self.drift_ratio() > self.drift_threshold
+                and self._window_fill >= max(4 * self.k, self.micro_batch)
+                and not self.refit_in_flight):
+            self._start_refit(self._window_rows())
+
+    def _window_push(self, q: np.ndarray) -> None:
+        w = self._window.shape[0]
+        take = q[-w:] if q.shape[0] > w else q
+        r = take.shape[0]
+        end = self._window_pos + r
+        if end <= w:
+            self._window[self._window_pos:end] = take
+        else:
+            split = w - self._window_pos
+            self._window[self._window_pos:] = take[:split]
+            self._window[:end - w] = take[split:]
+        self._window_pos = end % w
+        self._window_fill = min(self._window_fill + r, w)
+
+    def _window_rows(self) -> np.ndarray:
+        return self._window[:self._window_fill].copy()
+
+    def drift_ratio(self) -> float:
+        """EMA assignment objective / fit-time estimated objective.
+        ~1.0 = queries look like the fit data; > drift_threshold arms
+        the background refit."""
+        base = self._model.est_objective
+        if self._drift_ema is None or not base or base <= 0:
+            return 1.0
+        return self._drift_ema / base
+
+    @property
+    def refit_in_flight(self) -> bool:
+        t = self._refit_thread
+        return t is not None and t.is_alive()
+
+    def _snapshot(self, sel: MedoidSelector, version: int) -> _Medoids:
+        rows = np.asarray(sel.medoids_, np.float32)
+        spec = metrics.get(self.metric)
+        dev = jnp.asarray(rows)
+        prepared = spec.prepare(dev) if spec.prepare is not None else dev
+        return _Medoids(rows=rows, prepared=prepared,
+                        indices=np.asarray(sel.medoid_indices_, np.int32),
+                        est_objective=float(sel.est_objective_ or 0.0),
+                        version=version)
+
+    def _start_refit(self, x: np.ndarray) -> None:
+        self._refit_cancel.clear()
+        t = threading.Thread(target=self._refit_worker, args=(x,),
+                             name="assignment-engine-refit", daemon=True)
+        self._refit_thread = t
+        t.start()
+
+    def _refit_worker(self, x: np.ndarray) -> None:
+        old = self._model
+        try:
+            # Refit a *copy*: the live selector (and the serving
+            # snapshot derived from it) stays untouched until the new
+            # snapshot is complete. Shallow copy is enough — refit()
+            # replaces the fitted fields, never mutates them in place.
+            sel = copy.copy(self._selector)
+            sel.refit(x)
+            new = self._snapshot(sel, version=old.version + 1)
+            if self._refit_cancel.is_set():
+                return                      # killed: old snapshot serves on
+            if self._refit_hook is not None:
+                self._refit_hook()
+            if self._refit_cancel.is_set():
+                return
+            # The swap: one reference assignment — readers hold either
+            # the old snapshot or this one, never a mix.
+            self._model = new
+            self._selector = sel
+            self._drift_ema = None          # drift restarts vs the new fit
+            self.refits += 1
+        except BaseException as e:          # noqa: BLE001 — report, don't die
+            self.last_refit_error = e
+
+    def refit_now(self, x=None, *, wait: bool = True) -> bool:
+        """Trigger a refit explicitly (on ``x`` or the query window).
+        Returns True if one was started. ``wait`` joins it."""
+        if self.refit_in_flight:
+            if wait:
+                self._refit_thread.join()
+            return False
+        if x is None:
+            if self._window is None or self._window_fill == 0:
+                raise RuntimeError("no refit data: pass x= or serve "
+                                   "queries with refit_window > 0")
+            x = self._window_rows()
+        self._start_refit(np.asarray(x, np.float32))
+        if wait:
+            self._refit_thread.join()
+        return True
+
+    def cancel_refit(self, *, wait: bool = True) -> None:
+        """Kill an in-flight refit: the old medoid snapshot keeps
+        serving; whatever the refit computed is discarded."""
+        self._refit_cancel.set()
+        t = self._refit_thread
+        if wait and t is not None and t.is_alive():
+            t.join()
+
+    # ------------------------------------------------------------ intro
+
+    @property
+    def medoids(self) -> np.ndarray:
+        return self._model.rows
+
+    @property
+    def medoid_version(self) -> int:
+        return self._model.version
+
+    def stats(self) -> dict:
+        """Serving counters + per-micro-batch latency summary (StepTimer
+        percentiles, warmup excluded) + drift state."""
+        return {"queries_served": self.queries_served,
+                "micro_batch": self.micro_batch,
+                "medoid_version": self._model.version,
+                "refits": self.refits,
+                "refit_in_flight": self.refit_in_flight,
+                "last_refit_error": repr(self.last_refit_error)
+                if self.last_refit_error else None,
+                "drift_ema": self._drift_ema,
+                "drift_ratio": self.drift_ratio(),
+                "latency": self.timer.summary()}
+
+    def close(self) -> None:
+        self.cancel_refit(wait=True)

@@ -1,0 +1,163 @@
+"""Differential suite for the nearest-medoid assign kernel (DESIGN.md §9).
+
+The serving path's correctness contract, pinned three ways:
+
+  * ``ops.assign`` is *bitwise* ``streaming.stream_assign`` on the same
+    backend — labels and d1 — across all registered metrics × f32/bf16
+    tiles × ref/interpret backends, ties included (the engine swaps the
+    host predict loop for the kernel; answers must not move).
+  * ``ops.assign`` agrees with the framework-free numpy oracle
+    (``core.baselines.assign``): exact label equality away from ties,
+    distances to the cross-oracle tolerances of
+    tests/test_baseline_metrics.py.
+  * Tie-break = lowest medoid index (``jnp.argmin``), exercised with
+    duplicated medoid rows so the k-tile sweep's cross-tile combine is
+    on the hook, not just the within-tile argmin.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, streaming
+from repro.kernels import metrics, ops
+
+METRICS = sorted(metrics.names())
+BACKENDS = ("ref", "interpret")
+DTYPES = (None, "bfloat16")
+
+# Cross-oracle (numpy vs jax) distance tolerances, per
+# tests/test_baseline_metrics.py precedent: l2's sqrt(maximum(...)) chain
+# amplifies the sqeuclidean cancellation, so it gets the loose bound.
+_RTOL = {"l2": 2e-3}
+_DEF_RTOL = 1e-4
+
+
+def _data(n=300, k=13, p=37, seed=0, dup=True):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, p)).astype(np.float32)
+    b = rng.standard_normal((k, p)).astype(np.float32)
+    if dup:
+        b[7] = b[2]     # exact duplicate rows -> exact distance ties
+    return x, b
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("block_dtype", DTYPES)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_assign_bitwise_vs_stream_assign(metric, block_dtype, backend):
+    """Kernel path == host streaming loop, bit for bit, per backend."""
+    x, b = _data()
+    la, da = streaming.stream_assign(jnp.asarray(x), jnp.asarray(b),
+                                     metric=metric, backend=backend,
+                                     block_dtype=block_dtype)
+    lk, dk = ops.assign(jnp.asarray(x), jnp.asarray(b), metric=metric,
+                        backend=backend, block_dtype=block_dtype)
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lk))
+    np.testing.assert_array_equal(
+        np.asarray(da, np.float32).view(np.uint32),
+        np.asarray(dk).view(np.uint32))
+    assert np.asarray(lk).dtype == np.int32
+    assert np.asarray(dk).dtype == np.float32
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_assign_vs_numpy_oracle(metric, backend):
+    """Framework-free ground truth: labels equal (no ties by
+    construction), distances within the cross-oracle tolerance."""
+    x, b = _data(dup=False)
+    ln, dn = baselines.assign(x, b, metric)
+    lk, dk = ops.assign(jnp.asarray(x), jnp.asarray(b), metric=metric,
+                        backend=backend)
+    np.testing.assert_array_equal(ln, np.asarray(lk))
+    np.testing.assert_allclose(dn, np.asarray(dk),
+                               rtol=_RTOL.get(metric, _DEF_RTOL), atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("block_dtype", DTYPES)
+def test_assign_tie_break_lowest_index(backend, block_dtype):
+    """Queries placed exactly on a duplicated medoid row must label to
+    the *lower* duplicate index — jnp.argmin's tie-break — including
+    across k-tiles (the duplicate pair straddles the AS_TK=128 tile
+    boundary, so the cross-tile strict-less combine is what's tested)."""
+    rng = np.random.default_rng(3)
+    k = 140                                  # > one k-tile
+    b = rng.standard_normal((k, 16)).astype(np.float32)
+    b[130] = b[5]                            # duplicates in different tiles
+    b[60] = b[20]                            # duplicates in the same tile
+    x = np.stack([b[130], b[60], b[5] + 0.25])
+    labels, _ = ops.assign(jnp.asarray(x), jnp.asarray(b), metric="l1",
+                           backend=backend, block_dtype=block_dtype)
+    labels = np.asarray(labels)
+    assert labels[0] == 5                    # cross-tile tie -> lower index
+    assert labels[1] == 20                   # within-tile tie -> lower index
+
+
+@pytest.mark.parametrize("shape", [(1, 1, 1), (127, 3, 5), (129, 128, 8),
+                                   (256, 200, 513)])
+def test_assign_ragged_shapes(shape):
+    """Padding contract: every non-multiple (n, k, p) slices back clean,
+    and padded medoid rows (zeros — distance-to-origin can be small!)
+    never win the min."""
+    n, k, p = shape
+    rng = np.random.default_rng(n + k + p)
+    # Rows far from the origin, so an unmasked zero-padded medoid row
+    # WOULD win the min — the masking is what this test bites on.
+    x = (rng.standard_normal((n, p)) + 50.0).astype(np.float32)
+    b = (rng.standard_normal((k, p)) + 50.0).astype(np.float32)
+    la, da = streaming.stream_assign(jnp.asarray(x), jnp.asarray(b),
+                                     metric="l1", backend="interpret")
+    lk, dk = ops.assign(jnp.asarray(x), jnp.asarray(b), metric="l1",
+                        backend="interpret")
+    assert np.asarray(lk).shape == (n,) and np.asarray(dk).shape == (n,)
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lk))
+    np.testing.assert_array_equal(
+        np.asarray(da, np.float32).view(np.uint32),
+        np.asarray(dk).view(np.uint32))
+    assert np.asarray(lk).max() < k
+
+
+def test_assign_chunked_stream_matches_kernel():
+    """stream_assign's chunked sweep and the kernel agree bitwise (both
+    row-local; the serving bench compares exactly these two paths)."""
+    x, b = _data(n=500, k=9, p=24, seed=7)
+    la, da = streaming.stream_assign(jnp.asarray(x), jnp.asarray(b),
+                                     metric="l1", backend="interpret",
+                                     chunk_size=128)
+    lk, dk = ops.assign(jnp.asarray(x), jnp.asarray(b), metric="l1",
+                        backend="interpret")
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lk))
+    np.testing.assert_array_equal(
+        np.asarray(da, np.float32).view(np.uint32),
+        np.asarray(dk).view(np.uint32))
+
+
+def test_assign_block_dtype_rounds_distances():
+    """bf16 tiles actually round: d1 values are representable in bf16
+    (the f32 upcast is exact), and differ from the f32 path somewhere."""
+    x, b = _data(n=200, k=8, p=33, seed=11, dup=False)
+    _, d32 = ops.assign(jnp.asarray(x), jnp.asarray(b), metric="l1",
+                        backend="ref")
+    _, d16 = ops.assign(jnp.asarray(x), jnp.asarray(b), metric="l1",
+                        backend="ref", block_dtype="bfloat16")
+    d16 = np.asarray(d16)
+    round_trip = d16.astype(jnp.bfloat16).astype(np.float32)
+    np.testing.assert_array_equal(d16, round_trip)
+    assert not np.array_equal(d16, np.asarray(d32))
+
+
+def test_assign_unregistered_tile_math_raises():
+    """A metric without MetricSpec.tile gets the same actionable error
+    as the fused sweep, not a kernel-side crash."""
+    import dataclasses
+    x, b = _data(n=128, k=4, p=8, dup=False)
+    spec = metrics.get("l1")
+    try:
+        metrics._REGISTRY["_notile"] = dataclasses.replace(
+            spec, name="_notile", tile=None)
+        with pytest.raises(ValueError, match="tile"):
+            ops.assign(jnp.asarray(x), jnp.asarray(b), metric="_notile",
+                       backend="interpret")
+    finally:
+        metrics._REGISTRY.pop("_notile", None)

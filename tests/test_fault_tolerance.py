@@ -114,17 +114,44 @@ def test_straggler_detection():
     assert t.stragglers == 1
 
 
+def test_steptimer_first_steady_step_seeds_ema():
+    """The first post-warmup record seeds the steady EMA instead of
+    being judged against the compile-step EMA the warmup left behind:
+    a fast first real step must not poison the EMA with compile time
+    (which would inflate every later threshold), and must never be
+    flagged itself."""
+    t = StepTimer(warmup=2, threshold=2.0)
+    t.record(30.0)                    # compile
+    t.record(25.0)                    # compile
+    assert t.record(0.1) is False     # seeds, not compared vs ema=25
+    assert t.ema == 0.1               # compile time fully displaced
+    # a genuine straggler right after the seed is caught (under the old
+    # compile-seeded EMA, 0.3 vs 2*25 could never flag)
+    assert t.record(0.3) is True
+    assert t.stragglers == 1
+
+
 def test_steptimer_summary_excludes_warmup():
     t = StepTimer(warmup=2, threshold=100.0)
     for dt in (9.0, 9.0, 0.1, 0.2, 0.3, 0.4):   # 2 compile-ish outliers
         t.record(dt)
     s = t.summary()
-    assert s["count"] == 6
+    # count now describes the same population as the percentiles
+    # (steady steps only), with the dropped warmup reported explicitly.
+    assert s["count"] == 4
+    assert s["warmup_excluded"] == 2
     assert s["max"] == 0.4            # warmup steps out of the stats
     assert 0.1 <= s["p50"] <= s["p95"] <= s["max"]
     assert s["stragglers"] == 0
     empty = StepTimer().summary()
     assert empty["count"] == 0 and empty["p50"] == 0.0
+    assert empty["warmup_excluded"] == 0
+    # fewer records than warmup: stats fall back to the full history,
+    # so count matches what the percentiles were computed over
+    short = StepTimer(warmup=3)
+    short.record(1.0)
+    s = short.summary()
+    assert s["count"] == 1 and s["warmup_excluded"] == 0
 
 
 def test_csvlogger_quotes_and_flushes(tmp_path):

@@ -1,0 +1,241 @@
+"""AssignmentEngine serving-path suite (DESIGN.md §9).
+
+Pins the engine's shape/answer contracts (empty batch, micro-batch
+invariance, bitwise agreement with the predict path), the bf16 serving
+opt-in (block_dtype threading that predict()/objective() used to drop),
+the drift monitor -> background warm-start refit loop, the no-torn-swap
+guarantee when a refit is killed mid-flight, and the warm-start claim
+itself: a refit from saved medoids reaches <= the cold-start objective
+in strictly fewer sweeps.
+"""
+import copy
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MedoidSelector, solver, streaming
+from repro.serving import AssignmentEngine
+
+
+def _clusters(n=600, k=6, p=12, sep=8.0, noise=0.3, seed=0):
+    """Well-separated Gaussian blobs: label decisions are robust to bf16
+    rounding and to medoid drift within a blob."""
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((k, p)).astype(np.float32) * sep
+    x = (centers[rng.integers(0, k, n)]
+         + rng.standard_normal((n, p)).astype(np.float32) * noise)
+    return x
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    x = _clusters()
+    sel = MedoidSelector(k=6, seed=0).fit(x)
+    return x, sel
+
+
+def test_empty_batch_shape_contract(fitted):
+    """Zero queries -> ((0,) i32, (0,) f32), no kernel launch, no crash
+    (the old LLM engine's new_tokens=0 sibling bug: it returned S0+1
+    tokens because the prefill argmax was stacked unconditionally)."""
+    _, sel = fitted
+    eng = AssignmentEngine.from_selector(sel, auto_refit=False)
+    labels, d1 = eng.assign(np.zeros((0, eng.p), np.float32))
+    assert labels.shape == (0,) and labels.dtype == np.int32
+    assert d1.shape == (0,) and d1.dtype == np.float32
+    # a zero-row array of any width is accepted (there is nothing to
+    # misinterpret), but a nonzero batch with the wrong width raises
+    labels, d1 = eng.assign(np.zeros((0, 3), np.float32))
+    assert labels.shape == (0,)
+    with pytest.raises(ValueError, match="p="):
+        eng.assign(np.zeros((4, eng.p + 1), np.float32))
+    with pytest.raises(ValueError, match="2-D"):
+        eng.assign(np.zeros((8,), np.float32))
+
+
+def test_engine_bitwise_vs_predict_path(fitted):
+    """The engine answers exactly what the host predict loop answers —
+    swapping in the serving path changes throughput, not labels."""
+    x, sel = fitted
+    eng = AssignmentEngine.from_selector(sel, micro_batch=128,
+                                         auto_refit=False)
+    labels, d1 = eng.assign(x)
+    np.testing.assert_array_equal(labels, sel.predict(x))
+    _, dref = streaming.stream_assign(jnp.asarray(x),
+                                      jnp.asarray(sel.medoids_),
+                                      metric=sel.metric, backend=sel.backend)
+    np.testing.assert_array_equal(d1.view(np.uint32),
+                                  np.asarray(dref).view(np.uint32))
+
+
+def test_micro_batch_invariance(fitted):
+    """Identical answers for any micro_batch (the tail pad is sliced,
+    per-row math is batch-size independent)."""
+    x, sel = fitted
+    outs = []
+    for mb in (64, 100, len(x), 4 * len(x)):
+        eng = AssignmentEngine.from_selector(sel, micro_batch=mb,
+                                             auto_refit=False)
+        outs.append(eng.assign(x))
+    for labels, d1 in outs[1:]:
+        np.testing.assert_array_equal(labels, outs[0][0])
+        np.testing.assert_array_equal(d1.view(np.uint32),
+                                      outs[0][1].view(np.uint32))
+
+
+def test_bf16_vs_f32_label_agreement_on_separated_clusters(fitted):
+    """Satellite: block_dtype now reaches predict()/objective() (it used
+    to be dropped). On separated clusters bf16 tile rounding cannot flip
+    a label; the bf16 selector/engine agree with f32 while the bf16
+    distances really are rounded."""
+    x, sel = fitted
+    sel16 = copy.copy(sel)
+    sel16.block_dtype = "bfloat16"
+    np.testing.assert_array_equal(sel16.predict(x), sel.predict(x))
+
+    # objective() threads it too: bitwise the solver objective with the
+    # same block_dtype, and != the f32 objective (rounding is real)
+    obj16 = sel16.objective(x)
+    assert obj16 == float(solver.objective(
+        jnp.asarray(x), jnp.asarray(sel.medoid_indices_), metric=sel.metric,
+        backend=sel.backend, block_dtype="bfloat16"))
+    assert obj16 != sel.objective(x)
+
+    eng16 = AssignmentEngine.from_selector(sel16, auto_refit=False)
+    assert eng16.block_dtype == "bfloat16"
+    labels16, d16 = eng16.assign(x)
+    np.testing.assert_array_equal(labels16, sel.predict(x))
+    np.testing.assert_array_equal(
+        d16, d16.astype(jnp.bfloat16).astype(np.float32))
+
+
+def test_drift_monitor_triggers_auto_refit(fitted):
+    """Drifted queries push the objective EMA past the threshold; the
+    engine refits in the background (warm-started from the live medoids
+    on the query window) and atomically installs the new snapshot."""
+    x, sel = fitted
+    eng = AssignmentEngine.from_selector(copy.copy(sel), micro_batch=256,
+                                         drift_threshold=1.2,
+                                         refit_window=4096)
+    eng.assign(x)
+    assert eng.medoid_version == 0 and eng.refits == 0
+    assert eng.drift_ratio() == pytest.approx(1.0, rel=0.5)
+
+    drifted = x + np.float32(5.0)
+    for _ in range(12):
+        eng.assign(drifted)
+        if eng.refit_in_flight or eng.refits:
+            break
+    deadline = time.time() + 120
+    while eng.refit_in_flight and time.time() < deadline:
+        time.sleep(0.02)
+    assert eng.last_refit_error is None
+    assert eng.refits == 1 and eng.medoid_version == 1
+    # serving continues against the new snapshot; drift is healed
+    labels, d1 = eng.assign(drifted)
+    assert labels.shape == (len(x),)
+    eng.assign(drifted)
+    assert eng.drift_ratio() < 1.2
+    s = eng.stats()
+    assert s["medoid_version"] == 1 and s["refits"] == 1
+    assert s["latency"]["count"] >= 1 and "warmup_excluded" in s["latency"]
+
+
+def test_kill_during_refit_leaves_old_medoids_serving(fitted):
+    """No torn swap: a refit cancelled right before the install leaves
+    the engine serving the OLD snapshot in full — medoids, version, and
+    answers — and a crashed refit is reported, not installed."""
+    x, sel = fitted
+    eng = AssignmentEngine.from_selector(copy.copy(sel), auto_refit=False)
+    before_labels, before_d1 = eng.assign(x)
+    old_rows = eng.medoids.copy()
+
+    # "kill" lands between the refit's compute and its install
+    eng._refit_hook = lambda: eng._refit_cancel.set()
+    assert eng.refit_now(x + np.float32(5.0), wait=True)
+    assert eng.medoid_version == 0 and eng.refits == 0
+    assert eng.last_refit_error is None
+    np.testing.assert_array_equal(eng.medoids, old_rows)
+    labels, d1 = eng.assign(x)
+    np.testing.assert_array_equal(labels, before_labels)
+    np.testing.assert_array_equal(d1.view(np.uint32),
+                                  before_d1.view(np.uint32))
+
+    # a refit that *crashes* mid-flight: old snapshot intact, error kept
+    def boom():
+        raise RuntimeError("refit died")
+    eng._refit_hook = boom
+    eng._refit_cancel.clear()
+    eng.refit_now(x, wait=True)
+    assert eng.medoid_version == 0
+    assert isinstance(eng.last_refit_error, RuntimeError)
+    np.testing.assert_array_equal(eng.medoids, old_rows)
+
+
+def test_warm_start_refit_beats_cold_start(fitted, tmp_path):
+    """The FasterPAM warm-start claim, through the saved artifact: a
+    selector restored from save() and refit on drifted data reaches <=
+    the cold-start objective in strictly fewer sweeps."""
+    x, sel = fitted
+    rng = np.random.default_rng(42)
+    drifted = x + rng.standard_normal(x.shape).astype(np.float32) * 0.15
+
+    path = str(tmp_path / "sel_ckpt")
+    sel.save(path)
+    warm = MedoidSelector.from_checkpoint(path)
+    warm.refit(drifted)
+
+    cold = MedoidSelector(k=sel.k, seed=sel.seed).fit(drifted)
+    assert warm.objective(drifted) <= cold.objective(drifted) + 1e-6
+    assert warm.n_swaps_ < cold.n_swaps_
+
+
+def test_refit_requires_fit_and_warm_init_repairs_collisions(fitted):
+    x, sel = fitted
+    with pytest.raises(RuntimeError, match="fit"):
+        MedoidSelector(k=3).refit(x)
+    # collision repair: exactly k rows, but the last two sit far away so
+    # several medoids snap to the same near row — the greedy repair must
+    # still hand back a permutation of all k rows
+    p = sel.medoids_.shape[1]
+    tiny = np.concatenate([sel.medoids_[:4],
+                           np.full((2, p), 1e3, np.float32)])
+    tiny[5] += 7.0                       # keep the two far rows distinct
+    init = sel.warm_init(tiny)
+    assert init.shape == (sel.k,)
+    assert sorted(init.tolist()) == list(range(sel.k))
+    # fewer rows than k cannot produce distinct indices -> refused
+    with pytest.raises(ValueError, match="distinct"):
+        sel.warm_init(tiny[:3])
+
+
+def test_engine_from_checkpoint_serves_identically(fitted, tmp_path):
+    x, sel = fitted
+    path = str(tmp_path / "sel_ckpt2")
+    sel.save(path)
+    a = AssignmentEngine.from_selector(sel, auto_refit=False)
+    b = AssignmentEngine.from_checkpoint(path, auto_refit=False)
+    la, da = a.assign(x)
+    lb, db = b.assign(x)
+    np.testing.assert_array_equal(la, lb)
+    np.testing.assert_array_equal(da.view(np.uint32), db.view(np.uint32))
+
+
+def test_solver_init_idx_contract():
+    """one_batch_pam(init_idx=...): validated, honored, and fenced off
+    from restarts/runtime composition."""
+    import jax
+    x = jnp.asarray(_clusters(n=120, k=4, p=6, seed=9))
+    key = jax.random.PRNGKey(0)
+    init = jnp.asarray([3, 50, 80, 110], jnp.int32)
+    res, _ = solver.one_batch_pam(key, x, 4, init_idx=init, max_swaps=0)
+    np.testing.assert_array_equal(np.asarray(res.medoid_idx),
+                                  np.asarray(init))
+    with pytest.raises(ValueError, match="shape"):
+        solver.one_batch_pam(key, x, 4, init_idx=init[:2])
+    with pytest.raises(ValueError, match="restarts"):
+        solver.one_batch_pam(key, x, 4, init_idx=init, restarts=2)
+    with pytest.raises(ValueError, match="runtime"):
+        solver.one_batch_pam(key, x, 4, init_idx=init, validate="cheap")

@@ -37,7 +37,7 @@ def _records(path: pathlib.Path) -> dict[str, dict]:
 
 def compare(baseline: dict[str, dict], fresh: dict[str, dict], *,
             factor: float, min_us: float,
-            prefixes: tuple[str, ...] = ("kernel/",)) -> list[str]:
+            prefixes: tuple[str, ...] = ("kernel/", "serving/")) -> list[str]:
     """Return a list of human-readable failures (empty == gate passes)."""
     failures = []
     shared = sorted(set(baseline) & set(fresh))
@@ -48,6 +48,29 @@ def compare(baseline: dict[str, dict], fresh: dict[str, dict], *,
         base, new = baseline[name], fresh[name]
         if base["us_per_call"] >= min_us:
             ratios[name] = new["us_per_call"] / base["us_per_call"]
+        # Serving-lane latency columns join the same median-normalised
+        # gate as us_per_call: p95 blowing up while the mean holds is
+        # precisely the serving regression (a straggler micro-batch)
+        # that a whole-pass timing hides (ISSUE 8).
+        for col in ("p50_us", "p95_us"):
+            b_col = base.get("derived", {}).get(col)
+            n_col = new.get("derived", {}).get(col)
+            if (b_col or 0) >= min_us and n_col is not None:
+                ratios[f"{name}:{col}"] = n_col / b_col
+        # qps is us_per_query inverted: gate it the same way, inverted
+        # (a *drop* past the factor fails).
+        b_qps = base.get("derived", {}).get("qps")
+        n_qps = new.get("derived", {}).get("qps")
+        if name.startswith("serving/") and b_qps and n_qps:
+            ratios[f"{name}:qps"] = b_qps / n_qps
+        # Absolute acceptance bar, machine-independent (both sides of
+        # the ratio ran in the same process): the engine must not lose
+        # to the host loop it replaced.
+        sp = new.get("derived", {}).get("speedup_vs_loop")
+        if sp is not None and sp < 1.0:
+            failures.append(
+                f"{name}: speedup_vs_loop={sp:.2f} < 1.0 — the assign "
+                "engine lost to the stream_assign host loop")
         b_bytes = base.get("derived", {}).get("hbm_bytes_per_sweep")
         n_bytes = new.get("derived", {}).get("hbm_bytes_per_sweep")
         if b_bytes is not None and n_bytes is not None and b_bytes != n_bytes:
@@ -79,9 +102,13 @@ def compare(baseline: dict[str, dict], fresh: dict[str, dict], *,
         machine = ordered[(len(ordered) - 1) // 2]  # lower median = runner speed
         for name, ratio in sorted(ratios.items()):
             if ratio / machine > factor:
+                rec, _, col = name.partition(":")
+                b_val = (baseline[rec]["derived"][col] if col
+                         else baseline[rec]["us_per_call"])
+                n_val = (fresh[rec]["derived"][col] if col
+                         else fresh[rec]["us_per_call"])
                 failures.append(
-                    f"{name}: {fresh[name]['us_per_call']:.0f}us vs baseline "
-                    f"{baseline[name]['us_per_call']:.0f}us "
+                    f"{name}: {n_val:.0f} vs baseline {b_val:.0f} "
                     f"({ratio:.2f}x raw, {ratio / machine:.2f}x "
                     f"machine-normalised > {factor}x)")
     if not shared:
@@ -93,14 +120,15 @@ def _min_merge(runs: list[dict[str, dict]]) -> dict[str, dict]:
     """Per-record min us_per_call over several fresh runs: with best-of-N
     timing inside each run AND min across runs, only a genuine slowdown
     survives — one noisy run cannot fail the gate (scheduler noise only
-    ever adds time). Derived columns come from the first run (they are
-    analytic, equal across runs — drift is caught by the equality gate)."""
+    ever adds time). The faster run's whole record wins: analytic derived
+    columns are equal across runs (drift is caught by the equality gate),
+    and the serving lane's timing-derived columns (p50_us/p95_us/qps)
+    should come from the least-noisy run, which is the fastest one."""
     merged = dict(runs[0])
     for run in runs[1:]:
         for name, rec in run.items():
             if name in merged and rec["us_per_call"] < merged[name]["us_per_call"]:
-                merged[name] = {**merged[name],
-                                "us_per_call": rec["us_per_call"]}
+                merged[name] = rec
     return merged
 
 
