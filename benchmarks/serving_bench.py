@@ -10,7 +10,15 @@ Records:
       latency from the engine's StepTimer, warmup excluded),
       speedup_vs_loop (>= 1.0 is the ISSUE 8 acceptance bar —
       tools/bench_compare.py holds it as an absolute gate, not
-      machine-normalised: both sides ran on the same machine).
+      machine-normalised: both sides ran on the same machine). Runs
+      ``validate="off"`` — the PR 8 fast path, pinned unguarded
+      (DESIGN.md §9a); this record holding its gate IS the proof the
+      guard work left that path untouched.
+  serving/guards/validate_cheap_32768x512x64  the same pass under the
+      ``validate="cheap"`` admission tier (finiteness scan + clean-path
+      branch, clean queries). derived: overhead_vs_off — the cheap/off
+      wall ratio, same machine same instant, held absolutely (<= 1.5x)
+      by tools/bench_compare.py.
   serving/assign/stream_loop_32768x512x64 the replaced path, same shape.
 
 Labels and d1 are asserted *bitwise* equal between the two paths
@@ -84,9 +92,23 @@ def run(smoke: bool = False) -> list[str]:
 
     sel = _synthetic_selector(x, K)
     eng = AssignmentEngine.from_selector(sel, micro_batch=MICRO_BATCH,
-                                         auto_refit=False, warmup=1)
+                                         auto_refit=False, warmup=1,
+                                         validate="off")
     eng.assign(x)                       # compile + warm
     t_eng, (l_eng, d_eng) = _time_pass(lambda: eng.assign(x), reps)
+
+    # The cheap admission tier on the same pass: shares the lru-cached
+    # jit with eng, so the delta is pure guard overhead (one O(n*p)
+    # finiteness scan + the clean-path branch).
+    eng_cheap = AssignmentEngine.from_selector(
+        sel, micro_batch=MICRO_BATCH, auto_refit=False, warmup=1,
+        validate="cheap")
+    eng_cheap.assign(x)
+    t_cheap, (l_cheap, d_cheap) = _time_pass(
+        lambda: eng_cheap.assign(x), reps)
+    assert np.array_equal(l_cheap, l_eng) and np.array_equal(
+        d_cheap.view(np.uint32), d_eng.view(np.uint32)), \
+        "validate='cheap' diverged from the fast path on clean queries"
 
     # The replaced path: host loop over eager stream_assign calls, same
     # micro-batching (per-call trace + dispatch is exactly the overhead
@@ -118,6 +140,11 @@ def run(smoke: bool = False) -> list[str]:
         f"qps={N_QUERIES/t_eng:.0f} "
         f"p50_us={lat['p50']*1e6:.0f} p95_us={lat['p95']*1e6:.0f} "
         f"micro_batch={MICRO_BATCH} speedup_vs_loop={t_loop/t_eng:.2f}x"))
+    lines.append(csv_line(
+        f"serving/guards/validate_cheap_{shape}", t_cheap * 1e6,
+        f"us_per_query={t_cheap*1e6/N_QUERIES:.2f} "
+        f"qps={N_QUERIES/t_cheap:.0f} "
+        f"overhead_vs_off={t_cheap/t_eng:.2f}x"))
     lines.append(csv_line(
         f"serving/assign/stream_loop_{shape}", t_loop * 1e6,
         f"us_per_query={t_loop*1e6/N_QUERIES:.2f} "

@@ -47,9 +47,26 @@ def _gc_tmp(root: str) -> None:
             shutil.rmtree(os.path.join(root, d), ignore_errors=True)
 
 
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save(root: str, step: int, state, extra: dict | None = None,
-         keep: int = 3) -> str:
-    """Write `state` (pytree of arrays) atomically. Returns final dir."""
+         keep: int = 3, fsync: bool = False) -> str:
+    """Write `state` (pytree of arrays) atomically. Returns final dir.
+
+    ``fsync=True`` flushes every leaf, the manifest, and the directory
+    entries to stable storage *before* the rename makes the step
+    visible — a checkpoint that survives power loss, not just process
+    death. Off by default: solver sweep checkpoints are throwaway-
+    rewritable and the flush costs real latency; serving medoid
+    snapshots (DESIGN.md §9a) turn it on because a resumed process
+    trusts the newest visible generation absolutely.
+    """
     os.makedirs(root, exist_ok=True)
     _gc_tmp(root)
     final = os.path.join(root, f"step_{step:08d}")
@@ -61,14 +78,26 @@ def save(root: str, step: int, state, extra: dict | None = None,
     for path, leaf in flat:
         name = _leafname(path)
         arr = np.asarray(leaf)  # device -> host; gathers sharded arrays
-        np.save(os.path.join(tmp, name + ".npy"), arr)
+        fname = os.path.join(tmp, name + ".npy")
+        with open(fname, "wb") as f:
+            np.save(f, arr)
+            if fsync:
+                f.flush()
+                os.fsync(f.fileno())
         manifest["leaves"].append(
             {"name": name, "shape": list(arr.shape), "dtype": str(arr.dtype)})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        if fsync:
+            f.flush()
+            os.fsync(f.fileno())
     if os.path.isdir(final):  # overwrite-safe
         shutil.rmtree(final)
+    if fsync:
+        _fsync_dir(tmp)
     os.rename(tmp, final)
+    if fsync:
+        _fsync_dir(root)        # durable *visibility*: the rename itself
 
     steps = sorted(all_steps(root))
     for old in steps[:-keep]:

@@ -258,6 +258,20 @@ class MedoidSelector:
     def _config(self) -> dict:
         return {f: getattr(self, f) for f in CONFIG_FIELDS}
 
+    def serving_config(self) -> dict:
+        """The *snapshot-defining* subset of the config: every
+        :data:`CONFIG_FIELDS` entry except pure execution knobs
+        (``backend``, ``chunk_size`` — they change where the floats are
+        computed, never which medoid set is the answer). Two engines may
+        exchange a medoid generation iff these agree;
+        ``repro.serving.guards.snapshot_fingerprint`` hashes this dict
+        (plus the feature width) into the fingerprint every durable
+        serving snapshot is pinned under (DESIGN.md §9a)."""
+        cfg = self._config()
+        for f in ("backend", "chunk_size"):
+            cfg.pop(f)
+        return cfg
+
     def save(self, path: str) -> str:
         """Persist the fitted selector (medoid indices, medoid rows,
         config, eval objectives) through ``repro.checkpoint`` —

@@ -15,6 +15,14 @@ import time
 
 @dataclasses.dataclass
 class StepTimer:
+    """Per-step wall-time tracker: EMA envelope, straggler flags,
+    percentile summary (``warmup`` steps excluded — compiles).
+
+    Not thread-safe: ``record()`` mutates count/ema/history and the
+    ``with timer:`` form shares one ``_t0`` slot. Multi-threaded callers
+    must serialise — the serving engine times each kernel call with a
+    local ``perf_counter`` pair and calls ``record(dt)`` under its
+    bookkeeping lock (DESIGN.md §9a)."""
     ema_decay: float = 0.95
     threshold: float = 2.0          # x EMA => straggler
     warmup: int = 3                 # ignore compile steps

@@ -1,1 +1,14 @@
+"""Serving layer: high-QPS nearest-medoid assignment (DESIGN.md §9/§9a).
+
+:class:`AssignmentEngine` is the host loop (micro-batching, drift-
+triggered supervised refit, durable versioned snapshots);
+:mod:`repro.serving.guards` holds the robustness primitives it composes
+(query admission, :class:`RefitBreaker`, :class:`ReservoirWindow`).
+"""
 from .engine import AssignmentEngine  # noqa: F401
+from .guards import (  # noqa: F401
+    QUARANTINE_LABEL,
+    RefitBreaker,
+    ReservoirWindow,
+    snapshot_fingerprint,
+)

@@ -1,4 +1,4 @@
-"""High-QPS k-medoids assignment serving (DESIGN.md §9).
+"""High-QPS k-medoids assignment serving (DESIGN.md §9, hardened §9a).
 
 The serving workload for this repo is the paper's own: given a fitted
 medoid set, answer "which medoid, how far" for streams of query rows —
@@ -14,29 +14,50 @@ batched nearest-medoid top-1 kernel (``ops.assign``, kernels/assign.py):
   * **Medoid residency** — the metric-prepared (k, p) medoid rows are
     device-resident across calls and VMEM-resident across each kernel
     sweep (constant-index BlockSpec — one DMA per call).
+  * **Admission guards** — ``validate="cheap"`` (default) scans each
+    batch and quarantines non-finite rows (label −1, NaN distance, or
+    ``on_invalid="raise"``) so one poisoned batch can't contaminate the
+    drift EMA or the refit window; ``validate="off"`` is the untouched
+    PR 8 jitted fast path (serving/guards.py, DESIGN.md §9a).
   * **Drift monitor** — an EMA of the per-batch assignment objective
-    (mean d1) is compared against the fit-time ``est_objective_``; when
-    the ratio exceeds ``drift_threshold``, the engine triggers ONE
-    background refit warm-started from the live medoid set
+    (mean d1 over admitted rows) is compared against the fit-time
+    ``est_objective_``; past ``drift_threshold`` the engine arms ONE
+    supervised background refit warm-started from the live medoid set
     (``MedoidSelector.refit`` -> ``solver.one_batch_pam(init_idx=...)``,
-    the FasterPAM warm-start discipline) on a ring buffer of recent
-    query rows.
-  * **Atomic swap** — the refit builds its complete :class:`_Medoids`
-    snapshot off to the side and installs it with a single reference
-    assignment. Serving threads read ``self._model`` exactly once per
-    call, so they see either the old snapshot or the new one, never a
-    torn mix; a refit cancelled (or crashed) mid-flight leaves the old
-    snapshot serving untouched (tests/test_serving.py pins it).
+    the FasterPAM warm-start discipline) on an objective-weighted
+    reservoir of query rows (``guards.ReservoirWindow``).
+  * **Refit supervision** — each attempt runs under a join deadline
+    (``refit_timeout``; the cancel flag fences a hung worker off the
+    install), failures back off on a deterministic exponential schedule
+    (``refit_backoff``), and ``breaker_threshold`` consecutive failures
+    open a circuit breaker: serve-only from the last good generation,
+    one half-open probe per ``breaker_cooldown`` (guards.RefitBreaker;
+    all surfaced in :meth:`stats`).
+  * **Atomic swap, durably versioned** — a refit builds its complete
+    :class:`_Medoids` snapshot off to the side and installs it with a
+    single reference assignment. Serving threads read ``self._model``
+    exactly once per call, so they see either the old snapshot or the
+    new one, never a torn mix; a refit cancelled (or crashed) mid-flight
+    leaves the old snapshot serving (tests/test_serving.py pins it).
+    With ``snapshot_dir=`` every installed generation is persisted
+    through the ``repro.checkpoint`` atomic-rename machinery (fsync'd)
+    under a config fingerprint; :meth:`load_snapshot` /
+    :meth:`install_snapshot` resume or receive generations with
+    stale-version rejection — the groundwork for the multi-process
+    medoid-version broadcast protocol (ROADMAP).
 
 Labels are bitwise ``streaming.stream_assign`` / the numpy mirror in
-``core/baselines.py`` per backend (tests/test_assign.py), so swapping
-the host predict loop for this engine changes throughput, not answers.
+``core/baselines.py`` per backend (tests/test_assign.py) — for every
+admitted (finite) query row, through every fault mode in
+tests/test_serving_faults.py — so swapping the host predict loop for
+this engine changes throughput, not answers.
 """
 from __future__ import annotations
 
 import copy
 import functools
 import threading
+import time
 import warnings
 
 import jax.numpy as jnp
@@ -51,6 +72,7 @@ warnings.filterwarnings(
 from repro.core.selector import MedoidSelector
 from repro.kernels import metrics, ops
 from repro.monitoring.metrics import StepTimer
+from repro.serving import guards
 
 
 class _Medoids:
@@ -64,7 +86,7 @@ class _Medoids:
         self.prepared = prepared            # (k, p) device array, prepared
         self.indices = indices              # (k,) i32 numpy (into fit data)
         self.est_objective = est_objective  # float, fit-time estimate
-        self.version = version              # int, bumps per refit
+        self.version = version              # int, bumps per refit/install
 
 
 @functools.lru_cache(maxsize=None)
@@ -91,8 +113,9 @@ def _assign_fn(metric: str, backend: str, block_dtype: str | None,
 
 
 class AssignmentEngine:
-    """Serve nearest-medoid assignment at high throughput, with drift
-    detection and background warm-start refit.
+    """Serve nearest-medoid assignment at high throughput, with admission
+    guards, drift detection, supervised background warm-start refit, and
+    durable versioned snapshots.
 
     Build one with :meth:`from_selector` (a fitted
     :class:`MedoidSelector`) or :meth:`from_checkpoint` (a selector
@@ -101,22 +124,59 @@ class AssignmentEngine:
         labels, d1 = engine.assign(queries)   # (q,) i32, (q,) f32
         engine.stats()                        # latency + drift + refits
 
-    Knobs: ``micro_batch`` (rows per jitted step), ``drift_threshold``
-    (EMA objective / fit objective ratio that arms a refit),
-    ``drift_decay`` (EMA smoothing), ``refit_window`` (ring-buffer rows
-    the refit trains on; 0 disables buffering and auto-refit),
+    Serving knobs: ``micro_batch`` (rows per jitted step), ``validate``
+    (``"cheap"`` quarantines non-finite query rows — sentinel label −1,
+    NaN distance; ``"off"`` is the unguarded PR 8 fast path),
+    ``on_invalid`` (``"quarantine"`` or ``"raise"``).
+
+    Drift/refit knobs: ``drift_threshold`` (EMA objective / fit
+    objective ratio that arms a refit), ``drift_decay`` (EMA smoothing),
+    ``refit_window`` (reservoir capacity the refit trains on; 0 disables
+    buffering and auto-refit), ``window_mode`` (``"reservoir"`` =
+    objective-weighted A-Res sample of the stream, seeded from the
+    selector's PRNG seed; ``"ring"`` = PR 8's recency window),
     ``auto_refit`` (arm the background refit at all).
+
+    Refit supervision: ``refit_timeout`` (seconds per attempt; the
+    supervisor cancels and abandons a hung worker — the cancel flag
+    fences its install), ``refit_backoff``/``refit_backoff_cap``
+    (deterministic exponential backoff after failures),
+    ``breaker_threshold``/``breaker_cooldown`` (circuit breaker: after N
+    consecutive failures, serve-only with one half-open probe per
+    cooldown).
+
+    Durability: ``snapshot_dir`` persists every installed medoid
+    generation (atomic rename + fsync, ``snapshot_keep`` newest kept,
+    config-fingerprinted); ``snapshot_resume="auto"`` re-installs the
+    newest on-disk generation at boot.
     """
 
     def __init__(self, selector: MedoidSelector, *, micro_batch: int = 4096,
                  drift_threshold: float = 1.25, drift_decay: float = 0.9,
                  refit_window: int = 65536, auto_refit: bool = True,
-                 warmup: int = 1):
+                 warmup: int = 1,
+                 validate: str = "cheap", on_invalid: str = "quarantine",
+                 window_mode: str = "reservoir",
+                 refit_timeout: float | None = None,
+                 refit_backoff: float = 1.0,
+                 refit_backoff_cap: float = 60.0,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown: float = 30.0,
+                 snapshot_dir: str | None = None, snapshot_keep: int = 4,
+                 snapshot_resume: str = "auto",
+                 _clock=time.monotonic):
         if selector.medoids_ is None:
             raise RuntimeError("AssignmentEngine needs a *fitted* selector "
                                "(call fit() or load a checkpoint)")
         if micro_batch < 1:
             raise ValueError(f"micro_batch must be >= 1, got {micro_batch}")
+        if refit_timeout is not None and refit_timeout <= 0:
+            raise ValueError(
+                f"refit_timeout must be > 0 seconds (or None), got "
+                f"{refit_timeout}")
+        if snapshot_resume not in ("auto", "never"):
+            raise ValueError(f"snapshot_resume must be 'auto' or 'never', "
+                             f"got {snapshot_resume!r}")
         self._selector = selector
         self.metric = selector.metric
         self.backend = selector.backend
@@ -128,22 +188,55 @@ class AssignmentEngine:
         self.drift_decay = float(drift_decay)
         self.refit_window = int(refit_window)
         self.auto_refit = bool(auto_refit)
+        self.validate = guards.check_validate(validate)
+        self.on_invalid = guards.check_on_invalid(on_invalid)
+        self.refit_timeout = refit_timeout
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_keep = int(snapshot_keep)
+        # Fingerprint of the snapshot-defining config: a durable
+        # generation (or, later, a broadcast one) installs only onto an
+        # engine whose model-defining config matches (DESIGN.md §9a).
+        self._fingerprint = guards.snapshot_fingerprint(
+            {**selector.serving_config(), "p": int(self.p)})
 
         self._model = self._snapshot(selector, version=0)
         self._fn = _assign_fn(self.metric, self.backend, self.block_dtype,
                               self.micro_batch, self.p)
         self.timer = StepTimer(warmup=warmup)   # per-micro-batch latency
+        # One lock serialises ALL host-side bookkeeping (counters, EMA,
+        # window, timer, breaker, model install). Kernel calls stay
+        # outside it — concurrent assign() callers overlap on the device
+        # and only briefly serialise to record what happened.
+        self._lock = threading.Lock()
         self.queries_served = 0
+        self.quarantined = 0
         self.refits = 0
+        self.refit_failures = 0
+        self.snapshot_recoveries = 0
+        self.snapshots_persisted = 0
         self.last_refit_error: BaseException | None = None
+        self.last_snapshot_error: BaseException | None = None
         self._drift_ema: float | None = None
-        self._window = (np.empty((self.refit_window, self.p), np.float32)
-                        if self.refit_window > 0 else None)
-        self._window_fill = 0
-        self._window_pos = 0
+        self._breaker = guards.RefitBreaker(
+            backoff=refit_backoff, backoff_cap=refit_backoff_cap,
+            threshold=breaker_threshold, cooldown=breaker_cooldown,
+            clock=_clock)
+        self._window = (guards.ReservoirWindow(
+            self.refit_window, self.p, mode=window_mode,
+            seed=int(selector.seed))
+            if self.refit_window > 0 else None)
         self._refit_thread: threading.Thread | None = None
         self._refit_cancel = threading.Event()
         self._refit_hook = None       # test seam: runs just before install
+        if self.snapshot_dir is not None:
+            if snapshot_resume == "auto":
+                try:
+                    self.load_snapshot(self.snapshot_dir)
+                except FileNotFoundError:
+                    pass              # nothing on disk yet — fresh start
+            from repro import checkpoint as ckpt
+            if ckpt.latest_step(self.snapshot_dir) is None:
+                self._persist_snapshot(self._model)
 
     # ------------------------------------------------------ constructors
 
@@ -155,7 +248,10 @@ class AssignmentEngine:
     @classmethod
     def from_checkpoint(cls, path: str, **kw) -> "AssignmentEngine":
         """Boot straight from a ``MedoidSelector.save()`` artifact — the
-        config and fitted medoids both come from the checkpoint."""
+        config and fitted medoids both come from the checkpoint. Pass
+        ``snapshot_dir=`` to also resume the last installed serving
+        generation (a rebooted process picks up exactly where the
+        SIGKILL'd one left off — tests/test_serving_faults.py)."""
         return cls(MedoidSelector.from_checkpoint(path), **kw)
 
     # ---------------------------------------------------------- serving
@@ -165,7 +261,11 @@ class AssignmentEngine:
         ``(labels, d1)`` of shapes (q,) i32 / (q,) f32 — index into the
         *current* medoid snapshot and distance to it. ``q == 0`` returns
         the empty shapes (the pinned edge contract); a wrong feature
-        width raises."""
+        width raises. Under ``validate="cheap"`` non-finite rows come
+        back quarantined: label ``guards.QUARANTINE_LABEL`` (−1), NaN
+        distance (or the whole call raises with ``on_invalid="raise"``);
+        finite rows are answered bitwise as if the bad rows were never
+        there (per-row math is row-local)."""
         q = np.asarray(queries, np.float32)
         if q.ndim != 2:
             raise ValueError(f"queries must be 2-D (q, p), got {q.shape}")
@@ -176,9 +276,76 @@ class AssignmentEngine:
         if n == 0:
             return (np.zeros((0,), np.int32), np.zeros((0,), np.float32))
 
-        # One read: every micro-batch of this call sees the same snapshot
-        # even if a refit installs a new one mid-call.
+        if self.validate == "off":
+            # The untouched PR 8 fast path: no admission scan, no
+            # compaction, no output check (benched + gated).
+            labels, d1, model = self._serve(q)
+            self._bookkeep(q, d1, model)
+            return labels, d1
+
+        ok = guards.admit(q)
+        n_bad = int(n - np.count_nonzero(ok))
+        if n_bad == 0:
+            labels, d1, model = self._serve(q)
+            self._bookkeep(q, d1, model)
+            return labels, d1
+        if self.on_invalid == "raise":
+            raise ValueError(
+                f"{n_bad} non-finite query row(s) in a batch of {n} "
+                f"(first at row {int(np.argmin(ok))}); serving "
+                "validate='cheap' with on_invalid='raise' — sanitize "
+                "the feed or serve with on_invalid='quarantine'")
+        with self._lock:
+            self.quarantined += n_bad
+        labels = np.full((n,), guards.QUARANTINE_LABEL, np.int32)
+        d1 = np.full((n,), np.nan, np.float32)
+        qf = q[ok]
+        if qf.shape[0]:
+            lf, df, model = self._serve(qf)
+            labels[ok] = lf
+            d1[ok] = df
+            self._bookkeep(qf, df, model)
+        return labels, d1
+
+    # Suspect-answer threshold: a poisoned medoid column surfaces as NaN
+    # on the XLA paths but as the kernel's +BIG init (1e30 — NaN loses
+    # every strictly-less merge) on the Pallas path. Any d1 that is NaN,
+    # inf, or >= this is treated as suspect and the snapshot is checked.
+    _SUSPECT = 1e29
+
+    def _serve(self, q: np.ndarray):
+        """Run the kernel over admitted rows; under ``validate="cheap"``
+        a suspect answer (NaN / inf / the kernel's +BIG sentinel) for
+        finite queries is diagnosed against the medoid snapshot and, if
+        it is poisoned, recovered (re-prepare from raw rows, else reload
+        the durable snapshot) — then served again on the healthy
+        generation."""
         model = self._model
+        labels, d1 = self._serve_on(q, model)
+        if self.validate == "cheap" and not bool(
+                np.all(d1 < self._SUSPECT)):
+            rows_bad = not np.isfinite(model.rows).all()
+            prepared_bad = (rows_bad or
+                            not bool(np.isfinite(
+                                np.asarray(model.prepared)).all()))
+            if prepared_bad:
+                model = self._recover_model(model)
+                labels, d1 = self._serve_on(q, model)
+                if not bool(np.all(d1 < self._SUSPECT)):
+                    raise RuntimeError(
+                        "suspect assignment distances for finite "
+                        "queries persist after snapshot recovery — the "
+                        "recovered generation is itself unhealthy")
+            # else: the snapshot is finite — the huge distances are
+            # genuine (extreme-magnitude features), not poison; serve
+            # the floats as computed.
+        return labels, d1, model
+
+    def _serve_on(self, q: np.ndarray,
+                  model: _Medoids) -> tuple[np.ndarray, np.ndarray]:
+        # One model per call: every micro-batch of this call sees the
+        # same snapshot even if a refit installs a new one mid-call.
+        n = q.shape[0]
         mb = self.micro_batch
         labels = np.empty((n,), np.int32)
         d1 = np.empty((n,), np.float32)
@@ -188,7 +355,8 @@ class AssignmentEngine:
             if rows < mb:
                 chunk = np.concatenate(
                     [chunk, np.zeros((mb - rows, self.p), np.float32)])
-            with self.timer, warnings.catch_warnings():
+            t0 = time.perf_counter()
+            with warnings.catch_warnings():
                 # re-assert the module filter: pytest (and any
                 # catch_warnings user) resets the global filter list, and
                 # the nag fires at trace time inside this call
@@ -197,54 +365,61 @@ class AssignmentEngine:
                 lab, dd = self._fn(jnp.asarray(chunk), model.prepared)
                 lab = np.asarray(lab)       # blocks: the timed latency is
                 dd = np.asarray(dd)         # submit + compute + readback
+            dt = time.perf_counter() - t0
+            with self._lock:                # timer state is host-shared
+                self.timer.record(dt)
             labels[s:s + rows] = lab[:rows]
             d1[s:s + rows] = dd[:rows]
-        self.queries_served += n
-
-        self._observe(q, float(d1.mean()), model)
         return labels, d1
 
     # ---------------------------------------------------- drift + refit
 
-    def _observe(self, q: np.ndarray, batch_objective: float,
-                 model: _Medoids) -> None:
-        if self._window is not None:
-            self._window_push(q)
-        ema = self._drift_ema
-        self._drift_ema = (batch_objective if ema is None else
-                           self.drift_decay * ema +
-                           (1.0 - self.drift_decay) * batch_objective)
-        if (self.auto_refit and self._window is not None
-                and self.drift_ratio() > self.drift_threshold
-                and self._window_fill >= max(4 * self.k, self.micro_batch)
-                and not self.refit_in_flight):
-            self._start_refit(self._window_rows())
-
-    def _window_push(self, q: np.ndarray) -> None:
-        w = self._window.shape[0]
-        take = q[-w:] if q.shape[0] > w else q
-        r = take.shape[0]
-        end = self._window_pos + r
-        if end <= w:
-            self._window[self._window_pos:end] = take
-        else:
-            split = w - self._window_pos
-            self._window[self._window_pos:] = take[:split]
-            self._window[:end - w] = take[split:]
-        self._window_pos = end % w
-        self._window_fill = min(self._window_fill + r, w)
+    def _bookkeep(self, q_ok: np.ndarray, d1_ok: np.ndarray,
+                  model: _Medoids) -> None:
+        """All post-serve host bookkeeping, under the engine lock:
+        counters, window push, EMA fold, refit arming. ``q_ok``/``d1_ok``
+        are the *admitted* rows only — quarantined rows never reach the
+        EMA or the window."""
+        batch_objective = float(d1_ok.mean()) if d1_ok.size else None
+        arm = None
+        with self._lock:
+            self.queries_served += q_ok.shape[0]
+            if self._window is not None:
+                self._window.push(q_ok, d1_ok)
+            ema = self._drift_ema
+            if ema is not None and not np.isfinite(ema):
+                ema = None          # self-healing: a poisoned EMA
+                # (validate="off" fed it NaN) re-seeds from the next
+                # finite batch instead of holding NaN forever
+            if batch_objective is not None and np.isfinite(batch_objective):
+                self._drift_ema = (batch_objective if ema is None else
+                                   self.drift_decay * ema +
+                                   (1.0 - self.drift_decay)
+                                   * batch_objective)
+            else:
+                self._drift_ema = ema
+            if (self.auto_refit and self._window is not None
+                    and self.drift_ratio() > self.drift_threshold
+                    and self._window.fill >= max(4 * self.k,
+                                                 self.micro_batch)
+                    and not self.refit_in_flight
+                    and self._breaker.allow()):
+                arm = self._window.content()
+        if arm is not None:
+            self._start_refit(arm)
 
     def _window_rows(self) -> np.ndarray:
-        return self._window[:self._window_fill].copy()
+        return self._window.content()
 
     def drift_ratio(self) -> float:
         """EMA assignment objective / fit-time estimated objective.
         ~1.0 = queries look like the fit data; > drift_threshold arms
         the background refit."""
         base = self._model.est_objective
-        if self._drift_ema is None or not base or base <= 0:
+        ema = self._drift_ema
+        if ema is None or not np.isfinite(ema) or not base or base <= 0:
             return 1.0
-        return self._drift_ema / base
+        return ema / base
 
     @property
     def refit_in_flight(self) -> bool:
@@ -252,71 +427,307 @@ class AssignmentEngine:
         return t is not None and t.is_alive()
 
     def _snapshot(self, sel: MedoidSelector, version: int) -> _Medoids:
-        rows = np.asarray(sel.medoids_, np.float32)
+        return self._build_model(
+            np.asarray(sel.medoids_, np.float32),
+            np.asarray(sel.medoid_indices_, np.int32),
+            float(sel.est_objective_ or 0.0), version)
+
+    def _build_model(self, rows: np.ndarray, indices: np.ndarray,
+                     est_objective: float, version: int) -> _Medoids:
         spec = metrics.get(self.metric)
         dev = jnp.asarray(rows)
         prepared = spec.prepare(dev) if spec.prepare is not None else dev
-        return _Medoids(rows=rows, prepared=prepared,
-                        indices=np.asarray(sel.medoid_indices_, np.int32),
-                        est_objective=float(sel.est_objective_ or 0.0),
-                        version=version)
+        return _Medoids(rows=rows, prepared=prepared, indices=indices,
+                        est_objective=est_objective, version=version)
+
+    # ------------------------------------------------- supervised refit
 
     def _start_refit(self, x: np.ndarray) -> None:
-        self._refit_cancel.clear()
-        t = threading.Thread(target=self._refit_worker, args=(x,),
-                             name="assignment-engine-refit", daemon=True)
-        self._refit_thread = t
-        t.start()
+        cancel = threading.Event()
+        attempt = {"cancel": cancel, "installed": False, "timed_out": False}
+        worker = threading.Thread(
+            target=self._refit_worker, args=(x, attempt),
+            name="assignment-engine-refit", daemon=True)
+        supervisor = threading.Thread(
+            target=self._supervise_refit, args=(worker, attempt),
+            name="assignment-engine-refit-supervisor", daemon=True)
+        self._refit_cancel = cancel
+        self._refit_thread = supervisor
+        supervisor.start()
 
-    def _refit_worker(self, x: np.ndarray) -> None:
-        old = self._model
+    def _supervise_refit(self, worker: threading.Thread,
+                         attempt: dict) -> None:
+        """Per-attempt supervision: join the worker under the
+        ``refit_timeout`` deadline. On timeout the attempt's cancel flag
+        fences the (possibly hung) worker off the install and the worker
+        thread is *abandoned* — a daemon thread stuck in a kernel call
+        cannot be killed, but a fenced one cannot corrupt anything, and
+        the engine is immediately free to arm a fresh attempt (each
+        attempt carries its own cancel event)."""
+        cancel = attempt["cancel"]
+        deadline = (None if self.refit_timeout is None
+                    else time.monotonic() + self.refit_timeout)
+        worker.start()
+        while True:
+            worker.join(0.02)
+            if not worker.is_alive():
+                return              # worker recorded its own outcome
+            if cancel.is_set() and not attempt["timed_out"]:
+                return              # external cancel: not a failure
+            if deadline is not None and time.monotonic() >= deadline:
+                with self._lock:
+                    if attempt["installed"]:
+                        return      # success landed at the wire
+                    attempt["timed_out"] = True
+                    cancel.set()
+                self._record_refit_failure(TimeoutError(
+                    f"refit exceeded refit_timeout={self.refit_timeout}s "
+                    "and was cancelled (hung worker abandoned; the old "
+                    "generation keeps serving)"))
+                return
+
+    def _refit_worker(self, x: np.ndarray, attempt: dict) -> None:
+        cancel = attempt["cancel"]
         try:
             # Refit a *copy*: the live selector (and the serving
             # snapshot derived from it) stays untouched until the new
             # snapshot is complete. Shallow copy is enough — refit()
             # replaces the fitted fields, never mutates them in place.
-            sel = copy.copy(self._selector)
+            with self._lock:
+                sel = copy.copy(self._selector)
             sel.refit(x)
-            new = self._snapshot(sel, version=old.version + 1)
-            if self._refit_cancel.is_set():
+            rows = np.asarray(sel.medoids_, np.float32)
+            indices = np.asarray(sel.medoid_indices_, np.int32)
+            est = float(sel.est_objective_ or 0.0)
+            if cancel.is_set():
                 return                      # killed: old snapshot serves on
             if self._refit_hook is not None:
                 self._refit_hook()
-            if self._refit_cancel.is_set():
-                return
-            # The swap: one reference assignment — readers hold either
-            # the old snapshot or this one, never a mix.
-            self._model = new
-            self._selector = sel
-            self._drift_ema = None          # drift restarts vs the new fit
-            self.refits += 1
+            # prepare() outside the lock (device work), install inside
+            spec = metrics.get(self.metric)
+            dev = jnp.asarray(rows)
+            prepared = spec.prepare(dev) if spec.prepare is not None else dev
+            with self._lock:
+                if cancel.is_set():
+                    return
+                new = _Medoids(rows=rows, prepared=prepared,
+                               indices=indices, est_objective=est,
+                               version=self._model.version + 1)
+                # The swap: one reference assignment — readers hold
+                # either the old snapshot or this one, never a mix.
+                self._model = new
+                self._selector = sel
+                self._drift_ema = None      # drift restarts vs the new fit
+                self.refits += 1
+                self.last_refit_error = None    # a success clears the
+                # stale failure stats() used to report forever
+                self._breaker.record_success()
+                attempt["installed"] = True
+            self._persist_snapshot(new)     # disk IO outside the lock
         except BaseException as e:          # noqa: BLE001 — report, don't die
+            if not cancel.is_set():
+                # an externally-cancelled or timed-out attempt already
+                # has its outcome recorded (or deliberately unrecorded)
+                self._record_refit_failure(e)
+
+    def _record_refit_failure(self, e: BaseException) -> None:
+        with self._lock:
             self.last_refit_error = e
+            self.refit_failures += 1
+            self._breaker.record_failure()
 
     def refit_now(self, x=None, *, wait: bool = True) -> bool:
         """Trigger a refit explicitly (on ``x`` or the query window).
-        Returns True if one was started. ``wait`` joins it."""
+        Returns True if one was started. ``wait`` joins it. Bypasses the
+        backoff/breaker schedule — this is the operator override; the
+        attempt's outcome still feeds the breaker."""
         if self.refit_in_flight:
             if wait:
                 self._refit_thread.join()
             return False
         if x is None:
-            if self._window is None or self._window_fill == 0:
+            if self._window is None or self._window.fill == 0:
                 raise RuntimeError("no refit data: pass x= or serve "
                                    "queries with refit_window > 0")
-            x = self._window_rows()
-        self._start_refit(np.asarray(x, np.float32))
+            with self._lock:
+                x = self._window.content()
+        x = np.asarray(x, np.float32)
+        if self.validate == "cheap":
+            ok = guards.admit(x)
+            if not ok.all():
+                x = x[ok]           # refit data rides the same admission
+        self._start_refit(x)
         if wait:
             self._refit_thread.join()
         return True
 
     def cancel_refit(self, *, wait: bool = True) -> None:
         """Kill an in-flight refit: the old medoid snapshot keeps
-        serving; whatever the refit computed is discarded."""
+        serving; whatever the refit computed is discarded (not counted
+        as a failure — the breaker only sees crashes and timeouts)."""
         self._refit_cancel.set()
         t = self._refit_thread
         if wait and t is not None and t.is_alive():
             t.join()
+
+    # ------------------------------------------------ durable snapshots
+
+    def _persist_snapshot(self, model: _Medoids) -> None:
+        """Write one installed generation through the atomic-rename
+        checkpoint machinery (fsync'd: the rename is durable before it
+        is visible). Persistence failure must never take serving down —
+        it is recorded in ``stats()`` instead."""
+        if self.snapshot_dir is None:
+            return
+        from repro import checkpoint as ckpt
+        try:
+            ckpt.save(self.snapshot_dir, model.version,
+                      {"rows": model.rows, "indices": model.indices},
+                      extra={"kind": "serving_medoids",
+                             "fingerprint": self._fingerprint,
+                             "version": int(model.version),
+                             "est_objective": float(model.est_objective)},
+                      keep=self.snapshot_keep, fsync=True)
+            with self._lock:
+                self.snapshots_persisted += 1
+                self.last_snapshot_error = None
+        except Exception as e:              # noqa: BLE001
+            with self._lock:
+                self.last_snapshot_error = e
+
+    def install_snapshot(self, rows, indices, version: int,
+                         est_objective: float | None = None, *,
+                         force: bool = False, persist: bool = True) -> int:
+        """Install a medoid generation received from outside the refit
+        loop (a durable snapshot, or — the broadcast protocol — another
+        process's refit). Validates shape and finiteness, rejects stale
+        versions (``version <=`` the installed one) unless ``force=True``
+        (the poisoned-rows recovery path re-installs the current
+        generation from disk). Returns the installed version."""
+        rows = np.asarray(rows, np.float32)
+        indices = np.asarray(indices, np.int32)
+        if rows.shape != (self.k, self.p):
+            raise ValueError(
+                f"snapshot rows have shape {rows.shape}, engine serves "
+                f"(k, p)=({self.k}, {self.p})")
+        if indices.shape != (self.k,):
+            raise ValueError(
+                f"snapshot indices have shape {indices.shape}, "
+                f"expected ({self.k},)")
+        if not np.isfinite(rows).all():
+            raise ValueError(
+                "snapshot rows contain non-finite values — refusing to "
+                "install a poisoned generation")
+        est = float(est_objective if est_objective is not None
+                    else self._model.est_objective)
+        new = self._build_model(rows, indices, est, int(version))
+        with self._lock:
+            cur = self._model
+            if not force and int(version) < cur.version:
+                raise ValueError(
+                    f"stale snapshot: version {int(version)} <= installed "
+                    f"version {cur.version} (pass force=True only for "
+                    "recovery re-installs)")
+            if (not force and int(version) == cur.version
+                    and cur.rows.tobytes() != rows.tobytes()):
+                raise ValueError(
+                    f"snapshot version {int(version)} equals the installed "
+                    "version but carries different medoid rows — version "
+                    "collision; bump the version or pass force=True")
+            self._model = new
+            self._drift_ema = None
+        if persist:
+            self._persist_snapshot(new)
+        return int(version)
+
+    def load_snapshot(self, path: str | None = None,
+                      version: int | None = None, *,
+                      force: bool = False) -> int:
+        """Restore the newest loadable generation from a snapshot
+        directory (default: this engine's ``snapshot_dir``) and install
+        it. Walks back over corrupt steps with a warning (the same
+        discipline as ``checkpoint.restore_latest_valid``); a config
+        fingerprint mismatch is a loud error, never silently skipped;
+        stale versions are rejected unless ``force=True``. Returns the
+        installed version — the reboot path after a SIGKILL'd process
+        (tests/test_serving_faults.py pins version + rows bitwise)."""
+        import jax
+
+        from repro import checkpoint as ckpt
+        root = path if path is not None else self.snapshot_dir
+        if root is None:
+            raise ValueError("no snapshot directory: pass path= or build "
+                             "the engine with snapshot_dir=")
+        steps = ([int(version)] if version is not None
+                 else list(reversed(ckpt.all_steps(root))))
+        if not steps:
+            raise FileNotFoundError(f"no snapshots under {root}")
+        target = {"rows": jax.ShapeDtypeStruct((self.k, self.p),
+                                               np.float32),
+                  "indices": jax.ShapeDtypeStruct((self.k,), np.int32)}
+        last_err = None
+        for step in steps:
+            try:
+                state, extra = ckpt.restore(root, target, step)
+            except Exception as e:          # noqa: BLE001
+                last_err = e
+                warnings.warn(
+                    f"skipping corrupt serving snapshot version {step} "
+                    f"under {root}: {e}", UserWarning, stacklevel=2)
+                continue
+            fp = extra.get("fingerprint")
+            if fp != self._fingerprint:
+                raise ValueError(
+                    f"serving snapshot version {step} under {root} was "
+                    f"written under a different config (fingerprint {fp!r}"
+                    f" != this engine's {self._fingerprint!r}) — a medoid "
+                    "generation must only serve under the config that fit "
+                    "it")
+            if not np.isfinite(state["rows"]).all():
+                last_err = ValueError("non-finite medoid rows on disk")
+                warnings.warn(
+                    f"skipping serving snapshot version {step} under "
+                    f"{root}: non-finite medoid rows", UserWarning,
+                    stacklevel=2)
+                continue
+            v = int(extra.get("version", step))
+            cur = self._model
+            if not force and v == cur.version \
+                    and cur.rows.tobytes() == np.asarray(
+                        state["rows"], np.float32).tobytes():
+                return v                    # already serving this one
+            return self.install_snapshot(
+                state["rows"], state["indices"], v,
+                est_objective=extra.get("est_objective"),
+                force=force, persist=False)
+        raise FileNotFoundError(
+            f"no restorable serving snapshot under {root} "
+            f"({len(steps)} version(s) tried; last: {last_err})")
+
+    def _recover_model(self, bad: _Medoids) -> _Medoids:
+        """Poisoned-snapshot recovery (``validate="cheap"``): if the raw
+        rows are healthy the device-side prepared cache was poisoned —
+        rebuild it; otherwise reload the generation from the durable
+        snapshot dir. Raises when nothing healthy remains."""
+        with self._lock:
+            cur = self._model
+            if cur is not bad:
+                return cur                  # someone already recovered
+            if np.isfinite(cur.rows).all():
+                new = self._build_model(cur.rows, cur.indices,
+                                        cur.est_objective, cur.version)
+                self._model = new
+                self.snapshot_recoveries += 1
+                return new
+        if self.snapshot_dir is None:
+            raise RuntimeError(
+                "medoid snapshot is poisoned (non-finite rows) and no "
+                "snapshot_dir= is configured to recover from — rebuild "
+                "the engine from a selector checkpoint")
+        self.load_snapshot(self.snapshot_dir, force=True)
+        with self._lock:
+            self.snapshot_recoveries += 1
+            return self._model
 
     # ------------------------------------------------------------ intro
 
@@ -330,17 +741,32 @@ class AssignmentEngine:
 
     def stats(self) -> dict:
         """Serving counters + per-micro-batch latency summary (StepTimer
-        percentiles, warmup excluded) + drift state."""
-        return {"queries_served": self.queries_served,
-                "micro_batch": self.micro_batch,
-                "medoid_version": self._model.version,
-                "refits": self.refits,
-                "refit_in_flight": self.refit_in_flight,
-                "last_refit_error": repr(self.last_refit_error)
-                if self.last_refit_error else None,
-                "drift_ema": self._drift_ema,
-                "drift_ratio": self.drift_ratio(),
-                "latency": self.timer.summary()}
+        percentiles, warmup excluded) + drift/guard/refit-supervision/
+        snapshot state."""
+        with self._lock:
+            window = (self._window.stats() if self._window is not None
+                      else None)
+            return {"queries_served": self.queries_served,
+                    "micro_batch": self.micro_batch,
+                    "validate": self.validate,
+                    "quarantined": self.quarantined,
+                    "medoid_version": self._model.version,
+                    "refits": self.refits,
+                    "refit_failures": self.refit_failures,
+                    "refit_in_flight": self.refit_in_flight,
+                    "last_refit_error": repr(self.last_refit_error)
+                    if self.last_refit_error else None,
+                    "breaker": self._breaker.stats(),
+                    "window": window,
+                    "snapshots": {
+                        "dir": self.snapshot_dir,
+                        "persisted": self.snapshots_persisted,
+                        "recoveries": self.snapshot_recoveries,
+                        "last_error": repr(self.last_snapshot_error)
+                        if self.last_snapshot_error else None},
+                    "drift_ema": self._drift_ema,
+                    "drift_ratio": self.drift_ratio(),
+                    "latency": self.timer.summary()}
 
     def close(self) -> None:
         self.cancel_refit(wait=True)

@@ -1,0 +1,309 @@
+"""Serving-side robustness primitives (DESIGN.md §9a).
+
+The solver got its ``validate=`` tiers, degradation ladder, and
+checkpoint/resume in PR 7 (``core/guards.py``/``core/runtime.py``); this
+module is the serving mirror of that discipline. Three pieces, each a
+plain host-side primitive the :class:`~repro.serving.AssignmentEngine`
+composes under its bookkeeping lock:
+
+  * **Query admission** (:func:`admit`) — the serve path ingests
+    *untrusted* rows. One non-finite query row used to (a) poison the
+    drift EMA with a NaN that never decays out, (b) contaminate the
+    refit window so the *next* medoid generation was fit on garbage, and
+    (c) still burn a kernel launch. ``validate="cheap"`` scans each
+    batch once (O(n·p) against the kernel's O(n·p·k)) and quarantines
+    bad rows: sentinel label ``QUARANTINE_LABEL`` (−1), NaN distance,
+    excluded from the EMA, the window, and the kernel call.
+    ``validate="off"`` is the untouched PR 8 jitted fast path — no scan,
+    no branch (benchmarks/serving_bench.py records both;
+    tools/bench_compare.py holds the overhead).
+  * **Refit supervision** (:class:`RefitBreaker`) — a deterministic
+    (jitterless) exponential-backoff schedule plus a three-state circuit
+    breaker over background refit attempts. The schedule is a pure
+    function of the consecutive-failure count, so two replicas seeing
+    the same failure sequence retry at the same offsets — no thundering
+    herd *randomness* to reason about in tests, and the fault matrix can
+    pin exact transition times through an injected clock.
+  * **Weighted reservoir** (:class:`ReservoirWindow`) — the refit
+    window. The PR 8 ring buffer kept the *most recent* rows, so a
+    bursty tail owned the whole window; the paper's m = O(log n)
+    guarantee wants a small *representative* sample instead. A-Res
+    weighted reservoir sampling (Efraimidis & Spirakis) with per-row
+    weight = assignment distance d1: rows contributing most to the
+    objective — the ones the current medoid set explains worst — are
+    overrepresented, which is exactly where a refit can help. Seeded
+    from the selector's PRNG seed: the same query stream yields the same
+    refit inputs, bit for bit.
+
+Snapshot durability (the fourth piece) lives on the engine itself
+(``snapshot_dir=``), through the ``repro.checkpoint`` atomic-rename
+machinery; :func:`snapshot_fingerprint` pins a generation to the config
+that produced it so a reboot (or, later, a cross-process broadcast)
+can reject a generation fit under a different model.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import time
+
+import numpy as np
+
+VALIDATE_MODES = ("off", "cheap")
+ON_INVALID = ("quarantine", "raise")
+
+#: Label for quarantined (non-finite) query rows. Real labels are
+#: >= 0 indices into the medoid set, so -1 can never collide.
+QUARANTINE_LABEL = -1
+
+
+def check_validate(mode: str) -> str:
+    if mode not in VALIDATE_MODES:
+        raise ValueError(
+            f"unknown serving validate mode {mode!r}; options "
+            f"{VALIDATE_MODES} (the solver's 'paranoid' tier has no "
+            "serving analogue — the assign kernel is already pinned "
+            "bitwise against stream_assign)")
+    return mode
+
+
+def check_on_invalid(policy: str) -> str:
+    if policy not in ON_INVALID:
+        raise ValueError(
+            f"unknown on_invalid policy {policy!r}; options {ON_INVALID}")
+    return policy
+
+
+def admit(q: np.ndarray) -> np.ndarray:
+    """Row admission mask for a (n, p) query batch: True where every
+    feature is finite. One vectorised pass; the caller compacts."""
+    return np.isfinite(q).all(axis=1)
+
+
+# ------------------------------------------------------------- breaker --
+
+class RefitBreaker:
+    """Deterministic backoff + circuit breaker for background refits.
+
+    States (``state``):
+
+      ``closed``    — refits allowed, subject to the backoff schedule:
+          after the f-th consecutive failure the next attempt is allowed
+          ``backoff * 2**(f-1)`` seconds later (capped at
+          ``backoff_cap``). Jitterless by design: the delay is a pure
+          function of f, so retry times are reproducible.
+      ``open``      — ``threshold`` consecutive failures tripped the
+          breaker: no attempts at all for ``cooldown`` seconds
+          (serve-only mode; the engine keeps answering queries from the
+          last good generation).
+      ``half_open`` — the cooldown elapsed: exactly ONE probe attempt is
+          allowed. Success closes the breaker and resets the failure
+          count; failure re-opens it for another full cooldown.
+
+    All transitions happen inside :meth:`allow` / :meth:`record_failure`
+    / :meth:`record_success`, which the engine calls under its
+    bookkeeping lock — the breaker itself is lock-free. ``clock`` is
+    injectable (tests drive transitions with a fake clock; production
+    uses ``time.monotonic``).
+    """
+
+    CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
+
+    def __init__(self, *, backoff: float = 1.0, backoff_cap: float = 60.0,
+                 threshold: int = 3, cooldown: float = 30.0,
+                 clock=time.monotonic):
+        if backoff < 0 or backoff_cap < 0 or cooldown < 0:
+            raise ValueError("backoff, backoff_cap and cooldown must be >= 0")
+        if threshold < 1:
+            raise ValueError(f"threshold must be >= 1, got {threshold}")
+        self.backoff = float(backoff)
+        self.backoff_cap = float(backoff_cap)
+        self.threshold = int(threshold)
+        self.cooldown = float(cooldown)
+        self._clock = clock
+        self.state = self.CLOSED
+        self.consecutive_failures = 0
+        self.total_failures = 0
+        self._next_allowed = 0.0        # closed-state backoff deadline
+        self._opened_at = 0.0
+        self._probe_in_flight = False
+
+    def backoff_delay(self, failures: int) -> float:
+        """The deterministic schedule: delay after ``failures``
+        consecutive failures (0 -> no delay)."""
+        if failures <= 0:
+            return 0.0
+        return min(self.backoff * 2.0 ** (failures - 1), self.backoff_cap)
+
+    def allow(self) -> bool:
+        """May a refit attempt start now? Mutates state (open ->
+        half_open when the cooldown elapsed; half_open admits one
+        probe). Call under the engine lock."""
+        now = self._clock()
+        if self.state == self.OPEN:
+            if now - self._opened_at < self.cooldown:
+                return False
+            self.state = self.HALF_OPEN
+            self._probe_in_flight = False
+        if self.state == self.HALF_OPEN:
+            if self._probe_in_flight:
+                return False
+            self._probe_in_flight = True
+            return True
+        return now >= self._next_allowed
+
+    def record_success(self) -> None:
+        self.state = self.CLOSED
+        self.consecutive_failures = 0
+        self._next_allowed = 0.0
+        self._probe_in_flight = False
+
+    def record_failure(self) -> None:
+        now = self._clock()
+        self.consecutive_failures += 1
+        self.total_failures += 1
+        if (self.state == self.HALF_OPEN
+                or self.consecutive_failures >= self.threshold):
+            self.state = self.OPEN
+            self._opened_at = now
+            self._probe_in_flight = False
+        else:
+            self._next_allowed = now + self.backoff_delay(
+                self.consecutive_failures)
+
+    def retry_in(self) -> float:
+        """Seconds until the next attempt may start (0.0 = now)."""
+        now = self._clock()
+        if self.state == self.OPEN:
+            return max(0.0, self.cooldown - (now - self._opened_at))
+        if self.state == self.HALF_OPEN:
+            return 0.0 if not self._probe_in_flight else float("inf")
+        return max(0.0, self._next_allowed - now)
+
+    def stats(self) -> dict:
+        retry = self.retry_in()
+        return {"state": self.state,
+                "consecutive_failures": self.consecutive_failures,
+                "total_failures": self.total_failures,
+                "threshold": self.threshold,
+                "cooldown": self.cooldown,
+                "retry_in": None if retry == float("inf") else retry}
+
+
+# ----------------------------------------------------------- reservoir --
+
+class ReservoirWindow:
+    """Objective-weighted reservoir of query rows (A-Res).
+
+    Every pushed row i gets key ``u_i ** (1 / w_i)`` with ``u_i`` drawn
+    from a seeded PRNG and ``w_i`` its assignment distance d1; the
+    window keeps the ``capacity`` largest keys. Inclusion probability is
+    proportional to weight (Efraimidis & Spirakis 2006), so the sample
+    is representative of the *objective mass* of the whole stream, not
+    of its last ``capacity`` rows — and it is reproducible: the PRNG is
+    seeded once, rows are consumed in arrival order.
+
+    ``mode="ring"`` keeps the PR 8 recency window (last ``capacity``
+    rows, wrap-around overwrite) for callers that explicitly want
+    recency bias; the weights are ignored there.
+
+    Not thread-safe on its own: the engine serialises pushes under its
+    bookkeeping lock (satellite: tests/test_serving.py pins threaded
+    serving).
+    """
+
+    MODES = ("reservoir", "ring")
+    #: Weight floor: rows at distance exactly 0 (duplicates of a medoid)
+    #: carry no objective information; the floor keeps their keys
+    #: defined (u ** (1/eps) underflows to 0 — they lose every contest
+    #: against any positively-weighted row, which is the right limit).
+    MIN_WEIGHT = 1e-30
+
+    def __init__(self, capacity: int, p: int, *, mode: str = "reservoir",
+                 seed: int = 0):
+        if mode not in self.MODES:
+            raise ValueError(
+                f"unknown window mode {mode!r}; options {self.MODES}")
+        if capacity < 1:
+            raise ValueError(f"window capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self.mode = mode
+        self.rows = np.empty((capacity, p), np.float32)
+        self.keys = np.zeros((capacity,), np.float64)
+        self.fill = 0
+        self.pushed = 0
+        self._pos = 0                     # ring write head
+        self._rng = np.random.default_rng(np.uint64(seed) ^ np.uint64(
+            0x9E3779B97F4A7C15))          # decorrelate from the solve draw
+
+    def push(self, rows: np.ndarray, weights: np.ndarray) -> None:
+        r = rows.shape[0]
+        if r == 0:
+            return
+        self.pushed += r
+        if self.mode == "ring":
+            self._push_ring(rows)
+            return
+        w = self.capacity
+        keys = self._rng.random(r) ** (
+            1.0 / np.maximum(np.asarray(weights, np.float64),
+                             self.MIN_WEIGHT))
+        start = 0
+        if self.fill < w:                 # fill free slots first (A-Res)
+            take = min(w - self.fill, r)
+            self.rows[self.fill:self.fill + take] = rows[:take]
+            self.keys[self.fill:self.fill + take] = keys[:take]
+            self.fill += take
+            start = take
+        if start == r:
+            return
+        # Saturated: only keys beating the current minimum can enter.
+        # Candidate counts shrink as ~capacity/pushed once the stream is
+        # long, so the per-candidate argmin stays off the hot path.
+        thr = self.keys.min()
+        for i in range(start, r):
+            if keys[i] <= thr:
+                continue
+            j = int(self.keys.argmin())
+            if keys[i] <= self.keys[j]:
+                continue
+            self.keys[j] = keys[i]
+            self.rows[j] = rows[i]
+            thr = self.keys.min()
+
+    def _push_ring(self, rows: np.ndarray) -> None:
+        w = self.capacity
+        take = rows[-w:] if rows.shape[0] > w else rows
+        r = take.shape[0]
+        end = self._pos + r
+        if end <= w:
+            self.rows[self._pos:end] = take
+        else:
+            split = w - self._pos
+            self.rows[self._pos:] = take[:split]
+            self.rows[:end - w] = take[split:]
+        self._pos = end % w
+        self.fill = min(self.fill + r, w)
+
+    def content(self) -> np.ndarray:
+        """A copy of the current window rows, shape (fill, p)."""
+        return self.rows[:self.fill].copy()
+
+    def stats(self) -> dict:
+        return {"mode": self.mode, "fill": self.fill,
+                "capacity": self.capacity, "pushed": self.pushed}
+
+
+# ----------------------------------------------------------- snapshots --
+
+def snapshot_fingerprint(config: dict) -> str:
+    """Stable 16-hex-digit fingerprint of a snapshot-defining config.
+
+    Persisted in every durable snapshot's manifest and checked on load:
+    a generation fit under a different (k, p, metric, ...) must be
+    rejected loudly — fitted rows divorced from their config are the
+    same silent-wrong-answer factory ``MedoidSelector.load`` guards
+    against. JSON with sorted keys so dict order can't shift the hash.
+    """
+    blob = json.dumps(config, sort_keys=True, default=str).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]

@@ -1,18 +1,28 @@
-"""Fault injectors for the fault-tolerant runtime (DESIGN.md §6).
+"""Fault injectors for the fault-tolerant runtime (DESIGN.md §6, §9a).
 
-Each injector is either a ``_fault_hook`` factory — called by
-``runtime.solve_fault_tolerant`` at the top of every sweep with a
+Solver-side: each injector is either a ``_fault_hook`` factory — called
+by ``runtime.solve_fault_tolerant`` at the top of every sweep with a
 mutable ``{"sweep", "state", "ub", "lb"}`` dict whose entries are read
 back — or a filesystem mutation against a checkpoint directory.
 tests/test_solver_faults.py drives every one of them through the guard
 ladder; tests/helpers/kill_resume_check.py uses :func:`kill_at` for the
 real-SIGKILL resume tests.
+
+Serving-side (DESIGN.md §9a): :func:`refit_crash` / :func:`refit_hang`
+target the engine's ``_refit_hook`` seam (the instant between "new
+medoids computed" and "snapshot installed"); :func:`nonfinite_storm`
+poisons query batches; :func:`poison_medoids` corrupts the *installed*
+snapshot in place (the prepared device cache, or the raw host rows);
+:func:`corrupt_latest_checkpoint` doubles for serving snapshot dirs
+(same atomic machinery). tests/test_serving_faults.py drives all of
+them.
 """
 from __future__ import annotations
 
 import json
 import os
 import signal
+import threading
 
 import jax.numpy as jnp
 import numpy as np
@@ -108,3 +118,81 @@ def corrupt_latest_checkpoint(root: str, mode: str) -> int:
     else:
         raise ValueError(f"unknown corruption mode {mode!r}")
     return step
+
+
+# ------------------------------------------------------- serving faults --
+
+class RefitBoom(Exception):
+    """Raised by :func:`refit_crash` inside the refit worker — a
+    controlled stand-in for a crashing background refit (OOM, bad
+    kernel, poisoned window). The engine must record the failure, feed
+    the breaker, and keep serving the old generation."""
+
+
+def refit_crash(engine):
+    """Arm the engine's refit hook to crash every attempt (until the
+    hook is cleared). Returns the engine for chaining."""
+    def boom():
+        raise RefitBoom("injected refit crash")
+    engine._refit_hook = boom
+    return engine
+
+
+def refit_hang(engine):
+    """Arm the engine's refit hook to hang the worker on an Event.
+    Returns the release Event — ``.set()`` un-hangs any parked workers
+    (call it in test teardown so abandoned daemon threads exit). With
+    ``refit_timeout`` set, the supervisor must cancel the attempt,
+    record a TimeoutError, and leave the hung worker fenced off the
+    install."""
+    release = threading.Event()
+    engine._refit_hook = release.wait
+    return release
+
+
+def nonfinite_storm(x: np.ndarray, frac: float = 0.25, mode: str = "nan",
+                    seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Poison a random ``frac`` of the rows of a query batch with NaN
+    (``"nan"``), +/-inf (``"inf"``), or an alternating mix (``"mixed"``).
+    Returns ``(poisoned_copy, bad_row_mask)`` — the untouched rows are
+    bitwise the originals, so tests can assert the engine's answers on
+    the clean complement."""
+    rng = np.random.default_rng(seed)
+    out = np.array(x, np.float32, copy=True)
+    n = out.shape[0]
+    n_bad = max(1, int(round(frac * n)))
+    bad = np.zeros((n,), bool)
+    bad[rng.choice(n, size=n_bad, replace=False)] = True
+    idx = np.flatnonzero(bad)
+    cols = rng.integers(0, out.shape[1], size=n_bad)
+    if mode == "nan":
+        vals = np.full(n_bad, np.nan, np.float32)
+    elif mode == "inf":
+        vals = np.where(np.arange(n_bad) % 2 == 0, np.inf,
+                        -np.inf).astype(np.float32)
+    elif mode == "mixed":
+        vals = np.where(np.arange(n_bad) % 2 == 0, np.nan,
+                        np.inf).astype(np.float32)
+    else:
+        raise ValueError(f"unknown nonfinite_storm mode {mode!r}")
+    out[idx, cols] = vals
+    return out, bad
+
+
+def poison_medoids(engine, mode: str = "prepared"):
+    """Corrupt the engine's *installed* medoid snapshot in place — the
+    in-memory analogue of a flipped bit / bad DMA in the serving
+    replica. ``"prepared"`` poisons only the device-side prepared cache
+    (raw host rows stay healthy — recovery is a re-prepare);
+    ``"rows"`` poisons both (recovery needs the durable snapshot).
+    Returns the poisoned version number."""
+    model = engine._model
+    prepared = np.array(model.prepared, np.float32, copy=True)
+    prepared[0, 0] = np.nan
+    model.prepared = jnp.asarray(prepared)
+    if mode == "rows":
+        model.rows = np.array(model.rows, np.float32, copy=True)
+        model.rows[0, 0] = np.nan
+    elif mode != "prepared":
+        raise ValueError(f"unknown poison_medoids mode {mode!r}")
+    return model.version

@@ -1,0 +1,80 @@
+"""Subprocess body for the serving SIGKILL/reboot durability test
+(tests/test_serving_faults.py).
+
+Modes (argv[1]):
+  kill   — fit a pinned selector, save() it, build an engine with
+           ``snapshot_dir``, drive one refit (installing generation 1,
+           persisted fsync'd), serve a pinned query batch, dump the
+           served labels/d1 + installed version/rows to ``out_json``,
+           then SIGKILL ourselves. The parent asserts -SIGKILL.
+  reboot — build a fresh engine from the *selector checkpoint* (which
+           only knows generation 0) with the same ``snapshot_dir``:
+           ``snapshot_resume="auto"`` must land it on the exact last
+           installed generation — version AND medoid rows bitwise —
+           and the same query batch must serve bitwise-identical
+           labels/d1. Dump the same payload; the parent diffs.
+
+argv: mode ckpt_dir snapshot_dir out_json
+
+The problem is pinned (n=384, p=8, k=6, m=48, seed=11; refit on the
+first 192 rows scaled 1.05x) so both runs agree on every float.
+"""
+import json
+import os
+import signal
+import sys
+
+import numpy as np
+
+from repro.core.selector import MedoidSelector
+from repro.serving import AssignmentEngine
+
+
+def _payload(eng, q):
+    labels, d1 = eng.assign(q)
+    return {
+        "version": int(eng.medoid_version),
+        "rows_hex": eng.medoids.tobytes().hex(),
+        "labels": labels.tolist(),
+        "d1_hex": d1.tobytes().hex(),
+    }
+
+
+def main() -> None:
+    mode, ckpt_dir, snap_dir, out = sys.argv[1:5]
+
+    rng = np.random.default_rng(42)
+    x = rng.normal(size=(384, 8)).astype(np.float32)
+    q = rng.normal(size=(64, 8)).astype(np.float32)
+
+    if mode == "kill":
+        sel = MedoidSelector(k=6, m=48, seed=11).fit(x)
+        sel.save(ckpt_dir)
+        eng = AssignmentEngine(sel, micro_batch=32, snapshot_dir=snap_dir)
+        started = eng.refit_now(x[:192] * 1.05, wait=True)
+        assert started and eng.last_refit_error is None, eng.last_refit_error
+        assert eng.medoid_version == 1, eng.medoid_version
+        with open(out, "w") as f:
+            json.dump(_payload(eng, q), f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.kill(os.getpid(), signal.SIGKILL)
+        raise SystemExit("unreachable: SIGKILL did not take")
+    elif mode == "reboot":
+        eng = AssignmentEngine.from_checkpoint(
+            ckpt_dir, micro_batch=32, snapshot_dir=snap_dir)
+        with open(out, "w") as f:
+            json.dump(_payload(eng, q), f)
+            f.flush()
+            os.fsync(f.fileno())
+        eng.close()
+        print("OK reboot", flush=True)
+        # skip interpreter teardown: the XLA runtime's exit-time thread
+        # shutdown can std::terminate after our work is already durable
+        os._exit(0)
+    else:
+        raise SystemExit(f"unknown mode {mode!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -223,6 +223,135 @@ def test_engine_from_checkpoint_serves_identically(fitted, tmp_path):
     np.testing.assert_array_equal(da.view(np.uint32), db.view(np.uint32))
 
 
+def test_concurrent_assign_is_safe_and_bitwise(fitted):
+    """Satellite: multi-threaded serving. Host bookkeeping
+    (queries_served, EMA, window pushes, StepTimer.record) is serialised
+    under the engine lock while kernel calls overlap — every thread's
+    answers stay bitwise and no count is lost."""
+    import threading
+
+    x, sel = fitted
+    eng = AssignmentEngine.from_selector(sel, micro_batch=64,
+                                         auto_refit=False,
+                                         refit_window=256)
+    ref_labels, ref_d1 = eng.assign(x)
+    served_before = eng.queries_served
+    n_threads, reps = 6, 4
+    errs = []
+
+    def worker():
+        try:
+            for _ in range(reps):
+                labels, d1 = eng.assign(x)
+                np.testing.assert_array_equal(labels, ref_labels)
+                np.testing.assert_array_equal(d1.view(np.uint32),
+                                              ref_d1.view(np.uint32))
+        except Exception as e:          # pragma: no cover — failure path
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs, errs[0]
+    # no lost update: every row of every call was counted exactly once
+    assert eng.queries_served == served_before + n_threads * reps * len(x)
+    s = eng.stats()
+    # every micro-batch was timed exactly once (summary excludes warmup)
+    assert (s["latency"]["count"] + s["latency"]["warmup_excluded"]
+            == eng.timer.count == (1 + n_threads * reps) * 10)
+    assert s["window"]["fill"] == 256   # saturated, never overfilled
+
+
+def test_ring_window_wraparound_and_content_invariants():
+    """Satellite: the legacy ring mode's wrap-around — pushes larger
+    than the window keep the LAST capacity rows, multi-wrap sequences
+    land where a flat tail-slice says they should."""
+    from repro.serving import ReservoirWindow
+
+    win = ReservoirWindow(8, 2, mode="ring")
+    rows = np.arange(40, dtype=np.float32).reshape(20, 2)
+    win.push(rows[:3], np.ones(3, np.float32))
+    assert win.fill == 3
+    np.testing.assert_array_equal(win.content(), rows[:3])
+    # oversized push: only the last 8 rows of the push survive
+    win.push(rows, np.ones(20, np.float32))
+    assert win.fill == 8 and win.pushed == 23
+    np.testing.assert_array_equal(np.sort(win.content(), axis=0),
+                                  np.sort(rows[-8:], axis=0))
+    # multi-wrap: a long sequence of small pushes == the flat tail
+    win2 = ReservoirWindow(8, 2, mode="ring")
+    for i in range(0, 20, 3):
+        win2.push(rows[i:i + 3], np.ones(rows[i:i + 3].shape[0],
+                                         np.float32))
+    np.testing.assert_array_equal(np.sort(win2.content(), axis=0),
+                                  np.sort(rows[-8:], axis=0))
+    with pytest.raises(ValueError, match="mode"):
+        ReservoirWindow(8, 2, mode="nope")
+    with pytest.raises(ValueError, match="capacity"):
+        ReservoirWindow(0, 2)
+
+
+def test_reservoir_window_weighted_representative_and_reproducible():
+    """The objective-weighted reservoir: content rows are always a
+    subset of what was pushed, saturation holds fill == capacity across
+    oversized and repeated pushes, heavy-weight rows are
+    overrepresented (A-Res inclusion ~ weight), and the same seed +
+    stream reproduces the same window bit for bit."""
+    from repro.serving import ReservoirWindow
+
+    def feed(seed):
+        win = ReservoirWindow(32, 1, seed=seed)
+        rng = np.random.default_rng(99)
+        for _ in range(6):
+            rows = rng.normal(size=(100, 1)).astype(np.float32)
+            # weight 100x on negative rows: they should dominate
+            w = np.where(rows[:, 0] < 0, 100.0, 1.0).astype(np.float32)
+            win.push(rows, w)
+        return win
+
+    a, b = feed(7), feed(7)
+    assert a.fill == 32 and a.pushed == 600
+    np.testing.assert_array_equal(a.content(), b.content())      # seeded
+    assert (a.content()[:, 0] < 0).mean() > 0.8   # weight bias is real
+    c = feed(8)
+    assert not np.array_equal(a.content(), c.content())
+
+    # single oversized push saturates and samples from the whole push
+    win = ReservoirWindow(4, 1)
+    rows = np.arange(64, dtype=np.float32).reshape(64, 1)
+    win.push(rows, np.ones(64, np.float32))
+    assert win.fill == 4
+    assert set(win.content()[:, 0]).issubset(set(rows[:, 0]))
+    # zero-weight rows lose every contest against weighted ones
+    win.push(np.full((50, 1), -1.0, np.float32),
+             np.zeros(50, np.float32))
+    assert (win.content()[:, 0] >= 0).all()
+
+
+def test_successful_refit_clears_stale_error(fitted):
+    """Satellite fix: stats() used to report the last refit failure
+    forever; a subsequent success must clear it."""
+    x, sel = fitted
+    eng = AssignmentEngine.from_selector(copy.copy(sel), auto_refit=False)
+
+    def boom():
+        raise RuntimeError("refit died")
+    eng._refit_hook = boom
+    eng.refit_now(x, wait=True)
+    assert isinstance(eng.last_refit_error, RuntimeError)
+    assert eng.stats()["last_refit_error"] is not None
+    assert eng.stats()["breaker"]["consecutive_failures"] == 1
+
+    eng._refit_hook = None
+    assert eng.refit_now(x, wait=True)
+    assert eng.last_refit_error is None
+    assert eng.stats()["last_refit_error"] is None
+    assert eng.stats()["breaker"]["consecutive_failures"] == 0
+    assert eng.medoid_version == 1
+
+
 def test_solver_init_idx_contract():
     """one_batch_pam(init_idx=...): validated, honored, and fenced off
     from restarts/runtime composition."""

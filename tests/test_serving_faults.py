@@ -1,0 +1,446 @@
+"""Serving fault-injection matrix (DESIGN.md §9a).
+
+Every serving fault mode in tests/faults.py must leave the
+:class:`AssignmentEngine` serving labels/d1 **bitwise equal to
+``stream_assign``** for finite queries — faults degrade the refit loop
+or quarantine bad rows, never the answers:
+
+  * non-finite query storms (nan / inf / mixed) -> quarantined rows get
+    label −1 + NaN distance, clean rows are answered as if the storm
+    never happened, the drift EMA and refit window stay clean (and a
+    poisoned EMA under ``validate="off"`` self-heals);
+  * refit crash -> failure recorded, deterministic backoff, breaker
+    opens after N consecutive failures (open -> half_open -> closed
+    pinned on an injected clock), serving never blocks;
+  * refit hang + ``refit_timeout`` -> supervisor cancels, the zombie
+    worker is fenced off the install forever;
+  * poisoned medoid snapshot (prepared cache / raw rows) -> detected on
+    the served distances, recovered (re-prepare, else durable snapshot),
+    the retried batch is bitwise clean;
+  * corrupt snapshot file -> load walks back to the newest healthy
+    generation with a warning; config-fingerprint mismatch and stale
+    versions are loud errors;
+  * SIGKILL'd process -> reboot via ``snapshot_dir`` resumes the exact
+    last installed generation (version + rows + answers bitwise,
+    subprocess-verified).
+"""
+import json
+import os
+import pathlib
+import signal
+import subprocess
+import sys
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import faults
+from repro.core import MedoidSelector, streaming
+from repro.serving import AssignmentEngine, RefitBreaker
+from repro.serving.guards import QUARANTINE_LABEL
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+HELPER = ROOT / "tests" / "helpers" / "serving_kill_check.py"
+
+
+def _clusters(n=600, k=6, p=12, sep=8.0, noise=0.3, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((k, p)).astype(np.float32) * sep
+    return (centers[rng.integers(0, k, n)]
+            + rng.standard_normal((n, p)).astype(np.float32) * noise)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    x = _clusters()
+    sel = MedoidSelector(k=6, seed=0).fit(x)
+    return x, sel
+
+
+def _reference(sel, q):
+    """The ground truth the engine must match bitwise on finite rows."""
+    lab, d1 = streaming.stream_assign(
+        jnp.asarray(q), jnp.asarray(sel.medoids_), metric=sel.metric,
+        backend=sel.backend)
+    return np.asarray(lab, np.int32), np.asarray(d1, np.float32)
+
+
+def _assert_bitwise(labels, d1, ref_labels, ref_d1):
+    np.testing.assert_array_equal(labels, ref_labels)
+    np.testing.assert_array_equal(d1.view(np.uint32),
+                                  ref_d1.view(np.uint32))
+
+
+def _join_refit(eng, deadline_s=120):
+    deadline = time.time() + deadline_s
+    while eng.refit_in_flight and time.time() < deadline:
+        time.sleep(0.02)
+    assert not eng.refit_in_flight, "refit did not settle"
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# --------------------------------------------- non-finite query storms --
+
+@pytest.mark.parametrize("mode", ["nan", "inf", "mixed"])
+def test_storm_quarantines_bad_rows_serves_clean_rows_bitwise(fitted, mode):
+    x, sel = fitted
+    eng = AssignmentEngine.from_selector(sel, micro_batch=128,
+                                         auto_refit=False,
+                                         refit_window=1024)
+    q, bad = faults.nonfinite_storm(x[:256], frac=0.3, mode=mode, seed=1)
+    labels, d1 = eng.assign(q)
+    assert (labels[bad] == QUARANTINE_LABEL).all()
+    assert np.isnan(d1[bad]).all()
+    ref_labels, ref_d1 = _reference(sel, q[~bad])
+    _assert_bitwise(labels[~bad], d1[~bad], ref_labels, ref_d1)
+    s = eng.stats()
+    assert s["quarantined"] == int(bad.sum())
+    assert s["queries_served"] == int((~bad).sum())
+    # the EMA never saw the poison and the window holds only finite rows
+    assert np.isfinite(s["drift_ema"])
+    assert s["window"]["pushed"] == int((~bad).sum())
+    assert np.isfinite(eng._window.content()).all()
+
+
+def test_storm_of_only_bad_rows_and_on_invalid_raise(fitted):
+    x, sel = fitted
+    eng = AssignmentEngine.from_selector(sel, auto_refit=False)
+    q = np.full((8, eng.p), np.nan, np.float32)
+    labels, d1 = eng.assign(q)          # no finite row -> no kernel call
+    assert (labels == QUARANTINE_LABEL).all() and np.isnan(d1).all()
+    assert eng.stats()["drift_ema"] is None
+
+    strict = AssignmentEngine.from_selector(sel, auto_refit=False,
+                                            on_invalid="raise")
+    with pytest.raises(ValueError, match="non-finite"):
+        strict.assign(q)
+    q2 = np.array(x[:4], copy=True)
+    q2[2, 0] = np.inf
+    with pytest.raises(ValueError, match="row 2"):
+        strict.assign(q2)
+
+
+def test_validate_off_ema_self_heals_after_poisoned_batch(fitted):
+    """The PR 8 bug this issue names: under validate="off" a NaN batch
+    poisoned ``_drift_ema`` with a NaN that never decayed out. Now a
+    non-finite batch objective is simply not folded (the EMA holds), and
+    even an EMA poisoned out-of-band re-seeds from the next finite batch
+    instead of propagating NaN*decay forever."""
+    x, sel = fitted
+    eng = AssignmentEngine.from_selector(sel, validate="off",
+                                         auto_refit=False)
+    eng.assign(x[:128])
+    before = eng._drift_ema
+    assert np.isfinite(before)
+    q = np.array(x[:64], copy=True)
+    q[0, 0] = np.nan
+    eng.assign(q)                        # NaN batch objective: not folded
+    assert eng._drift_ema == before
+    eng._drift_ema = float("nan")        # the legacy poisoned state
+    assert eng.drift_ratio() == 1.0      # a poisoned EMA cannot arm refits
+    eng.assign(x[:128])
+    assert np.isfinite(eng._drift_ema)   # healed: re-seeded, not NaN*decay
+
+
+# ------------------------------------------------ breaker + supervision --
+
+def test_breaker_state_machine_on_fake_clock():
+    """open -> half_open -> closed transitions and the deterministic
+    backoff schedule, driven entirely by an injected clock."""
+    clk = FakeClock()
+    br = RefitBreaker(backoff=1.0, backoff_cap=8.0, threshold=3,
+                      cooldown=10.0, clock=clk)
+    # deterministic schedule: 1, 2, 4, 8, 8 (capped) — pure function of f
+    assert [br.backoff_delay(f) for f in range(6)] == [0, 1, 2, 4, 8, 8]
+
+    assert br.allow()
+    br.record_failure()                  # f=1 -> next allowed at t+1
+    assert not br.allow() and br.retry_in() == pytest.approx(1.0)
+    clk.advance(1.0)
+    assert br.allow()
+    br.record_failure()                  # f=2 -> backoff 2s
+    assert br.retry_in() == pytest.approx(2.0)
+    clk.advance(2.0)
+    assert br.allow()
+    br.record_failure()                  # f=3 == threshold -> OPEN
+    assert br.state == RefitBreaker.OPEN
+    assert not br.allow()
+    assert br.retry_in() == pytest.approx(10.0)
+    clk.advance(9.0)
+    assert not br.allow()                # still cooling down
+    clk.advance(1.0)
+    assert br.allow()                    # cooldown elapsed -> HALF_OPEN
+    assert br.state == RefitBreaker.HALF_OPEN
+    assert not br.allow()                # exactly ONE probe
+    br.record_failure()                  # probe failed -> OPEN again
+    assert br.state == RefitBreaker.OPEN
+    clk.advance(10.0)
+    assert br.allow()                    # second probe
+    br.record_success()                  # probe succeeded -> CLOSED, reset
+    assert br.state == RefitBreaker.CLOSED
+    assert br.consecutive_failures == 0 and br.total_failures == 4
+    assert br.allow() and br.retry_in() == 0.0
+
+
+def test_refit_crash_opens_breaker_engine_serves_on(fitted):
+    """Consecutive refit crashes trip the breaker; while open the drift
+    monitor arms nothing (serve-only); after the cooldown one half-open
+    probe runs and a success closes the breaker and installs."""
+    x, sel = fitted
+    clk = FakeClock()
+    eng = AssignmentEngine.from_selector(sel, micro_batch=128,
+                                         drift_threshold=1.2,
+                                         refit_window=2048,
+                                         breaker_threshold=2,
+                                         breaker_cooldown=30.0,
+                                         _clock=clk)
+    ref_labels, ref_d1 = _reference(sel, x)
+    faults.refit_crash(eng)
+    for _ in range(2):
+        assert eng.refit_now(x, wait=True)
+        labels, d1 = eng.assign(x)       # serving never blocked
+        _assert_bitwise(labels, d1, ref_labels, ref_d1)
+    s = eng.stats()
+    assert s["refit_failures"] == 2 and s["medoid_version"] == 0
+    assert s["breaker"]["state"] == "open"
+    assert isinstance(eng.last_refit_error, faults.RefitBoom)
+
+    # open = serve-only: heavy drift arms nothing
+    drifted = x + np.float32(5.0)
+    for _ in range(10):
+        eng.assign(drifted)
+    assert not eng.refit_in_flight and eng.refits == 0
+
+    # cooldown elapses; the fault clears; the half-open probe closes it
+    clk.advance(30.0)
+    eng._refit_hook = None
+    eng.assign(drifted)
+    _join_refit(eng)
+    assert eng.refits == 1 and eng.medoid_version == 1
+    s = eng.stats()
+    assert s["breaker"]["state"] == "closed"
+    assert s["breaker"]["consecutive_failures"] == 0
+    assert s["last_refit_error"] is None     # success cleared the stale
+    # failure stats() used to report forever (satellite fix)
+    eng.close()
+
+
+def test_refit_hang_timeout_fences_zombie_worker(fitted):
+    """A hung refit under ``refit_timeout``: the supervisor records a
+    TimeoutError and moves on; the abandoned worker can never install —
+    even after it un-hangs — and a fresh attempt succeeds meanwhile."""
+    x, sel = fitted
+    eng = AssignmentEngine.from_selector(sel, auto_refit=False,
+                                         refit_timeout=0.25)
+    old_rows = eng.medoids.copy()
+    release = faults.refit_hang(eng)
+    try:
+        t0 = time.monotonic()
+        assert eng.refit_now(x, wait=True)
+        assert time.monotonic() - t0 < 60
+        assert isinstance(eng.last_refit_error, TimeoutError)
+        assert eng.refit_failures == 1 and eng.medoid_version == 0
+        assert not eng.refit_in_flight    # supervisor done; zombie parked
+        np.testing.assert_array_equal(eng.medoids, old_rows)
+
+        # the zombie wakes up... and is fenced: no install, ever
+        release.set()
+        time.sleep(0.3)
+        assert eng.medoid_version == 0 and eng.refits == 0
+
+        # the engine is immediately free to refit again (fresh attempt,
+        # fresh cancel event), and the success clears the stale error
+        eng._refit_hook = None
+        assert eng.refit_now(x + np.float32(2.0), wait=True)
+        assert eng.last_refit_error is None
+        assert eng.medoid_version == 1 and eng.refits == 1
+    finally:
+        release.set()
+    eng.close()
+
+
+def test_refit_timeout_validation(fitted):
+    _, sel = fitted
+    with pytest.raises(ValueError, match="refit_timeout"):
+        AssignmentEngine.from_selector(sel, refit_timeout=0.0)
+
+
+# ------------------------------------------- poisoned medoid snapshots --
+
+def test_poisoned_prepared_cache_recovered_inline(fitted):
+    """Cache-poisoned device medoids (raw rows healthy): the cheap tier
+    spots non-finite distances for finite queries, re-prepares from the
+    rows, and serves the retried batch bitwise clean — no snapshot dir
+    needed."""
+    x, sel = fitted
+    eng = AssignmentEngine.from_selector(sel, micro_batch=128,
+                                         auto_refit=False)
+    ref_labels, ref_d1 = _reference(sel, x)
+    faults.poison_medoids(eng, mode="prepared")
+    labels, d1 = eng.assign(x)
+    _assert_bitwise(labels, d1, ref_labels, ref_d1)
+    s = eng.stats()
+    assert s["snapshots"]["recoveries"] == 1
+    assert s["medoid_version"] == 0      # same generation, re-prepared
+
+
+def test_poisoned_rows_recovered_from_durable_snapshot(fitted, tmp_path):
+    """Rows poisoned too: recovery reloads the generation from the
+    fsync'd snapshot dir and the retried batch is bitwise clean."""
+    x, sel = fitted
+    eng = AssignmentEngine.from_selector(
+        sel, micro_batch=128, auto_refit=False,
+        snapshot_dir=str(tmp_path / "snaps"))
+    ref_labels, ref_d1 = _reference(sel, x)
+    faults.poison_medoids(eng, mode="rows")
+    labels, d1 = eng.assign(x)
+    _assert_bitwise(labels, d1, ref_labels, ref_d1)
+    assert eng.stats()["snapshots"]["recoveries"] == 1
+    np.testing.assert_array_equal(eng.medoids, sel.medoids_)
+
+
+def test_poisoned_rows_without_snapshot_dir_is_loud(fitted):
+    x, sel = fitted
+    eng = AssignmentEngine.from_selector(sel, auto_refit=False)
+    faults.poison_medoids(eng, mode="rows")
+    with pytest.raises(RuntimeError, match="snapshot_dir"):
+        eng.assign(x[:64])
+
+
+def test_validate_off_serves_poison_unchecked(fitted):
+    """The fast path really is unguarded: with validate="off" a poisoned
+    prepared cache flows straight to the caller (that is the contract —
+    the cheap tier exists for feeds that need the check)."""
+    x, sel = fitted
+    eng = AssignmentEngine.from_selector(sel, validate="off",
+                                         auto_refit=False)
+    faults.poison_medoids(eng, mode="prepared")
+    _, d1 = eng.assign(x[:64])
+    # NaN on the XLA paths, the +BIG sentinel on the Pallas path —
+    # either way the poison reached the caller unchecked
+    assert not (d1 < 1e29).all()
+
+
+# --------------------------------------------- durable snapshot faults --
+
+def test_corrupt_snapshot_walks_back_to_previous_generation(
+        fitted, tmp_path):
+    x, sel = fitted
+    snap = str(tmp_path / "snaps")
+    eng = AssignmentEngine.from_selector(sel, auto_refit=False,
+                                         snapshot_dir=snap)
+    assert eng.refit_now(x[:300] * np.float32(1.05), wait=True)
+    assert eng.medoid_version == 1 and eng.snapshots_persisted == 2
+    gen0_rows = np.asarray(sel.medoids_, np.float32)
+
+    # newest generation corrupted on disk -> a rebooting engine warns
+    # and resumes the previous one
+    faults.corrupt_latest_checkpoint(snap, "garbage_manifest")
+    with pytest.warns(UserWarning, match="skipping corrupt"):
+        eng2 = AssignmentEngine.from_selector(sel, auto_refit=False,
+                                              snapshot_dir=snap)
+    assert eng2.medoid_version == 0
+    np.testing.assert_array_equal(eng2.medoids, gen0_rows)
+    ref_labels, ref_d1 = _reference(sel, x[:128])
+    labels, d1 = eng2.assign(x[:128])
+    _assert_bitwise(labels, d1, ref_labels, ref_d1)
+    eng.close(), eng2.close()
+
+
+def test_fingerprint_mismatch_and_stale_versions_are_loud(
+        fitted, tmp_path):
+    x, sel = fitted
+    snap = str(tmp_path / "snaps")
+    eng = AssignmentEngine.from_selector(sel, auto_refit=False,
+                                         snapshot_dir=snap)
+    # a selector fit under a different config must not adopt these
+    # generations silently
+    other = MedoidSelector(k=6, seed=123).fit(x)
+    with pytest.raises(ValueError, match="fingerprint"):
+        AssignmentEngine.from_selector(other, auto_refit=False,
+                                       snapshot_dir=snap)
+
+    # stale-version rejection: an older (or colliding) generation
+    # arriving through install_snapshot is refused
+    assert eng.refit_now(x[:300] * np.float32(1.05), wait=True)
+    assert eng.medoid_version == 1
+    with pytest.raises(ValueError, match="stale"):
+        eng.install_snapshot(sel.medoids_, sel.medoid_indices_, version=0)
+    with pytest.raises(ValueError, match="collision"):
+        eng.install_snapshot(sel.medoids_, sel.medoid_indices_, version=1)
+    with pytest.raises(ValueError, match="non-finite"):
+        eng.install_snapshot(np.full_like(sel.medoids_, np.nan),
+                             sel.medoid_indices_, version=2)
+    # a genuinely newer generation installs and resets drift tracking
+    v = eng.install_snapshot(sel.medoids_, sel.medoid_indices_, version=2)
+    assert v == 2 and eng.medoid_version == 2
+    eng.close()
+
+
+def test_install_snapshot_shape_validation(fitted):
+    _, sel = fitted
+    eng = AssignmentEngine.from_selector(sel, auto_refit=False)
+    with pytest.raises(ValueError, match="shape"):
+        eng.install_snapshot(sel.medoids_[:, :-1], sel.medoid_indices_, 1)
+    with pytest.raises(ValueError, match="indices"):
+        eng.install_snapshot(sel.medoids_, sel.medoid_indices_[:-1], 1)
+
+
+# ------------------------------------------------------ SIGKILL reboot --
+
+def test_sigkill_reboot_resumes_exact_generation(tmp_path):
+    """The process dies hard after installing generation 1; a rebooted
+    process (selector checkpoint only knows generation 0 +
+    snapshot_dir) resumes on the exact last installed generation:
+    version, medoid rows, and served answers all bitwise."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{ROOT / 'src'}:{env.get('PYTHONPATH', '')}"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    ckpt, snap = str(tmp_path / "sel"), str(tmp_path / "snaps")
+    out_kill, out_boot = str(tmp_path / "kill.json"), str(
+        tmp_path / "boot.json")
+
+    p = subprocess.run(
+        [sys.executable, str(HELPER), "kill", ckpt, snap, out_kill],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert p.returncode == -signal.SIGKILL, \
+        f"rc={p.returncode}\nSTDOUT:\n{p.stdout}\nSTDERR:\n{p.stderr}"
+
+    p = subprocess.run(
+        [sys.executable, str(HELPER), "reboot", ckpt, snap, out_boot],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert p.returncode == 0, \
+        f"rc={p.returncode}\nSTDOUT:\n{p.stdout}\nSTDERR:\n{p.stderr}"
+
+    with open(out_kill) as f:
+        before = json.load(f)
+    with open(out_boot) as f:
+        after = json.load(f)
+    assert before["version"] == 1
+    assert after == before      # version + rows + labels + d1, bitwise
+
+
+# ----------------------------------------------- refit data admission --
+
+def test_refit_now_scrubs_nonfinite_rows(fitted):
+    """Explicit refit data rides the same admission: a storm-poisoned
+    window cannot poison the next generation."""
+    x, sel = fitted
+    eng = AssignmentEngine.from_selector(sel, auto_refit=False)
+    q, bad = faults.nonfinite_storm(x, frac=0.2, seed=5)
+    assert eng.refit_now(q, wait=True)
+    assert eng.last_refit_error is None and eng.medoid_version == 1
+    assert np.isfinite(eng.medoids).all()
+    eng.close()

@@ -71,6 +71,16 @@ def compare(baseline: dict[str, dict], fresh: dict[str, dict], *,
             failures.append(
                 f"{name}: speedup_vs_loop={sp:.2f} < 1.0 — the assign "
                 "engine lost to the stream_assign host loop")
+        # Same machine-independent absolute bar for the serving guard
+        # tier (ISSUE 9): validate="cheap" is one O(n*p) finiteness scan
+        # on top of the O(n*p*k) kernel pass — if it costs more than
+        # factor x the unguarded path, the guard got onto the hot path.
+        ov = new.get("derived", {}).get("overhead_vs_off")
+        if ov is not None and ov > factor:
+            failures.append(
+                f"{name}: overhead_vs_off={ov:.2f} > {factor} — the "
+                "validate='cheap' admission tier is no longer a cheap "
+                "scan over the unguarded serve path")
         b_bytes = base.get("derived", {}).get("hbm_bytes_per_sweep")
         n_bytes = new.get("derived", {}).get("hbm_bytes_per_sweep")
         if b_bytes is not None and n_bytes is not None and b_bytes != n_bytes:
