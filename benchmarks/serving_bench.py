@@ -19,6 +19,11 @@ Records:
       branch, clean queries). derived: overhead_vs_off — the cheap/off
       wall ratio, same machine same instant, held absolutely (<= 1.5x)
       by tools/bench_compare.py.
+  serving/telemetry/engine_32768x512x64   the same pass with the PR 10
+      telemetry stack on (latency histogram, spans, served counters).
+      derived: telemetry_overhead_vs_off — the on/off wall ratio, same
+      machine same instant, held absolutely (<= 1.5x) by
+      tools/bench_compare.py; labels/d1 bitwise-pinned in-bench.
   serving/assign/stream_loop_32768x512x64 the replaced path, same shape.
 
 Labels and d1 are asserted *bitwise* equal between the two paths
@@ -110,6 +115,21 @@ def run(smoke: bool = False) -> list[str]:
         d_cheap.view(np.uint32), d_eng.view(np.uint32)), \
         "validate='cheap' diverged from the fast path on clean queries"
 
+    # PR 10: the same pass with the full telemetry stack on (per-micro-
+    # batch latency histogram + span per micro-batch + served counters).
+    # Shares the lru-cached jit with eng, so the delta is pure telemetry
+    # hook cost — held absolutely <= 1.5x by tools/bench_compare.py, and
+    # the labels/d1 must stay bitwise identical (telemetry observes the
+    # serve path, never steers it).
+    eng_tel = AssignmentEngine.from_selector(
+        sel, micro_batch=MICRO_BATCH, auto_refit=False, warmup=1,
+        validate="off", telemetry="on")
+    eng_tel.assign(x)
+    t_tel, (l_tel, d_tel) = _time_pass(lambda: eng_tel.assign(x), reps)
+    assert np.array_equal(l_tel, l_eng) and np.array_equal(
+        d_tel.view(np.uint32), d_eng.view(np.uint32)), \
+        "telemetry='on' diverged from the telemetry-off serve path"
+
     # The replaced path: host loop over eager stream_assign calls, same
     # micro-batching (per-call trace + dispatch is exactly the overhead
     # the engine's cached donated jit removes).
@@ -145,6 +165,11 @@ def run(smoke: bool = False) -> list[str]:
         f"us_per_query={t_cheap*1e6/N_QUERIES:.2f} "
         f"qps={N_QUERIES/t_cheap:.0f} "
         f"overhead_vs_off={t_cheap/t_eng:.2f}x"))
+    lines.append(csv_line(
+        f"serving/telemetry/engine_{shape}", t_tel * 1e6,
+        f"us_per_query={t_tel*1e6/N_QUERIES:.2f} "
+        f"qps={N_QUERIES/t_tel:.0f} "
+        f"telemetry_overhead_vs_off={t_tel/t_eng:.2f}x"))
     lines.append(csv_line(
         f"serving/assign/stream_loop_{shape}", t_loop * 1e6,
         f"us_per_query={t_loop*1e6/N_QUERIES:.2f} "

@@ -8,8 +8,15 @@ assignment through the AssignmentEngine — the serving-side use: route
 each incoming prompt to one of k representative "canonical prompts"
 (prefix-cache seeding / load balancing). Ends by drifting the query
 stream and letting the engine's monitor trigger a warm-start refit.
+
+Runs with ``telemetry="on"`` (DESIGN.md §10): after the drift/refit
+cycle it prints an excerpt of the live Prometheus scrape (fetched over
+HTTP from ``eng.serve_metrics()``) and writes the Chrome trace to
+``serve_demo_trace.json`` — load it in Perfetto / chrome://tracing to
+see the per-micro-batch spans and the refit.
 """
 import time
+import urllib.request
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +46,8 @@ def main():
     sel = MedoidSelector(k=8, variant="nniw", seed=0).fit(embs)
     eng = AssignmentEngine.from_selector(sel, micro_batch=256,
                                          drift_threshold=1.05,
-                                         refit_window=4096)
+                                         refit_window=4096,
+                                         telemetry="on")
 
     t0 = time.perf_counter()
     routes, d1 = eng.assign(embs)
@@ -63,6 +71,21 @@ def main():
           f"refits={s['refits']} drift_ratio={s['drift_ratio']:.3f} "
           f"p50={s['latency']['p50'] * 1e3:.2f} ms "
           f"p95={s['latency']['p95'] * 1e3:.2f} ms")
+
+    # Observability (PR 10): scrape the live endpoint, keep the serving
+    # series, and export the span trace.
+    srv = eng.serve_metrics()
+    with urllib.request.urlopen(srv.url, timeout=10) as resp:
+        scrape = resp.read().decode()
+    serving_lines = [ln for ln in scrape.splitlines()
+                     if ln.startswith("serving_") and "_bucket" not in ln]
+    print(f"\nprometheus scrape ({srv.url}, "
+          f"{len(scrape.splitlines())} lines; serving series):")
+    for ln in serving_lines:
+        print(f"  {ln}")
+    trace = eng.write_trace("serve_demo_trace.json")
+    print(f"\nchrome trace -> {trace} (open in Perfetto / chrome://tracing)")
+    eng.close()
 
 
 if __name__ == "__main__":

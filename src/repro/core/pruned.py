@@ -412,3 +412,33 @@ def solve_pruned(x, batch_idx, weights, init_idx, **kw) -> SolveResult:
     ``SolveResult``-only entry point ``one_batch_pam`` and the restart
     engine dispatch to (same trajectory, stats discarded)."""
     return solve_pruned_stats(x, batch_idx, weights, init_idx, **kw)[0]
+
+
+#: Bucket bounds for the pruning-effectiveness histograms: candidate
+#: counts, 1..10^6 in decades (a swap sweep scores at most n rows).
+_STATS_BUCKETS = (1.0, 10.0, 100.0, 1e3, 1e4, 1e5, 1e6)
+
+
+def publish_stats(tel, per) -> None:
+    """Fold one sweep's ``(scored, survivors, fallback)`` triple — the
+    ``_pruned_step`` per-sweep stats the while_loop solver accumulates
+    into :class:`PrunedStats` — into the telemetry registry
+    (DESIGN.md §10). Accepts scalars (single solve) or R-lane vectors
+    (the vmapped restart step); each lane lands as one observation.
+    Host-side only: the runtime calls this after the step's outputs are
+    already synced for the sweep log, so it adds no device round-trip
+    the telemetry-off path doesn't have."""
+    scored, surv, fb = (np.asarray(v).reshape(-1) for v in per)
+    h_sc = tel.histogram("pruned_scored_per_sweep",
+                         "exactly rescored candidates per pruned sweep",
+                         buckets=_STATS_BUCKETS)
+    h_su = tel.histogram("pruned_survivors_per_sweep",
+                         "bound-surviving candidates per pruned sweep",
+                         buckets=_STATS_BUCKETS)
+    c_fb = tel.counter("pruned_sweep_fallbacks_total",
+                       "pruned sweeps that fell back to a dense scan")
+    for s, u, f in zip(scored, surv, fb):
+        h_sc.observe(float(s))
+        h_su.observe(float(u))
+        if bool(f):
+            c_fb.inc()

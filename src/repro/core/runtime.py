@@ -56,8 +56,109 @@ import numpy as np
 from repro.core import guards, sampling, solver
 from repro.core import trace as trace_mod
 from repro.monitoring import StepTimer
+from repro.monitoring import telemetry as telemetry_mod
 
 _CKPT_VERSION = 1
+
+
+# ----------------------------------------------------------- telemetry --
+
+class _SolveTelemetry:
+    """Per-solve scope over a (usually process-wide) metrics registry
+    (DESIGN.md §10). Counters are monotonic across solves — Prometheus
+    semantics — so this records each counter's value at solve start and
+    exposes the solve's own deltas via :meth:`snapshot`, which lands in
+    ``SolveReport.metrics``: the report's counts are *views over the
+    registry*, not a parallel set of bare ints. Every call is host-side
+    bookkeeping around the jitted steps; with ``telemetry="off"`` no
+    instance exists and the solve loop is the untouched path (pinned by
+    the ``telemetry_overhead_vs_off`` bench gate)."""
+
+    def __init__(self, tel: telemetry_mod.Telemetry, strategy: str):
+        self.tel = tel
+        self.strategy = strategy
+        r = tel.registry
+        self.c_sweeps = r.counter("solve_sweeps_total",
+                                  "executed solve sweeps")
+        self.c_swaps = r.counter("solve_swaps_total", "accepted swaps")
+        self.c_fallbacks = r.counter(
+            "solve_fallbacks_total",
+            "degradation-ladder firings, by recovery kind")
+        self.c_violations = r.counter(
+            "solve_guard_violations_total",
+            "invariant-guard violations, by guard name")
+        self.c_ckpt = r.counter("solve_checkpoint_writes_total",
+                                "persisted sweep checkpoints")
+        self.c_restores = r.counter("solve_checkpoint_restores_total",
+                                    "resume restores from checkpoint")
+        self.h_sweep = r.histogram("solve_sweep_seconds",
+                                   "wall seconds per solve sweep")
+        self.h_ckpt_s = r.histogram("solve_checkpoint_write_seconds",
+                                    "wall seconds per checkpoint write")
+        self.h_ckpt_b = r.histogram(
+            "solve_checkpoint_bytes", "leaf bytes per checkpoint write",
+            buckets=(1e3, 1e4, 1e5, 1e6, 1e7, 1e8, 1e9))
+        self.h_restore = r.histogram("solve_checkpoint_restore_seconds",
+                                     "wall seconds per resume restore")
+        self._counters = {
+            "sweeps": (self.c_sweeps, {"strategy": strategy}),
+            "swaps": (self.c_swaps, {"strategy": strategy}),
+            "fallbacks": (self.c_fallbacks, None),
+            "guard_violations": (self.c_violations, None),
+            "checkpoint_writes": (self.c_ckpt, {}),
+            "checkpoint_restores": (self.c_restores, {}),
+        }
+        self._base = {k: self._read(k) for k in self._counters}
+
+    def _read(self, key: str) -> float:
+        c, labels = self._counters[key]
+        return c.total() if labels is None else c.value(**labels)
+
+    def snapshot(self) -> dict:
+        """This solve's registry deltas (JSON-safe)."""
+        return {k: self._read(k) - v for k, v in self._base.items()}
+
+    # -- per-event hooks (each mirrors one SolveReport record) ----------
+    def sweep(self, sweep: int, t0_ns: int, t1_ns: int, accepted) -> None:
+        self.c_sweeps.inc(strategy=self.strategy)
+        self.h_sweep.observe((t1_ns - t0_ns) / 1e9,
+                             strategy=self.strategy)
+        acc = np.asarray(accepted)
+        if acc.any():
+            self.c_swaps.inc(float(acc.sum()), strategy=self.strategy)
+        self.tel.complete("solve/sweep", t0_ns, t1_ns, sweep=sweep,
+                          strategy=self.strategy)
+
+    def violation(self, sweep: int, names) -> None:
+        for nm in names:
+            self.c_violations.inc(strategy=self.strategy, guard=nm)
+        self.tel.instant("solve/guard_violation", sweep=sweep,
+                         guards=list(names))
+
+    def fallback(self, sweep: int, kind: str) -> None:
+        self.c_fallbacks.inc(strategy=self.strategy, kind=kind)
+        self.tel.instant("solve/fallback", sweep=sweep, kind=kind)
+
+    def pruned_stats(self, per) -> None:
+        """Fold one sweep's PrunedStats scalars (or R-lane vectors) into
+        the pruning-effectiveness series (core/pruned.publish_stats)."""
+        from repro.core import pruned as pruned_mod
+        pruned_mod.publish_stats(self.tel, per)
+
+    def checkpoint_write(self, t0_ns: int, t1_ns: int,
+                         nbytes: int) -> None:
+        self.c_ckpt.inc()
+        self.h_ckpt_s.observe((t1_ns - t0_ns) / 1e9)
+        self.h_ckpt_b.observe(nbytes)
+        self.tel.complete("solve/checkpoint_write", t0_ns, t1_ns,
+                          bytes=nbytes)
+
+    def checkpoint_restore(self, t0_ns: int, t1_ns: int,
+                           sweep: int) -> None:
+        self.c_restores.inc()
+        self.h_restore.observe((t1_ns - t0_ns) / 1e9)
+        self.tel.complete("solve/checkpoint_restore", t0_ns, t1_ns,
+                          sweep=sweep)
 
 
 # ----------------------------------------------------------- reporting --
@@ -77,6 +178,13 @@ class SolveReport:
     ``election`` the restart
     winner (None for a single restart). ``resumed_from`` is the sweep a
     ``resume="auto"`` run continued from (None = fresh start).
+
+    ``metrics`` (telemetry on only, else None) is this solve's slice of
+    the shared metrics registry — the per-solve deltas of the
+    ``solve_*_total`` counters (``_SolveTelemetry.snapshot``). The bare
+    counts here are *views over the registry*, not a second source of
+    truth: ``metrics["sweeps"] == sweeps``, ``metrics["fallbacks"] ==
+    len(fallbacks)``, etc. (tests/test_monitoring.py pins this).
     """
     strategy: str = "batched"
     validate: str = "off"
@@ -91,6 +199,7 @@ class SolveReport:
     sweep_log: list = dataclasses.field(default_factory=list)
     timer: StepTimer = dataclasses.field(default_factory=StepTimer)
     election: dict | None = None
+    metrics: dict | None = None
 
     def to_dict(self) -> dict:
         """JSON-safe snapshot (rides checkpoint extras; the timer is
@@ -287,9 +396,10 @@ class _Checkpointer:
     """Sweep-granular persistence through ``repro.checkpoint``."""
 
     def __init__(self, root: str | None, *, every: int, keep: int,
-                 fingerprint: dict):
+                 fingerprint: dict, stel: _SolveTelemetry | None = None):
         self.root, self.every, self.keep = root, max(1, every), keep
         self.fingerprint = fingerprint
+        self.stel = stel
         self._last = None
 
     def maybe_save(self, done_sweeps: int, leaves: dict,
@@ -302,8 +412,13 @@ class _Checkpointer:
         extra = {"version": _CKPT_VERSION, "sweep": done_sweeps,
                  "fingerprint": self.fingerprint,
                  "report": report.to_dict()}
+        t0 = time.perf_counter_ns()
         ckpt.save(self.root, done_sweeps, leaves, extra=extra,
                   keep=self.keep)
+        if self.stel is not None:
+            self.stel.checkpoint_write(
+                t0, time.perf_counter_ns(),
+                sum(np.asarray(v).nbytes for v in leaves.values()))
         self._last = done_sweeps
         report.checkpoint_writes.append(done_sweeps)
 
@@ -332,6 +447,7 @@ class _Checkpointer:
             _check_fingerprint(saved.get("fingerprint", {}),
                                self.fingerprint)
             break
+        t0 = time.perf_counter_ns()
         try:
             leaves, extra, step = ckpt.restore_latest_valid(self.root,
                                                             template)
@@ -341,6 +457,9 @@ class _Checkpointer:
                 f"{self.root} ({e}); starting fresh", UserWarning,
                 stacklevel=2)
             return None
+        if self.stel is not None:
+            self.stel.checkpoint_restore(t0, time.perf_counter_ns(),
+                                         int(extra["sweep"]))
         report = SolveReport.from_dict(extra.get("report", {}))
         report.timer = StepTimer()
         self._last = step
@@ -372,11 +491,22 @@ def solve_fault_tolerant(
     ckpt_every: int = 1,
     resume: str = "auto",
     keep: int = 3,
+    telemetry="off",
     _fault_hook=None,
 ) -> tuple[solver.SolveResult, sampling.Batch, SolveReport]:
     """Fault-tolerant OneBatchPAM: ``one_batch_pam``'s trajectory, bit
     for bit, plus checkpoint/resume, invariant guards, and degradation
     (module docstring). Returns ``(result, batch, report)``.
+
+    ``telemetry="off" | "on" | Telemetry`` wires the solve into the
+    metrics registry + span tracer (DESIGN.md §10): sweep/checkpoint
+    spans, sweep-seconds and checkpoint write/restore histograms,
+    fallback/violation counters, pruned survivors/scored histograms,
+    and ``report.metrics`` as the per-solve registry deltas. All of it
+    is host-side bookkeeping around the same jitted steps — the
+    trajectory is bitwise identical either way, and ``"off"`` skips
+    every telemetry branch (the untouched path the
+    ``telemetry_overhead_vs_off`` bench gate pins).
 
     ``_fault_hook(run)`` is the test seam: called at the top of every
     sweep with a mutable ``{"sweep", "state", "ub", "lb"}`` dict whose
@@ -384,6 +514,7 @@ def solve_fault_tolerant(
     corruption and kills through it. Exceptions it raises propagate
     (completed sweeps are already checkpointed).
     """
+    tel = telemetry_mod.resolve(telemetry)
     guards.check_validate(validate)
     if resume not in ("auto", "never"):
         raise ValueError(f"resume must be 'auto' or 'never', got {resume!r}")
@@ -424,14 +555,14 @@ def solve_fault_tolerant(
             restarts=restarts, eval_m=eval_m, prune_m=prune_m_eff,
             survivor_frac=survivor_frac, validate=validate,
             checkpoint_dir=checkpoint_dir, ckpt_every=ckpt_every,
-            resume=resume, keep=keep, fault_hook=_fault_hook)
+            resume=resume, keep=keep, tel=tel, fault_hook=_fault_hook)
     return _solve_single(
         key, x, k, m=m, variant=variant, metric=metric, strategy=strategy,
         max_swaps=max_swaps, eps=eps, backend=backend,
         chunk_size=chunk_size, block_dtype=block_dtype, eval_m=eval_m,
         prune_m=prune_m_eff, survivor_frac=survivor_frac,
         validate=validate, checkpoint_dir=checkpoint_dir,
-        ckpt_every=ckpt_every, resume=resume, keep=keep,
+        ckpt_every=ckpt_every, resume=resume, keep=keep, tel=tel,
         fault_hook=_fault_hook)
 
 
@@ -444,20 +575,25 @@ def _hook(fault_hook, sweep, state, ub, lb):
     return run["state"], run["ub"], run["lb"]
 
 
-def _record_violation(report, sweep, names, *, lanes=None, detail=""):
+def _record_violation(report, sweep, names, *, lanes=None, detail="",
+                      stel=None):
     entry = {"sweep": int(sweep), "guards": list(names)}
     if lanes is not None:
         entry["lanes"] = [int(r) for r in lanes]
     if detail:
         entry["detail"] = detail
     report.violations.append(entry)
+    if stel is not None:
+        stel.violation(int(sweep), names)
 
 
-def _record_fallback(report, sweep, kind, *, lanes=None):
+def _record_fallback(report, sweep, kind, *, lanes=None, stel=None):
     entry = {"sweep": int(sweep), "kind": kind}
     if lanes is not None:
         entry["lanes"] = [int(r) for r in lanes]
     report.fallbacks.append(entry)
+    if stel is not None:
+        stel.fallback(int(sweep), kind)
 
 
 # --------------------------------------------------------- one restart --
@@ -465,9 +601,11 @@ def _record_fallback(report, sweep, kind, *, lanes=None):
 def _solve_single(key, x, k, *, m, variant, metric, strategy, max_swaps,
                   eps, backend, chunk_size, block_dtype, eval_m, prune_m,
                   survivor_frac, validate, checkpoint_dir, ckpt_every,
-                  resume, keep, fault_hook):
+                  resume, keep, tel=None, fault_hook=None):
     from repro.core import pruned as pruned_mod
     n, p = x.shape
+    stel = (_SolveTelemetry(tel, strategy) if tel is not None else None)
+    solve_t0 = time.perf_counter_ns() if stel is not None else 0
     debias = variant == "debias"
     key_b, key_i = jax.random.split(key)
     init_idx = jax.random.choice(key_i, n, shape=(k,), replace=False)
@@ -496,7 +634,7 @@ def _solve_single(key, x, k, *, m, variant, metric, strategy, max_swaps,
                       block_dtype=block_dtype, restarts=1, eval_m=eval_m,
                       prune_m=prune_m, survivor_frac=survivor_frac)
     ckpt = _Checkpointer(checkpoint_dir, every=ckpt_every, keep=keep,
-                         fingerprint=fp)
+                         fingerprint=fp, stel=stel)
     report = SolveReport(strategy=strategy, validate=validate, restarts=1)
     sweep = 0
     if resume == "auto":
@@ -513,7 +651,7 @@ def _solve_single(key, x, k, *, m, variant, metric, strategy, max_swaps,
     if strategy == "eager":
         _run_eager(d, state, report=report, ckpt=ckpt, sweep=sweep,
                    max_swaps=max_swaps, eps=eps, validate=validate,
-                   fault_hook=fault_hook)
+                   stel=stel, fault_hook=fault_hook)
         # state was rebound inside; re-fetch the loop's final state
         state = report._eager_final  # set by _run_eager
         del report._eager_final
@@ -522,6 +660,7 @@ def _solve_single(key, x, k, *, m, variant, metric, strategy, max_swaps,
         report.sweeps = len(report.sweep_log)
         report.swaps = int(state.t)
         report.converged = bool(state.done)
+        _finish_tel(stel, report, solve_t0, n=n, k=k, restarts=1)
         return res, batch, report
 
     if strategy == "batched":
@@ -538,6 +677,8 @@ def _solve_single(key, x, k, *, m, variant, metric, strategy, max_swaps,
                if pruned_caches else None)
     d32 = None  # lazily rebuilt f32 block for the bf16 escalation
 
+    per_slot = {}  # pruned per-sweep stats, captured only under telemetry
+
     def run_step(st, u, lo):
         if strategy == "batched":
             out = step(d, st)
@@ -545,8 +686,10 @@ def _solve_single(key, x, k, *, m, variant, metric, strategy, max_swaps,
         if strategy == "matrix_free":
             out = step(xp, b, w, bidx, st)
             return (*out, u, lo)
-        new_state, ub_n, lb_n, improved, best, i, l, _ = step(
+        new_state, ub_n, lb_n, improved, best, i, l, per = step(
             xp, b, w, bidx, st, u, lo)
+        if stel is not None:
+            per_slot["per"] = per
         return new_state, improved, best, i, l, ub_n, lb_n
 
     def run_oracle(st):
@@ -560,6 +703,7 @@ def _solve_single(key, x, k, *, m, variant, metric, strategy, max_swaps,
     while not bool(state.done) and int(state.t) < max_swaps:
         state, ub, lb = _hook(fault_hook, sweep, state, ub, lb)
         t0 = time.perf_counter()
+        t0_ns = time.perf_counter_ns() if stel is not None else 0
         new_state, improved, best, i, l, ub_n, lb_n = run_step(state, ub, lb)
 
         if validate != "off":
@@ -578,7 +722,8 @@ def _solve_single(key, x, k, *, m, variant, metric, strategy, max_swaps,
                 if guards.selection_mismatch(best, i, l, o_best, o_i, o_l):
                     names.append("selection_mismatch")
             if names:
-                _record_violation(report, sweep, names, detail=detail)
+                _record_violation(report, sweep, names, detail=detail,
+                                  stel=stel)
                 # ---- degradation ladder ----------------------------
                 if pruned_caches:
                     # The matrix-free sweep IS the exactness oracle:
@@ -587,7 +732,8 @@ def _solve_single(key, x, k, *, m, variant, metric, strategy, max_swaps,
                         xp, b, w, bidx, state)
                     ub_n = jnp.full((n, k), pruned_mod.BIG)
                     lb_n = jnp.full((n, k), -pruned_mod.BIG)
-                    _record_fallback(report, sweep, "pruned->matrix_free")
+                    _record_fallback(report, sweep, "pruned->matrix_free",
+                                     stel=stel)
                 elif (strategy == "batched"
                       and block_dtype is not None):
                     if d32 is None:
@@ -598,7 +744,8 @@ def _solve_single(key, x, k, *, m, variant, metric, strategy, max_swaps,
                     state = _jit_reanchor_block(False)(d32, state)
                     new_state, improved, best, i, l = \
                         trace_mod._jit_fused_step(eps, backend)(d32, state)
-                    _record_fallback(report, sweep, "bf16->f32_rescore")
+                    _record_fallback(report, sweep, "bf16->f32_rescore",
+                                     stel=stel)
                 else:
                     if strategy == "batched":
                         state = _jit_reanchor_block(False)(d, state)
@@ -608,7 +755,8 @@ def _solve_single(key, x, k, *, m, variant, metric, strategy, max_swaps,
                                                         state)
                     new_state, improved, best, i, l, ub_n, lb_n = \
                         run_step(state, ub, lb)
-                    _record_fallback(report, sweep, "state_reanchor")
+                    _record_fallback(report, sweep, "state_reanchor",
+                                     stel=stel)
                 still = guards.cheap_names(cheap(state, new_state,
                                                  improved, best, eps_a,
                                                  1.0))
@@ -616,6 +764,11 @@ def _solve_single(key, x, k, *, m, variant, metric, strategy, max_swaps,
                     raise guards.GuardViolation(still, sweep=sweep,
                                                 detail="after recovery")
         report.timer.record(time.perf_counter() - t0)
+        if stel is not None:
+            stel.sweep(sweep, t0_ns, time.perf_counter_ns(), improved)
+            per = per_slot.pop("per", None)
+            if per is not None:
+                stel.pruned_stats(per)
 
         acc = bool(improved)
         report.sweep_log.append({"sweep": sweep, "accepted": acc,
@@ -635,11 +788,24 @@ def _solve_single(key, x, k, *, m, variant, metric, strategy, max_swaps,
     report.sweeps = len(report.sweep_log)
     report.swaps = int(state.t)
     report.converged = bool(state.done)
+    _finish_tel(stel, report, solve_t0, n=n, k=k, restarts=1)
     return res, batch, report
 
 
+def _finish_tel(stel, report, solve_t0, *, n, k, restarts):
+    """Close out a solve's telemetry: snapshot the per-solve registry
+    deltas into ``report.metrics`` and emit the root "solve" span."""
+    if stel is None:
+        return
+    report.metrics = stel.snapshot()
+    stel.tel.complete("solve", solve_t0, time.perf_counter_ns(),
+                      strategy=stel.strategy, n=n, k=k,
+                      restarts=restarts, sweeps=report.sweeps,
+                      swaps=report.swaps)
+
+
 def _run_eager(d, state, *, report, ckpt, sweep, max_swaps, eps, validate,
-               fault_hook):
+               stel=None, fault_hook=None):
     """Pass-level host loop for the eager strategy (cheap tier only —
     a first-improvement pass has no single selection to oracle)."""
     scan = trace_mod._jit_eager_pass(eps)
@@ -649,19 +815,23 @@ def _run_eager(d, state, *, report, ckpt, sweep, max_swaps, eps, validate,
     while not bool(state.done) and sweep < max_passes:
         state, _, _ = _hook(fault_hook, sweep, state, None, None)
         t0 = time.perf_counter()
+        t0_ns = time.perf_counter_ns() if stel is not None else 0
         new_state, swapped, flags, slots = scan(d, state)
         if validate != "off":
             names = guards.cheap_names(cheap(state, new_state, swapped))
             if names:
-                _record_violation(report, sweep, names)
+                _record_violation(report, sweep, names, stel=stel)
                 state = reanchor(d, state)
                 new_state, swapped, flags, slots = scan(d, state)
-                _record_fallback(report, sweep, "state_reanchor")
+                _record_fallback(report, sweep, "state_reanchor",
+                                 stel=stel)
                 still = guards.cheap_names(cheap(state, new_state, swapped))
                 if still:
                     raise guards.GuardViolation(still, sweep=sweep,
                                                 detail="after recovery")
         report.timer.record(time.perf_counter() - t0)
+        if stel is not None:
+            stel.sweep(sweep, t0_ns, time.perf_counter_ns(), flags)
         nsw = np.flatnonzero(np.asarray(flags))
         report.sweep_log.append(
             {"sweep": sweep, "accepted": bool(swapped),
@@ -680,10 +850,13 @@ def _run_eager(d, state, *, report, ckpt, sweep, max_swaps, eps, validate,
 def _solve_restarts(key, x, k, *, m, user_m, variant, metric, strategy,
                     max_swaps, eps, backend, chunk_size, block_dtype,
                     restarts, eval_m, prune_m, survivor_frac, validate,
-                    checkpoint_dir, ckpt_every, resume, keep, fault_hook):
+                    checkpoint_dir, ckpt_every, resume, keep, tel=None,
+                    fault_hook=None):
     from repro.core import pruned as pruned_mod
     from repro.core import restarts as restarts_mod
     n, p = x.shape
+    stel = (_SolveTelemetry(tel, strategy) if tel is not None else None)
+    solve_t0 = time.perf_counter_ns() if stel is not None else 0
     debias = variant == "debias"
     block_free = strategy in ("matrix_free", "pruned")
     rm = solver._clamp_pool_m(n, restarts, m, user_m=user_m)
@@ -717,7 +890,7 @@ def _solve_restarts(key, x, k, *, m, user_m, variant, metric, strategy,
                       eval_m=eval_m, prune_m=prune_m,
                       survivor_frac=survivor_frac)
     ckpt = _Checkpointer(checkpoint_dir, every=ckpt_every, keep=keep,
-                         fingerprint=fp)
+                         fingerprint=fp, stel=stel)
     report = SolveReport(strategy=strategy, validate=validate,
                          restarts=restarts)
     sweep = 0
@@ -742,6 +915,8 @@ def _solve_restarts(key, x, k, *, m, user_m, variant, metric, strategy,
     eps_a = jnp.float32(eps)
     d32_pool = None
 
+    per_slot = {}  # pruned per-sweep stats (R-lane), telemetry only
+
     def run_step(st, u, lo):
         if strategy == "batched":
             out = step_v(d_pool, st)
@@ -749,8 +924,10 @@ def _solve_restarts(key, x, k, *, m, user_m, variant, metric, strategy,
         if strategy == "matrix_free":
             out = step_v(xp, b, w, bidx, st)
             return (*out, u, lo)
-        new_state, ub_n, lb_n, improved, best, i, l, _ = step_v(
+        new_state, ub_n, lb_n, improved, best, i, l, per = step_v(
             xp, b, w, bidx, st, u, lo)
+        if stel is not None:
+            per_slot["per"] = per
         return new_state, improved, best, i, l, ub_n, lb_n
 
     def lanes_active(st):
@@ -760,6 +937,7 @@ def _solve_restarts(key, x, k, *, m, user_m, variant, metric, strategy,
     while active.any():
         state, ub, lb = _hook(fault_hook, sweep, state, ub, lb)
         t0 = time.perf_counter()
+        t0_ns = time.perf_counter_ns() if stel is not None else 0
         new_state, improved, best, i, l, ub_n, lb_n = run_step(state, ub, lb)
 
         if validate != "off":
@@ -793,7 +971,8 @@ def _solve_restarts(key, x, k, *, m, user_m, variant, metric, strategy,
                         names = sorted(set(names) | set(lane_names))
             if bad.any():
                 lanes = np.flatnonzero(bad)
-                _record_violation(report, sweep, names, lanes=lanes)
+                _record_violation(report, sweep, names, lanes=lanes,
+                                  stel=stel)
                 badm = jnp.asarray(bad)
                 if pruned_caches:
                     alt = mf_step_v(xp, b, w, bidx, state)
@@ -808,7 +987,7 @@ def _solve_restarts(key, x, k, *, m, user_m, variant, metric, strategy,
                         badm, jnp.full((restarts, n, k), -pruned_mod.BIG),
                         lb_n)
                     _record_fallback(report, sweep, "pruned->matrix_free",
-                                     lanes=lanes)
+                                     lanes=lanes, stel=stel)
                 elif strategy == "batched" and block_dtype is not None:
                     if d32_pool is None:
                         d32_pool = restarts_mod.build_pool(
@@ -824,7 +1003,7 @@ def _solve_restarts(key, x, k, *, m, user_m, variant, metric, strategy,
                         _lane_where(badm, a, o) for a, o in
                         zip(alt[1:], (improved, best, i, l)))
                     _record_fallback(report, sweep, "bf16->f32_rescore",
-                                     lanes=lanes)
+                                     lanes=lanes, stel=stel)
                 else:
                     if strategy == "batched":
                         re = _jit_reanchor_block(True)(d_pool, state)
@@ -841,7 +1020,7 @@ def _solve_restarts(key, x, k, *, m, user_m, variant, metric, strategy,
                         ub_n = _lane_where(badm, alt[5], ub_n)
                         lb_n = _lane_where(badm, alt[6], lb_n)
                     _record_fallback(report, sweep, "state_reanchor",
-                                     lanes=lanes)
+                                     lanes=lanes, stel=stel)
                 flags = cheap_v(state, new_state, improved, best, eps_a,
                                 1.0)
                 flags = [np.asarray(f) for f in flags]
@@ -855,6 +1034,12 @@ def _solve_restarts(key, x, k, *, m, user_m, variant, metric, strategy,
         report.timer.record(time.perf_counter() - t0)
 
         improved_h = np.asarray(improved)
+        if stel is not None:
+            stel.sweep(sweep, t0_ns, time.perf_counter_ns(),
+                       active & improved_h)
+            per = per_slot.pop("per", None)
+            if per is not None:
+                stel.pruned_stats(per)
         report.sweep_log.append({
             "sweep": sweep,
             "active": [bool(a) for a in active],
@@ -894,4 +1079,5 @@ def _solve_restarts(key, x, k, *, m, user_m, variant, metric, strategy,
     report.election = {"best_restart": r,
                        "eval_objectives": [float(v) for v in
                                            np.asarray(evals)]}
+    _finish_tel(stel, report, solve_t0, n=n, k=k, restarts=restarts)
     return res, batch, report

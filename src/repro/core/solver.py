@@ -480,6 +480,7 @@ def one_batch_pam(
     ckpt_every: int = 1,
     resume: str = "auto",
     return_report: bool = False,
+    telemetry="off",
     init_idx: jnp.ndarray | None = None,
 ) -> tuple[SolveResult, sampling.Batch]:
     """End-to-end OneBatchPAM (Algorithm 1).
@@ -545,6 +546,11 @@ def one_batch_pam(
     gracefully on violations. With ``return_report=True`` the return
     becomes ``(result, batch, report)`` with a
     :class:`runtime.SolveReport` third. Not composed with ``mesh=`` yet.
+
+    ``telemetry`` ("off" | "on" | a ``monitoring.Telemetry``) also
+    routes through the runtime and wires the solve into the metrics
+    registry and span tracer (DESIGN.md §10) — same trajectory, bit for
+    bit; "off" is the untouched jitted path.
     """
     if init_idx is not None:
         if restarts > 1:
@@ -552,7 +558,8 @@ def one_batch_pam(
                 "init_idx warm start and restarts > 1 are mutually "
                 "exclusive: the restart election exists to *choose* an "
                 "init — warm-start a single trajectory instead")
-        if validate != "off" or checkpoint_dir is not None or return_report:
+        if (validate != "off" or checkpoint_dir is not None
+                or return_report or telemetry not in ("off", None, False)):
             raise ValueError(
                 "init_idx is not composed with the fault-tolerant runtime "
                 "yet (the runtime owns its init draw for bitwise resume); "
@@ -563,13 +570,13 @@ def one_batch_pam(
                 f"init_idx must have shape ({k},), got {init_idx.shape}")
 
     robust = (validate != "off" or checkpoint_dir is not None
-              or return_report)
+              or return_report or telemetry not in ("off", None, False))
     if robust:
         if mesh is not None:
             raise ValueError(
                 "the fault-tolerant runtime (validate/checkpoint_dir/"
-                "return_report) is host-side only; mesh= is not composed "
-                "yet — drop mesh or the robustness knobs")
+                "return_report/telemetry) is host-side only; mesh= is not "
+                "composed yet — drop mesh or the robustness knobs")
         from repro.core import runtime
         res, batch, report = runtime.solve_fault_tolerant(
             key, x, k, m=m, variant=variant, metric=metric,
@@ -578,7 +585,7 @@ def one_batch_pam(
             block_dtype=block_dtype, restarts=restarts, eval_m=eval_m,
             prune_m=prune_m, survivor_frac=survivor_frac,
             validate=validate, checkpoint_dir=checkpoint_dir,
-            ckpt_every=ckpt_every, resume=resume)
+            ckpt_every=ckpt_every, resume=resume, telemetry=telemetry)
         return (res, batch, report) if return_report else (res, batch)
 
     n = x.shape[0]

@@ -1,1 +1,18 @@
+"""Observability package: step timing + CSV logs (``metrics``) and the
+unified telemetry substrate (``telemetry``: metrics registry, span
+tracing, profiler hooks, Prometheus exposition — DESIGN.md §10)."""
 from .metrics import CSVLogger, StepTimer  # noqa: F401
+from .telemetry import (  # noqa: F401
+    REGISTRY,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    MetricsServer,
+    SpanTracer,
+    Telemetry,
+    default_telemetry,
+    registry,
+    resolve,
+    start_metrics_server,
+)

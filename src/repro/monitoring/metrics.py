@@ -5,11 +5,17 @@ an EMA envelope, (2) report — flagged steps land in the log for the
 scheduler/operator, (3) recover — checkpoint/restart excludes the slow
 host (launch scripts). This module implements (1) and (2); (3) is the
 checkpoint + launcher path.
+
+The telemetry substrate (registry / spans / exposition) lives in
+``monitoring/telemetry.py`` (DESIGN.md §10); this module keeps the two
+small host-side utilities the solver report and serving engine embed.
 """
 from __future__ import annotations
 
+import collections
 import csv
 import dataclasses
+import os
 import time
 
 
@@ -17,6 +23,17 @@ import time
 class StepTimer:
     """Per-step wall-time tracker: EMA envelope, straggler flags,
     percentile summary (``warmup`` steps excluded — compiles).
+
+    ``window`` bounds the retained history to a ring of the most recent
+    steps (default 4096). A long-running serving process records one
+    step per micro-batch forever; the unbounded list this used to keep
+    was a slow leak — and its percentiles averaged the whole process
+    lifetime, so yesterday's latencies diluted today's regression.
+    **Semantics change:** ``summary()`` percentiles now describe the
+    last ``window`` steps (warmup still excluded while it remains in
+    the ring), and ``count`` is the number of steps *in that window*,
+    not since birth — ``total_recorded`` keeps the lifetime count.
+    ``window=None`` restores the unbounded history.
 
     Not thread-safe: ``record()`` mutates count/ema/history and the
     ``with timer:`` form shares one ``_t0`` slot. Multi-threaded callers
@@ -26,12 +43,26 @@ class StepTimer:
     ema_decay: float = 0.95
     threshold: float = 2.0          # x EMA => straggler
     warmup: int = 3                 # ignore compile steps
+    window: int | None = 4096       # history ring size (None = unbounded)
 
     count: int = 0
     ema: float = 0.0
     stragglers: int = 0
     _t0: float = 0.0
-    history: list = dataclasses.field(default_factory=list)
+    history: collections.deque = None  # built in __post_init__
+
+    def __post_init__(self):
+        if self.window is not None and self.window < 1:
+            raise ValueError(f"window must be >= 1 (or None), got "
+                             f"{self.window}")
+        self.history = collections.deque(self.history or (),
+                                         maxlen=self.window)
+
+    @property
+    def total_recorded(self) -> int:
+        """Lifetime number of recorded steps (``count`` mirrors it; the
+        windowed population size lives in ``summary()['count']``)."""
+        return self.count
 
     def __enter__(self):
         self._t0 = time.perf_counter()
@@ -65,18 +96,22 @@ class StepTimer:
         return flagged
 
     def summary(self) -> dict:
-        """Wall-time percentiles over the recorded steps, warmup
-        excluded when enough post-warmup samples exist (the warmup steps
-        are compile time, which would dominate every percentile).
-        ``count`` is the number of steps the statistics are actually
-        over (it used to report ``self.count`` — warmup included — while
-        p50/p95/mean excluded warmup, so count and percentiles described
-        different populations); ``warmup_excluded`` says how many
-        leading steps were dropped. Keys ``{"count", "warmup_excluded",
-        "p50", "p95", "max", "mean", "stragglers"}`` — consumed by
-        ``runtime.SolveReport`` and the serving engine's stats()."""
-        steady = self.history[self.warmup:] or self.history
-        excluded = len(self.history) - len(steady)
+        """Wall-time percentiles over the retained (windowed) steps,
+        warmup excluded when enough post-warmup samples exist (the
+        warmup steps are compile time, which would dominate every
+        percentile; once the ring has rotated past them they are gone
+        anyway). ``count`` is the number of steps the statistics are
+        actually over; ``warmup_excluded`` says how many leading steps
+        were dropped *from the current window*. Keys ``{"count",
+        "warmup_excluded", "p50", "p95", "max", "mean", "stragglers"}``
+        — consumed by ``runtime.SolveReport`` and the serving engine's
+        stats()."""
+        hist = list(self.history)
+        # Warmup samples still in the ring: the first `warmup` records
+        # ever made, minus however many the ring has already evicted.
+        in_window = max(0, self.warmup - (self.count - len(hist)))
+        steady = hist[in_window:] or hist
+        excluded = len(hist) - len(steady)
         if not steady:
             return {"count": 0, "warmup_excluded": 0, "p50": 0.0,
                     "p95": 0.0, "max": 0.0, "mean": 0.0,
@@ -93,7 +128,7 @@ class StepTimer:
 
 
 class CSVLogger:
-    """Append-only CSV with real quoting and durable writes.
+    """Append-only CSV with real quoting, durable writes, and rotation.
 
     The former implementation joined raw ``str(value)`` with commas — a
     logged value containing a comma or newline silently sheared every
@@ -102,19 +137,72 @@ class CSVLogger:
     quotes per RFC 4180, one handle stays open (``newline=""`` so the
     writer controls line endings), and every row is flushed to the OS on
     write. Usable as a context manager; ``close()`` is idempotent.
+
+    **Append semantics** (``mode="a"``, the default): an existing log
+    whose header line matches ``fields`` is continued, not truncated —
+    the old ``mode="w"`` behaviour meant a snapshot-resumed serving
+    process (``snapshot_resume="auto"``, DESIGN.md §9a) wiped its own
+    pre-kill log on reboot. A header mismatch (schema drift) rotates
+    the old file aside rather than interleaving two schemas; an empty
+    or fresh file gets the header written. ``mode="w"`` keeps the
+    explicit truncate-on-open for run-scoped logs.
+
+    **Rotation** (``max_bytes``): when the file exceeds ``max_bytes``
+    after a write, it is closed, renamed to ``path.1`` (existing
+    backups shift up to ``path.{backups}``; the oldest falls off), and
+    a fresh file with the header takes its place — a serving process
+    can log forever on bounded disk.
     """
 
-    def __init__(self, path: str, fields):
+    def __init__(self, path: str, fields, *, mode: str = "a",
+                 max_bytes: int | None = None, backups: int = 1):
+        if mode not in ("a", "w"):
+            raise ValueError(f"mode must be 'a' or 'w', got {mode!r}")
+        if max_bytes is not None and max_bytes < 1:
+            raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
+        if backups < 1:
+            raise ValueError(f"backups must be >= 1, got {backups}")
         self.path = path
         self.fields = list(fields)
-        self._f = open(path, "w", newline="")
+        self.max_bytes = max_bytes
+        self.backups = int(backups)
+        self.rotations = 0
+        if mode == "a" and self._existing_header_mismatch():
+            self._rotate_files()          # schema drift: old log aside
+        self._open(mode)
+
+    def _existing_header_mismatch(self) -> bool:
+        try:
+            with open(self.path, newline="") as f:
+                head = next(csv.reader(f), None)
+        except OSError:
+            return False
+        return head is not None and head != self.fields
+
+    def _open(self, mode: str) -> None:
+        self._f = open(self.path, mode, newline="")
         self._w = csv.writer(self._f)
-        self._w.writerow(self.fields)
-        self._f.flush()
+        if mode == "w" or self._f.tell() == 0:
+            self._w.writerow(self.fields)
+            self._f.flush()
+
+    def _rotate_files(self) -> None:
+        for i in range(self.backups, 1, -1):
+            src = f"{self.path}.{i - 1}"
+            if os.path.exists(src):
+                os.replace(src, f"{self.path}.{i}")
+        if os.path.exists(self.path):
+            os.replace(self.path, f"{self.path}.1")
 
     def log(self, **kw):
         self._w.writerow([kw.get(k, "") for k in self.fields])
         self._f.flush()
+        if (self.max_bytes is not None
+                and self._f.tell() > self.max_bytes):
+            self._f.close()
+            self._rotate_files()
+            self.rotations += 1
+            self._open("w")
 
     def close(self):
         if self._f is not None:

@@ -1,0 +1,618 @@
+"""Unified telemetry: metrics registry, span tracing, profiler hooks,
+Prometheus exposition (DESIGN.md §10).
+
+One instrumentation substrate answers "where did the microseconds go"
+across the solve runtime (sweeps, checkpoints, guard firings), the
+pruned sweep's pruning effectiveness, and the serving engine (per-micro-
+batch latency, quarantines, drift, refits, breaker transitions) —
+without perturbing the bitwise-pinned jitted hot paths. Four pieces,
+zero dependencies beyond the stdlib (``jax`` is imported lazily and only
+for the opt-in profiler hooks):
+
+  * **Metrics registry** — named :class:`Counter` / :class:`Gauge` /
+    :class:`Histogram` primitives with label support, get-or-create
+    through a :class:`MetricsRegistry` (process-wide default:
+    :func:`registry`). Every mutation is lock-protected; concurrent
+    ``inc()`` from serving threads cannot lose updates
+    (tests/test_monitoring.py races it).
+  * **Span tracing** — :class:`SpanTracer` nestable context-manager
+    spans on the monotonic clock, buffered as Chrome trace events
+    (:meth:`SpanTracer.write_chrome_trace` loads in Perfetto /
+    chrome://tracing) and optionally streamed to a durable JSONL event
+    log. The trace export reuses the ``checkpoint/`` discipline: write
+    to ``path.tmp``, fsync, atomic rename, fsync the directory — a
+    killed exporter can never leave a torn trace where a valid one
+    stood. The event buffer is a bounded ring (``max_events``) with a
+    drop counter, so a long-running serving process cannot leak.
+  * **Profiler hooks** — an opt-in ``profile_dir=`` on
+    :class:`Telemetry` wraps hot calls in ``jax.profiler``
+    trace annotations (:meth:`Telemetry.annotate`) and fences with
+    ``block_until_ready`` (:meth:`Telemetry.fence`) *in profile mode
+    only* — with profiling off both are free no-ops, so the pinned
+    paths never gain a device sync they didn't have.
+  * **Prometheus exposition** — :meth:`MetricsRegistry.render_prometheus`
+    emits the text format (``# HELP`` / ``# TYPE`` / samples;
+    histograms as cumulative ``_bucket{le=}`` + ``_sum`` + ``_count``),
+    and :func:`start_metrics_server` serves it from a stdlib
+    ``ThreadingHTTPServer`` on ``GET /metrics``.
+
+The overhead contract: ``telemetry="off"`` resolves to ``None``
+(:func:`resolve`), so instrumented call sites guard with one ``is not
+None`` check and the off path stays the untouched jitted path —
+pinned absolutely by the ``telemetry_overhead_vs_off <= 1.5x`` bench
+gate (benchmarks/kernel_bench.py, benchmarks/serving_bench.py,
+tools/bench_compare.py vs BENCH_PR10.json).
+"""
+from __future__ import annotations
+
+import bisect
+import collections
+import contextlib
+import http.server
+import io
+import json
+import math
+import os
+import re
+import threading
+import time
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_LABEL_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+
+
+def _check_name(name: str) -> str:
+    if not _NAME_RE.match(name):
+        raise ValueError(
+            f"invalid metric name {name!r} (prometheus names match "
+            "[a-zA-Z_:][a-zA-Z0-9_:]*)")
+    return name
+
+
+def _labelkey(labels: dict) -> tuple:
+    for k in labels:
+        if not _LABEL_RE.match(k):
+            raise ValueError(f"invalid label name {k!r}")
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+def _escape(v: str) -> str:
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _fmt_labels(key: tuple, extra: tuple = ()) -> str:
+    items = list(key) + list(extra)
+    if not items:
+        return ""
+    return "{" + ",".join(f'{k}="{_escape(v)}"' for k, v in items) + "}"
+
+
+def _fmt_value(v: float) -> str:
+    if v == math.inf:
+        return "+Inf"
+    if v == -math.inf:
+        return "-Inf"
+    f = float(v)
+    return repr(int(f)) if f.is_integer() and abs(f) < 1e15 else repr(f)
+
+
+class _Metric:
+    """Shared label-series plumbing. Subclasses define the per-series
+    state and the exposition lines."""
+
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = _check_name(name)
+        self.help = help
+        self._lock = threading.Lock()
+        self._series: dict[tuple, object] = {}
+
+    def labelsets(self) -> list[dict]:
+        with self._lock:
+            return [dict(k) for k in self._series]
+
+
+class Counter(_Metric):
+    """Monotonic counter. ``inc(amount, **labels)``; negative increments
+    raise (that is what a Gauge is for)."""
+
+    kind = "counter"
+
+    def inc(self, amount: float = 1.0, **labels) -> None:
+        if amount < 0:
+            raise ValueError(
+                f"counter {self.name} cannot decrease (inc {amount})")
+        key = _labelkey(labels)
+        with self._lock:
+            self._series[key] = self._series.get(key, 0.0) + amount
+
+    def value(self, **labels) -> float:
+        with self._lock:
+            return float(self._series.get(_labelkey(labels), 0.0))
+
+    def total(self) -> float:
+        """Sum over every label series."""
+        with self._lock:
+            return float(sum(self._series.values()))
+
+    def _render(self, out: io.StringIO) -> None:
+        with self._lock:
+            for key, v in sorted(self._series.items()):
+                out.write(f"{self.name}{_fmt_labels(key)} {_fmt_value(v)}\n")
+
+
+class Gauge(_Metric):
+    """Last-write-wins instantaneous value; ``set``/``add``."""
+
+    kind = "gauge"
+
+    def set(self, value: float, **labels) -> None:
+        key = _labelkey(labels)
+        with self._lock:
+            self._series[key] = float(value)
+
+    def add(self, amount: float, **labels) -> None:
+        key = _labelkey(labels)
+        with self._lock:
+            self._series[key] = self._series.get(key, 0.0) + amount
+
+    def value(self, **labels) -> float:
+        with self._lock:
+            return float(self._series.get(_labelkey(labels), 0.0))
+
+    def _render(self, out: io.StringIO) -> None:
+        with self._lock:
+            for key, v in sorted(self._series.items()):
+                out.write(f"{self.name}{_fmt_labels(key)} {_fmt_value(v)}\n")
+
+
+#: Default histogram buckets: wall-clock seconds from 10 us to 60 s —
+#: covers a micro-batch kernel call through a whole checkpointed solve.
+DEFAULT_BUCKETS = (1e-5, 1e-4, 1e-3, 5e-3, 0.01, 0.05, 0.1, 0.5, 1.0,
+                   5.0, 10.0, 60.0)
+
+
+class _HistState:
+    __slots__ = ("buckets", "counts", "sum", "count", "min", "max")
+
+    def __init__(self, buckets: tuple):
+        self.buckets = buckets
+        self.counts = [0] * (len(buckets) + 1)  # +1: the +Inf bucket
+        self.sum = 0.0
+        self.count = 0
+        self.min = math.inf
+        self.max = -math.inf
+
+
+class Histogram(_Metric):
+    """Fixed-bucket histogram (cumulative ``le`` exposition). The bucket
+    layout is per-metric, set at creation; ``observe`` is O(log B)."""
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "",
+                 buckets: tuple | None = None):
+        super().__init__(name, help)
+        bk = tuple(sorted(float(b) for b in (buckets or DEFAULT_BUCKETS)))
+        if not bk:
+            raise ValueError(f"histogram {name} needs >= 1 bucket bound")
+        self.buckets = bk
+
+    def observe(self, value: float, **labels) -> None:
+        v = float(value)
+        key = _labelkey(labels)
+        with self._lock:
+            st = self._series.get(key)
+            if st is None:
+                st = self._series[key] = _HistState(self.buckets)
+            st.counts[bisect.bisect_left(st.buckets, v)] += 1
+            st.sum += v
+            st.count += 1
+            st.min = min(st.min, v)
+            st.max = max(st.max, v)
+
+    def summary(self, **labels) -> dict:
+        """{"count", "sum", "mean", "min", "max"} for one label set
+        (zeros when nothing was observed)."""
+        with self._lock:
+            st = self._series.get(_labelkey(labels))
+            if st is None or st.count == 0:
+                return {"count": 0, "sum": 0.0, "mean": 0.0,
+                        "min": 0.0, "max": 0.0}
+            return {"count": st.count, "sum": st.sum,
+                    "mean": st.sum / st.count, "min": st.min,
+                    "max": st.max}
+
+    def _render(self, out: io.StringIO) -> None:
+        with self._lock:
+            for key, st in sorted(self._series.items()):
+                cum = 0
+                for bound, c in zip(st.buckets, st.counts):
+                    cum += c
+                    le = (("le", _fmt_value(bound)),)
+                    out.write(f"{self.name}_bucket{_fmt_labels(key, le)} "
+                              f"{cum}\n")
+                out.write(f"{self.name}_bucket"
+                          f"{_fmt_labels(key, (('le', '+Inf'),))} "
+                          f"{st.count}\n")
+                out.write(f"{self.name}_sum{_fmt_labels(key)} "
+                          f"{_fmt_value(st.sum)}\n")
+                out.write(f"{self.name}_count{_fmt_labels(key)} "
+                          f"{st.count}\n")
+
+
+class MetricsRegistry:
+    """Get-or-create home for named metrics. Re-requesting a name
+    returns the existing instance; re-requesting it as a different kind
+    raises (a counter silently shadowing a histogram is the classic
+    split-brain dashboard bug)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._metrics: dict[str, _Metric] = {}
+
+    def _get_or_create(self, cls, name: str, help: str, **kw) -> _Metric:
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = self._metrics[name] = cls(name, help, **kw)
+            elif not isinstance(m, cls):
+                raise ValueError(
+                    f"metric {name!r} already registered as {m.kind}, "
+                    f"requested as {cls.kind}")
+            return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get_or_create(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get_or_create(Gauge, name, help)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: tuple | None = None) -> Histogram:
+        return self._get_or_create(Histogram, name, help, buckets=buckets)
+
+    def metrics(self) -> dict[str, _Metric]:
+        with self._lock:
+            return dict(self._metrics)
+
+    def reset(self) -> None:
+        """Drop every metric (tests; a process-wide registry accretes)."""
+        with self._lock:
+            self._metrics.clear()
+
+    def render_prometheus(self) -> str:
+        """Prometheus text exposition format 0.0.4 of every metric."""
+        out = io.StringIO()
+        for name, m in sorted(self.metrics().items()):
+            if m.help:
+                out.write(f"# HELP {name} {_escape(m.help)}\n")
+            out.write(f"# TYPE {name} {m.kind}\n")
+            m._render(out)
+        return out.getvalue()
+
+
+#: Process-wide default registry (what "telemetry='on'" call sites and
+#: the scrape endpoint read unless handed their own).
+REGISTRY = MetricsRegistry()
+
+
+def registry() -> MetricsRegistry:
+    return REGISTRY
+
+
+# ------------------------------------------------------------- tracing --
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+class _Span:
+    __slots__ = ("tracer", "name", "args", "t0")
+
+    def __init__(self, tracer, name, args):
+        self.tracer, self.name, self.args = tracer, name, args
+
+    def __enter__(self):
+        self.t0 = time.perf_counter_ns()
+        return self
+
+    def __exit__(self, *exc):
+        self.tracer._finish(self.name, self.t0,
+                            time.perf_counter_ns(), self.args)
+
+
+class SpanTracer:
+    """Nestable wall-time spans -> Chrome trace events + durable JSONL.
+
+    ``span(name, **attrs)`` is a context manager; nesting is implicit in
+    the Chrome "X" (complete) event model — the viewer stacks events by
+    (tid, ts, dur) containment, so no explicit parent ids are needed and
+    spans from concurrent threads land on separate tracks. Timestamps
+    come from ``perf_counter_ns`` (monotonic, ns) rebased to the tracer's
+    birth so traces start near t=0.
+
+    The in-memory buffer is a ``max_events`` ring: a long-running
+    serving process keeps the *newest* events and counts what it
+    dropped (``dropped``), surfaced in the trace metadata. With
+    ``jsonl_path=`` every completed span is ALSO appended as one JSON
+    line, flushed per event and fsync'd every ``fsync_every`` events
+    and on ``close()`` — the durable log survives a SIGKILL mid-run
+    (the last un-fsync'd tail is the only exposure, exactly the
+    checkpoint machinery's contract for non-fsync saves).
+    """
+
+    def __init__(self, *, max_events: int = 100_000,
+                 jsonl_path: str | None = None, fsync_every: int = 256):
+        if max_events < 1:
+            raise ValueError(f"max_events must be >= 1, got {max_events}")
+        self._lock = threading.Lock()
+        self._events: collections.deque = collections.deque(
+            maxlen=int(max_events))
+        self.dropped = 0
+        self._epoch_ns = time.perf_counter_ns()
+        self.jsonl_path = jsonl_path
+        self._fsync_every = max(1, int(fsync_every))
+        self._jsonl_f = None
+        self._since_fsync = 0
+        if jsonl_path is not None:
+            d = os.path.dirname(jsonl_path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            self._jsonl_f = open(jsonl_path, "a")
+
+    def span(self, name: str, **attrs) -> _Span:
+        return _Span(self, name, attrs)
+
+    def instant(self, name: str, **attrs) -> None:
+        """A zero-duration marker event (guard firings, installs)."""
+        now = time.perf_counter_ns()
+        self._emit({"name": name, "ph": "i", "s": "t",
+                    "ts": (now - self._epoch_ns) / 1e3,
+                    "pid": os.getpid(),
+                    "tid": threading.get_ident(),
+                    "args": attrs})
+
+    def complete(self, name: str, t0_ns: int, t1_ns: int,
+                 **attrs) -> None:
+        """Record an already-measured span from a ``perf_counter_ns``
+        pair — for host loops that already time their own sections and
+        must not restructure into ``with`` blocks."""
+        self._finish(name, t0_ns, t1_ns, attrs)
+
+    def _finish(self, name: str, t0_ns: int, t1_ns: int,
+                args: dict) -> None:
+        self._emit({"name": name, "ph": "X",
+                    "ts": (t0_ns - self._epoch_ns) / 1e3,
+                    "dur": (t1_ns - t0_ns) / 1e3,
+                    "pid": os.getpid(),
+                    "tid": threading.get_ident(),
+                    "args": args})
+
+    def _emit(self, ev: dict) -> None:
+        with self._lock:
+            if len(self._events) == self._events.maxlen:
+                self.dropped += 1
+            self._events.append(ev)
+            if self._jsonl_f is not None:
+                self._jsonl_f.write(json.dumps(ev) + "\n")
+                self._jsonl_f.flush()
+                self._since_fsync += 1
+                if self._since_fsync >= self._fsync_every:
+                    os.fsync(self._jsonl_f.fileno())
+                    self._since_fsync = 0
+
+    def events(self) -> list[dict]:
+        with self._lock:
+            return list(self._events)
+
+    def write_chrome_trace(self, path: str) -> str:
+        """Export the buffer as Chrome trace-event JSON, atomically:
+        tmp write + file fsync + rename + dir fsync (the ``checkpoint/``
+        discipline) — a concurrent kill leaves either the old complete
+        trace or the new one, never a torn file. Returns ``path``."""
+        doc = {"traceEvents": self.events(),
+               "displayTimeUnit": "ms",
+               "otherData": {"dropped_events": self.dropped}}
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        _fsync_dir(d)
+        return path
+
+    def close(self) -> None:
+        with self._lock:
+            if self._jsonl_f is not None:
+                try:
+                    self._jsonl_f.flush()
+                    os.fsync(self._jsonl_f.fileno())
+                finally:
+                    self._jsonl_f.close()
+                    self._jsonl_f = None
+
+
+# ------------------------------------------------------------- facade --
+
+class Telemetry:
+    """One handle bundling a registry, a tracer, and the profiler mode.
+
+    Instrumented subsystems (``core/runtime.py``,
+    ``serving/engine.py``) accept ``telemetry="off" | "on" | Telemetry``
+    and resolve it through :func:`resolve`: ``"off"`` -> ``None`` (the
+    untouched hot path, one ``is not None`` guard), ``"on"`` -> the
+    process-wide :func:`default_telemetry`, an instance -> itself (tests
+    and benches isolate with their own registry/tracer).
+
+    ``profile_dir=`` is the opt-in profiler mode: :meth:`annotate` wraps
+    hot calls in ``jax.profiler.TraceAnnotation`` so kernel launches are
+    attributed to spans in the device profile, and :meth:`fence` inserts
+    the ``block_until_ready`` that makes host span timings mean device
+    work — both are no-ops when ``profile_dir`` is None, so profiling
+    cost is strictly opt-in. :meth:`start_profile` / :meth:`stop_profile`
+    bracket a ``jax.profiler`` trace into ``profile_dir``.
+    """
+
+    def __init__(self, registry: MetricsRegistry | None = None,
+                 tracer: SpanTracer | None = None, *,
+                 profile_dir: str | None = None):
+        self.registry = registry if registry is not None else REGISTRY
+        self.tracer = tracer if tracer is not None else SpanTracer()
+        self.profile_dir = profile_dir
+        self._profiling = False
+
+    # metrics passthrough -------------------------------------------------
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self.registry.counter(name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self.registry.gauge(name, help)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: tuple | None = None) -> Histogram:
+        return self.registry.histogram(name, help, buckets=buckets)
+
+    # tracing passthrough -------------------------------------------------
+    def span(self, name: str, **attrs) -> _Span:
+        return self.tracer.span(name, **attrs)
+
+    def instant(self, name: str, **attrs) -> None:
+        self.tracer.instant(name, **attrs)
+
+    def complete(self, name: str, t0_ns: int, t1_ns: int,
+                 **attrs) -> None:
+        self.tracer.complete(name, t0_ns, t1_ns, **attrs)
+
+    def write_chrome_trace(self, path: str) -> str:
+        return self.tracer.write_chrome_trace(path)
+
+    def render_prometheus(self) -> str:
+        return self.registry.render_prometheus()
+
+    # profiler hooks ------------------------------------------------------
+    def annotate(self, name: str):
+        """``jax.profiler.TraceAnnotation`` in profile mode, else a free
+        nullcontext — hot paths call this unconditionally."""
+        if self.profile_dir is None:
+            return contextlib.nullcontext()
+        import jax
+        return jax.profiler.TraceAnnotation(name)
+
+    def fence(self, value):
+        """``block_until_ready`` in profile mode ONLY (so span wall
+        times bound device work); identity otherwise — never a sync the
+        unprofiled path didn't have. Returns ``value``."""
+        if self.profile_dir is not None:
+            import jax
+            jax.block_until_ready(value)
+        return value
+
+    def start_profile(self) -> None:
+        if self.profile_dir is None:
+            raise ValueError("pass profile_dir= to enable profiling")
+        if not self._profiling:
+            import jax
+            os.makedirs(self.profile_dir, exist_ok=True)
+            jax.profiler.start_trace(self.profile_dir)
+            self._profiling = True
+
+    def stop_profile(self) -> None:
+        if self._profiling:
+            import jax
+            jax.profiler.stop_trace()
+            self._profiling = False
+
+    def close(self) -> None:
+        self.stop_profile()
+        self.tracer.close()
+
+
+_DEFAULT_LOCK = threading.Lock()
+_DEFAULT: Telemetry | None = None
+
+
+def default_telemetry() -> Telemetry:
+    """The process-wide handle ``telemetry="on"`` resolves to: the
+    global REGISTRY plus one shared tracer."""
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        if _DEFAULT is None:
+            _DEFAULT = Telemetry(REGISTRY)
+        return _DEFAULT
+
+
+def resolve(telemetry) -> Telemetry | None:
+    """Normalise a ``telemetry=`` knob: ``"off"``/``None``/``False`` ->
+    None (call sites skip every telemetry branch — the untouched path),
+    ``"on"``/``True`` -> :func:`default_telemetry`, a :class:`Telemetry`
+    -> itself."""
+    if telemetry is None or telemetry is False or telemetry == "off":
+        return None
+    if telemetry is True or telemetry == "on":
+        return default_telemetry()
+    if isinstance(telemetry, Telemetry):
+        return telemetry
+    raise ValueError(
+        f"telemetry must be 'off', 'on', or a Telemetry instance; got "
+        f"{telemetry!r}")
+
+
+# ----------------------------------------------------------- exposition --
+
+class _ScrapeHandler(http.server.BaseHTTPRequestHandler):
+    def do_GET(self):  # noqa: N802 — BaseHTTPRequestHandler API
+        if self.path.split("?")[0] not in ("/metrics", "/"):
+            self.send_error(404, "scrape /metrics")
+            return
+        body = self.server._registry.render_prometheus().encode()
+        self.send_response(200)
+        self.send_header("Content-Type",
+                         "text/plain; version=0.0.4; charset=utf-8")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def log_message(self, *args):  # silence per-scrape stderr noise
+        pass
+
+
+class MetricsServer:
+    """Stdlib Prometheus scrape endpoint; ``port=0`` binds an ephemeral
+    port (read it back from ``.port``). Runs on a daemon thread; call
+    :meth:`close` to release the socket deterministically."""
+
+    def __init__(self, registry: MetricsRegistry | None = None, *,
+                 host: str = "127.0.0.1", port: int = 0):
+        self._httpd = http.server.ThreadingHTTPServer(
+            (host, port), _ScrapeHandler)
+        self._httpd._registry = (registry if registry is not None
+                                 else REGISTRY)
+        self.host, self.port = self._httpd.server_address[:2]
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, name="telemetry-scrape",
+            daemon=True)
+        self._thread.start()
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}/metrics"
+
+    def close(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread.join(timeout=5.0)
+
+
+def start_metrics_server(registry: MetricsRegistry | None = None, *,
+                         host: str = "127.0.0.1",
+                         port: int = 0) -> MetricsServer:
+    return MetricsServer(registry, host=host, port=port)

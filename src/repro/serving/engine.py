@@ -71,8 +71,92 @@ warnings.filterwarnings(
 
 from repro.core.selector import MedoidSelector
 from repro.kernels import metrics, ops
+from repro.monitoring import telemetry as telemetry_mod
 from repro.monitoring.metrics import StepTimer
 from repro.serving import guards
+
+
+class _ServingTelemetry:
+    """Engine-side telemetry bundle (DESIGN.md §10): the serving series
+    the acceptance scrape must contain — per-micro-batch latency,
+    quarantine counts, the drift EMA gauge, refit attempt/outcome
+    events, breaker state transitions, snapshot persistence. Every hook
+    is host bookkeeping the engine calls only when ``telemetry`` is on;
+    with ``"off"`` no instance exists and the serve path is the
+    untouched PR 8/9 code (``telemetry_overhead_vs_off`` bench gate).
+    Metric mutations take the metric's own lock, never the engine lock —
+    hooks may be called from serving and refit threads concurrently."""
+
+    _BREAKER_STATE = {"closed": 0.0, "half_open": 1.0, "open": 2.0}
+
+    def __init__(self, tel: telemetry_mod.Telemetry):
+        self.tel = tel
+        r = tel.registry
+        self.h_batch = r.histogram(
+            "serving_micro_batch_seconds",
+            "wall seconds per jitted micro-batch (submit+compute+readback)")
+        self.c_queries = r.counter("serving_queries_total",
+                                   "admitted query rows served")
+        self.c_quarantined = r.counter(
+            "serving_quarantined_rows_total",
+            "query rows quarantined at admission (non-finite)")
+        self.c_refits = r.counter("serving_refit_attempts_total",
+                                  "refit attempts, by outcome")
+        self.c_breaker = r.counter(
+            "serving_breaker_transitions_total",
+            "refit circuit-breaker state transitions")
+        self.c_persisted = r.counter("serving_snapshots_persisted_total",
+                                     "medoid generations persisted to disk")
+        self.c_recoveries = r.counter(
+            "serving_snapshot_recoveries_total",
+            "poisoned-snapshot recoveries (rebuild or disk reload)")
+        self.g_drift = r.gauge("serving_drift_ema",
+                               "EMA of per-batch assignment objective")
+        self.g_ratio = r.gauge(
+            "serving_drift_ratio",
+            "drift EMA / fit-time objective (>threshold arms a refit)")
+        self.g_version = r.gauge("serving_medoid_version",
+                                 "installed medoid generation")
+        self.g_breaker = r.gauge("serving_breaker_state",
+                                 "refit breaker: 0=closed 1=half_open 2=open")
+
+    def micro_batch(self, t0_ns: int, t1_ns: int, rows: int) -> None:
+        self.h_batch.observe((t1_ns - t0_ns) / 1e9)
+        self.tel.complete("serve/micro_batch", t0_ns, t1_ns, rows=rows)
+
+    def served(self, n: int, drift_ema, drift_ratio: float,
+               version: int) -> None:
+        self.c_queries.inc(n)
+        if drift_ema is not None:
+            self.g_drift.set(drift_ema)
+        self.g_ratio.set(drift_ratio)
+        self.g_version.set(version)
+
+    def quarantined(self, n: int) -> None:
+        self.c_quarantined.inc(n)
+        self.tel.instant("serve/quarantine", rows=n)
+
+    def refit_outcome(self, outcome: str, t0_ns: int,
+                      version: int | None = None) -> None:
+        self.c_refits.inc(outcome=outcome)
+        self.tel.complete("serve/refit", t0_ns, time.perf_counter_ns(),
+                          outcome=outcome,
+                          **({} if version is None else
+                             {"version": version}))
+        if version is not None:
+            self.g_version.set(version)
+
+    def breaker(self, old: str, new: str) -> None:
+        self.c_breaker.inc(from_state=old, to_state=new)
+        self.g_breaker.set(self._BREAKER_STATE.get(new, -1.0))
+        self.tel.instant("serve/breaker_transition", old=old, new=new)
+
+    def snapshot_persisted(self) -> None:
+        self.c_persisted.inc()
+
+    def snapshot_recovery(self) -> None:
+        self.c_recoveries.inc()
+        self.tel.instant("serve/snapshot_recovery")
 
 
 class _Medoids:
@@ -149,6 +233,16 @@ class AssignmentEngine:
     generation (atomic rename + fsync, ``snapshot_keep`` newest kept,
     config-fingerprinted); ``snapshot_resume="auto"`` re-installs the
     newest on-disk generation at boot.
+
+    Observability: ``telemetry="on"`` (or a ``monitoring.Telemetry``)
+    wires serving into the metrics registry + span tracer (DESIGN.md
+    §10) — micro-batch latency histogram, quarantine / refit-outcome /
+    breaker-transition counters, drift and medoid-version gauges —
+    with :meth:`serve_metrics` exposing a Prometheus scrape endpoint
+    and :meth:`write_trace` an atomic Chrome trace export. The default
+    ``"off"`` resolves to no telemetry object at all: the serve path is
+    the untouched PR 8/9 code, pinned by the
+    ``telemetry_overhead_vs_off`` bench gate.
     """
 
     def __init__(self, selector: MedoidSelector, *, micro_batch: int = 4096,
@@ -164,6 +258,7 @@ class AssignmentEngine:
                  breaker_cooldown: float = 30.0,
                  snapshot_dir: str | None = None, snapshot_keep: int = 4,
                  snapshot_resume: str = "auto",
+                 telemetry="off",
                  _clock=time.monotonic):
         if selector.medoids_ is None:
             raise RuntimeError("AssignmentEngine needs a *fitted* selector "
@@ -217,10 +312,18 @@ class AssignmentEngine:
         self.last_refit_error: BaseException | None = None
         self.last_snapshot_error: BaseException | None = None
         self._drift_ema: float | None = None
+        tel = telemetry_mod.resolve(telemetry)
+        self._stel = (_ServingTelemetry(tel) if tel is not None else None)
+        self._metrics_server = None
+        if self._stel is not None:
+            self._stel.g_version.set(self._model.version)
+            self._stel.g_breaker.set(0.0)
         self._breaker = guards.RefitBreaker(
             backoff=refit_backoff, backoff_cap=refit_backoff_cap,
             threshold=breaker_threshold, cooldown=breaker_cooldown,
-            clock=_clock)
+            clock=_clock,
+            on_transition=(self._stel.breaker if self._stel is not None
+                           else None))
         self._window = (guards.ReservoirWindow(
             self.refit_window, self.p, mode=window_mode,
             seed=int(selector.seed))
@@ -297,6 +400,8 @@ class AssignmentEngine:
                 "the feed or serve with on_invalid='quarantine'")
         with self._lock:
             self.quarantined += n_bad
+        if self._stel is not None:
+            self._stel.quarantined(n_bad)
         labels = np.full((n,), guards.QUARANTINE_LABEL, np.int32)
         d1 = np.full((n,), np.nan, np.float32)
         qf = q[ok]
@@ -356,6 +461,8 @@ class AssignmentEngine:
                 chunk = np.concatenate(
                     [chunk, np.zeros((mb - rows, self.p), np.float32)])
             t0 = time.perf_counter()
+            t0_ns = (time.perf_counter_ns() if self._stel is not None
+                     else 0)
             with warnings.catch_warnings():
                 # re-assert the module filter: pytest (and any
                 # catch_warnings user) resets the global filter list, and
@@ -368,6 +475,9 @@ class AssignmentEngine:
             dt = time.perf_counter() - t0
             with self._lock:                # timer state is host-shared
                 self.timer.record(dt)
+            if self._stel is not None:
+                self._stel.micro_batch(t0_ns, time.perf_counter_ns(),
+                                       rows)
             labels[s:s + rows] = lab[:rows]
             d1[s:s + rows] = dd[:rows]
         return labels, d1
@@ -405,6 +515,9 @@ class AssignmentEngine:
                     and not self.refit_in_flight
                     and self._breaker.allow()):
                 arm = self._window.content()
+        if self._stel is not None:
+            self._stel.served(q_ok.shape[0], self._drift_ema,
+                              self.drift_ratio(), self._model.version)
         if arm is not None:
             self._start_refit(arm)
 
@@ -444,7 +557,9 @@ class AssignmentEngine:
 
     def _start_refit(self, x: np.ndarray) -> None:
         cancel = threading.Event()
-        attempt = {"cancel": cancel, "installed": False, "timed_out": False}
+        attempt = {"cancel": cancel, "installed": False, "timed_out": False,
+                   "t0_ns": (time.perf_counter_ns()
+                             if self._stel is not None else 0)}
         worker = threading.Thread(
             target=self._refit_worker, args=(x, attempt),
             name="assignment-engine-refit", daemon=True)
@@ -483,7 +598,7 @@ class AssignmentEngine:
                 self._record_refit_failure(TimeoutError(
                     f"refit exceeded refit_timeout={self.refit_timeout}s "
                     "and was cancelled (hung worker abandoned; the old "
-                    "generation keeps serving)"))
+                    "generation keeps serving)"), attempt=attempt)
                 return
 
     def _refit_worker(self, x: np.ndarray, attempt: dict) -> None:
@@ -500,6 +615,9 @@ class AssignmentEngine:
             indices = np.asarray(sel.medoid_indices_, np.int32)
             est = float(sel.est_objective_ or 0.0)
             if cancel.is_set():
+                if self._stel is not None and not attempt["timed_out"]:
+                    self._stel.refit_outcome("cancelled",
+                                             attempt["t0_ns"])
                 return                      # killed: old snapshot serves on
             if self._refit_hook is not None:
                 self._refit_hook()
@@ -509,6 +627,9 @@ class AssignmentEngine:
             prepared = spec.prepare(dev) if spec.prepare is not None else dev
             with self._lock:
                 if cancel.is_set():
+                    if self._stel is not None and not attempt["timed_out"]:
+                        self._stel.refit_outcome("cancelled",
+                                                 attempt["t0_ns"])
                     return
                 new = _Medoids(rows=rows, prepared=prepared,
                                indices=indices, est_objective=est,
@@ -523,18 +644,26 @@ class AssignmentEngine:
                 # stale failure stats() used to report forever
                 self._breaker.record_success()
                 attempt["installed"] = True
+            if self._stel is not None:
+                self._stel.refit_outcome("success", attempt["t0_ns"],
+                                         version=new.version)
             self._persist_snapshot(new)     # disk IO outside the lock
         except BaseException as e:          # noqa: BLE001 — report, don't die
             if not cancel.is_set():
                 # an externally-cancelled or timed-out attempt already
                 # has its outcome recorded (or deliberately unrecorded)
-                self._record_refit_failure(e)
+                self._record_refit_failure(e, attempt=attempt)
 
-    def _record_refit_failure(self, e: BaseException) -> None:
+    def _record_refit_failure(self, e: BaseException,
+                              attempt: dict | None = None) -> None:
         with self._lock:
             self.last_refit_error = e
             self.refit_failures += 1
             self._breaker.record_failure()
+        if self._stel is not None:
+            self._stel.refit_outcome(
+                "timeout" if isinstance(e, TimeoutError) else "failure",
+                attempt["t0_ns"] if attempt is not None else 0)
 
     def refit_now(self, x=None, *, wait: bool = True) -> bool:
         """Trigger a refit explicitly (on ``x`` or the query window).
@@ -591,6 +720,8 @@ class AssignmentEngine:
             with self._lock:
                 self.snapshots_persisted += 1
                 self.last_snapshot_error = None
+            if self._stel is not None:
+                self._stel.snapshot_persisted()
         except Exception as e:              # noqa: BLE001
             with self._lock:
                 self.last_snapshot_error = e
@@ -636,6 +767,8 @@ class AssignmentEngine:
                     "collision; bump the version or pass force=True")
             self._model = new
             self._drift_ema = None
+        if self._stel is not None:
+            self._stel.g_version.set(int(version))
         if persist:
             self._persist_snapshot(new)
         return int(version)
@@ -718,6 +851,8 @@ class AssignmentEngine:
                                         cur.est_objective, cur.version)
                 self._model = new
                 self.snapshot_recoveries += 1
+                if self._stel is not None:
+                    self._stel.snapshot_recovery()
                 return new
         if self.snapshot_dir is None:
             raise RuntimeError(
@@ -727,6 +862,8 @@ class AssignmentEngine:
         self.load_snapshot(self.snapshot_dir, force=True)
         with self._lock:
             self.snapshot_recoveries += 1
+            if self._stel is not None:
+                self._stel.snapshot_recovery()
             return self._model
 
     # ------------------------------------------------------------ intro
@@ -768,5 +905,42 @@ class AssignmentEngine:
                     "drift_ratio": self.drift_ratio(),
                     "latency": self.timer.summary()}
 
+    # -------------------------------------------------------- telemetry
+
+    @property
+    def telemetry(self) -> telemetry_mod.Telemetry | None:
+        """The resolved telemetry handle (None when built with
+        ``telemetry="off"``)."""
+        return self._stel.tel if self._stel is not None else None
+
+    def serve_metrics(self, *, host: str = "127.0.0.1",
+                      port: int = 0) -> telemetry_mod.MetricsServer:
+        """Start a Prometheus scrape endpoint over this engine's
+        registry (``GET /metrics``; ``port=0`` binds an ephemeral port —
+        read it back from ``.port``). Requires the engine to have been
+        built with telemetry on; one endpoint per engine, closed with
+        the engine (or explicitly via the returned server)."""
+        if self._stel is None:
+            raise RuntimeError(
+                "serve_metrics() needs telemetry: build the engine with "
+                "telemetry='on' (or a Telemetry instance)")
+        if self._metrics_server is None:
+            self._metrics_server = telemetry_mod.start_metrics_server(
+                self._stel.tel.registry, host=host, port=port)
+        return self._metrics_server
+
+    def write_trace(self, path: str) -> str:
+        """Export the span buffer (micro-batches, refits, breaker and
+        quarantine markers) as Chrome trace-event JSON — atomic write,
+        loads in Perfetto / chrome://tracing. Returns ``path``."""
+        if self._stel is None:
+            raise RuntimeError(
+                "write_trace() needs telemetry: build the engine with "
+                "telemetry='on' (or a Telemetry instance)")
+        return self._stel.tel.write_chrome_trace(path)
+
     def close(self) -> None:
         self.cancel_refit(wait=True)
+        if self._metrics_server is not None:
+            self._metrics_server.close()
+            self._metrics_server = None

@@ -105,13 +105,21 @@ class RefitBreaker:
     bookkeeping lock — the breaker itself is lock-free. ``clock`` is
     injectable (tests drive transitions with a fake clock; production
     uses ``time.monotonic``).
+
+    ``on_transition(old, new)`` is an optional callback fired on every
+    state change, from whichever of the three mutators caused it (so
+    under the same engine lock) — the telemetry hook point: the engine
+    counts ``serving_breaker_transitions_total{from,to}`` through it
+    without the breaker importing the telemetry module. Exceptions it
+    raises propagate (a broken observer should fail loudly in tests,
+    and the engine's hook never raises).
     """
 
     CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
 
     def __init__(self, *, backoff: float = 1.0, backoff_cap: float = 60.0,
                  threshold: int = 3, cooldown: float = 30.0,
-                 clock=time.monotonic):
+                 clock=time.monotonic, on_transition=None):
         if backoff < 0 or backoff_cap < 0 or cooldown < 0:
             raise ValueError("backoff, backoff_cap and cooldown must be >= 0")
         if threshold < 1:
@@ -121,12 +129,21 @@ class RefitBreaker:
         self.threshold = int(threshold)
         self.cooldown = float(cooldown)
         self._clock = clock
+        self.on_transition = on_transition
         self.state = self.CLOSED
         self.consecutive_failures = 0
         self.total_failures = 0
         self._next_allowed = 0.0        # closed-state backoff deadline
         self._opened_at = 0.0
         self._probe_in_flight = False
+
+    def _set_state(self, new: str) -> None:
+        old = self.state
+        if new == old:
+            return
+        self.state = new
+        if self.on_transition is not None:
+            self.on_transition(old, new)
 
     def backoff_delay(self, failures: int) -> float:
         """The deterministic schedule: delay after ``failures``
@@ -143,7 +160,7 @@ class RefitBreaker:
         if self.state == self.OPEN:
             if now - self._opened_at < self.cooldown:
                 return False
-            self.state = self.HALF_OPEN
+            self._set_state(self.HALF_OPEN)
             self._probe_in_flight = False
         if self.state == self.HALF_OPEN:
             if self._probe_in_flight:
@@ -153,7 +170,7 @@ class RefitBreaker:
         return now >= self._next_allowed
 
     def record_success(self) -> None:
-        self.state = self.CLOSED
+        self._set_state(self.CLOSED)
         self.consecutive_failures = 0
         self._next_allowed = 0.0
         self._probe_in_flight = False
@@ -164,7 +181,7 @@ class RefitBreaker:
         self.total_failures += 1
         if (self.state == self.HALF_OPEN
                 or self.consecutive_failures >= self.threshold):
-            self.state = self.OPEN
+            self._set_state(self.OPEN)
             self._opened_at = now
             self._probe_in_flight = False
         else:

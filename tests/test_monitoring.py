@@ -1,0 +1,440 @@
+"""PR 10 monitoring suite: StepTimer ring window, CSVLogger append +
+rotation, and the telemetry substrate (registry, spans, exposition,
+scrape endpoint). The EMA-seeding / straggler / quoting basics live in
+tests/test_fault_tolerance.py; this file owns everything PR 10 added.
+"""
+from __future__ import annotations
+
+import csv
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.monitoring import (
+    CSVLogger,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    SpanTracer,
+    StepTimer,
+    Telemetry,
+    start_metrics_server,
+    telemetry as telemetry_mod,
+)
+
+
+# ------------------------------------------------------- StepTimer ring --
+
+def test_steptimer_history_is_bounded():
+    """The unbounded-list leak: a serving process records one step per
+    micro-batch forever. The ring must cap retention at ``window`` while
+    ``total_recorded`` keeps the lifetime count."""
+    t = StepTimer(warmup=0, window=8)
+    for i in range(100):
+        t.record(float(i))
+    assert len(t.history) == 8
+    assert list(t.history) == [float(i) for i in range(92, 100)]
+    assert t.total_recorded == 100
+    assert t.count == 100
+
+
+def test_steptimer_summary_windows_percentiles():
+    """Percentiles describe the last ``window`` steps, not the process
+    lifetime — an early slow regime must wash out once the ring rotates
+    past it."""
+    t = StepTimer(warmup=0, window=4, threshold=1e9)
+    for _ in range(50):
+        t.record(100.0)              # yesterday's slow regime
+    for _ in range(4):
+        t.record(0.1)                # today's steady state
+    s = t.summary()
+    assert s["count"] == 4
+    assert s["max"] == 0.1           # the 100.0s are gone
+    assert s["p50"] == 0.1
+
+
+def test_steptimer_warmup_interacts_with_window():
+    """Warmup exclusion applies only while the warmup records are still
+    in the ring; after rotation nothing is double-dropped."""
+    t = StepTimer(warmup=2, window=4, threshold=1e9)
+    t.record(9.0)
+    t.record(8.0)                    # both warmup records in the ring
+    t.record(0.1)
+    s = t.summary()
+    assert s["count"] == 1 and s["warmup_excluded"] == 2
+    for _ in range(4):               # rotate the warmup out entirely
+        t.record(0.2)
+    s = t.summary()
+    assert s["count"] == 4 and s["warmup_excluded"] == 0
+    assert s["max"] == 0.2
+
+
+def test_steptimer_unbounded_and_invalid_window():
+    t = StepTimer(warmup=0, window=None)
+    for i in range(5000):
+        t.record(0.1)
+    assert len(t.history) == 5000    # None = historical semantics
+    with pytest.raises(ValueError):
+        StepTimer(window=0)
+
+
+# ------------------------------------------------- CSVLogger lifecycle --
+
+def test_csvlogger_append_resumes_existing_log(tmp_path):
+    """The snapshot-resume truncation bug: mode='a' (default) continues
+    a log whose header matches instead of wiping it."""
+    path = str(tmp_path / "serve.csv")
+    with CSVLogger(path, ["step", "msg"]) as log:
+        log.log(step=1, msg="before kill")
+    with CSVLogger(path, ["step", "msg"]) as log:   # "rebooted" process
+        log.log(step=2, msg="after resume")
+    with open(path, newline="") as f:
+        rows = list(csv.reader(f))
+    assert rows == [["step", "msg"], ["1", "before kill"],
+                    ["2", "after resume"]]
+
+
+def test_csvlogger_mode_w_truncates(tmp_path):
+    path = str(tmp_path / "run.csv")
+    with CSVLogger(path, ["a"], mode="w") as log:
+        log.log(a=1)
+    with CSVLogger(path, ["a"], mode="w") as log:
+        log.log(a=2)
+    with open(path, newline="") as f:
+        rows = list(csv.reader(f))
+    assert rows == [["a"], ["2"]]
+
+
+def test_csvlogger_header_mismatch_rotates_old_schema(tmp_path):
+    """Schema drift must not interleave two field sets in one file: the
+    old log is rotated aside and a fresh one started."""
+    path = str(tmp_path / "log.csv")
+    with CSVLogger(path, ["old_field"]) as log:
+        log.log(old_field="x")
+    with CSVLogger(path, ["new_a", "new_b"]) as log:
+        log.log(new_a=1, new_b=2)
+    with open(path, newline="") as f:
+        assert list(csv.reader(f)) == [["new_a", "new_b"], ["1", "2"]]
+    with open(path + ".1", newline="") as f:
+        assert list(csv.reader(f)) == [["old_field"], ["x"]]
+
+
+def test_csvlogger_size_rotation_bounds_disk(tmp_path):
+    path = str(tmp_path / "log.csv")
+    log = CSVLogger(path, ["v"], max_bytes=200, backups=2)
+    for i in range(200):
+        log.log(v=f"value-{i:04d}")
+    log.close()
+    assert log.rotations >= 2
+    import os
+    assert os.path.getsize(path) <= 200 + 64     # fresh file + header slack
+    # backups exist, each starts with the header, oldest fell off
+    for bak in (path + ".1", path + ".2"):
+        with open(bak, newline="") as f:
+            assert next(csv.reader(f)) == ["v"]
+    assert not os.path.exists(path + ".3")
+    # every surviving row is intact (no sheared half-rows at rotation)
+    rows = []
+    for p in (path + ".2", path + ".1", path):
+        with open(p, newline="") as f:
+            rows += [r for r in list(csv.reader(f))[1:]]
+    assert all(r[0].startswith("value-") for r in rows)
+    assert rows[-1] == ["value-0199"]
+
+
+def test_csvlogger_close_idempotent_and_validates(tmp_path):
+    log = CSVLogger(str(tmp_path / "x.csv"), ["a"])
+    log.close()
+    log.close()                                   # second close: no raise
+    with pytest.raises(ValueError):
+        CSVLogger(str(tmp_path / "y.csv"), ["a"], mode="rb")
+    with pytest.raises(ValueError):
+        CSVLogger(str(tmp_path / "z.csv"), ["a"], max_bytes=0)
+    with pytest.raises(ValueError):
+        CSVLogger(str(tmp_path / "w.csv"), ["a"], backups=0)
+
+
+# ------------------------------------------------------------ registry --
+
+def test_registry_get_or_create_and_kind_conflict():
+    reg = MetricsRegistry()
+    c = reg.counter("requests_total", "help text")
+    assert reg.counter("requests_total") is c
+    with pytest.raises(ValueError):
+        reg.gauge("requests_total")               # kind conflict
+    assert isinstance(reg.gauge("g"), Gauge)
+    assert isinstance(reg.histogram("h"), Histogram)
+
+
+def test_counter_labels_and_monotonicity():
+    reg = MetricsRegistry()
+    c = reg.counter("swaps_total")
+    c.inc(strategy="pruned")
+    c.inc(2.0, strategy="pruned")
+    c.inc(strategy="batched")
+    assert c.value(strategy="pruned") == 3.0
+    assert c.value(strategy="batched") == 1.0
+    assert c.value(strategy="absent") == 0.0
+    assert c.total() == 4.0
+    with pytest.raises(ValueError):
+        c.inc(-1.0)
+    with pytest.raises(ValueError):
+        reg.counter("bad name with spaces")
+    with pytest.raises(ValueError):
+        c.inc(**{"bad-label": "x"})
+
+
+def test_gauge_set_add():
+    g = MetricsRegistry().gauge("drift_ema")
+    g.set(0.5)
+    g.add(0.25)
+    assert g.value() == 0.75
+    g.set(-1.0)                                   # gauges may go negative
+    assert g.value() == -1.0
+
+
+def test_histogram_buckets_and_summary():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", buckets=(0.01, 0.1, 1.0))
+    for v in (0.005, 0.05, 0.5, 5.0):
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 4 and s["min"] == 0.005 and s["max"] == 5.0
+    assert s["mean"] == pytest.approx(5.555 / 4)
+    text = reg.render_prometheus()
+    # cumulative le buckets + the +Inf catch-all
+    assert 'lat_bucket{le="0.01"} 1' in text
+    assert 'lat_bucket{le="0.1"} 2' in text
+    assert 'lat_bucket{le="1"} 3' in text
+    assert 'lat_bucket{le="+Inf"} 4' in text
+    assert "lat_count 4" in text
+
+
+def test_histogram_boundary_lands_in_le_bucket():
+    """Prometheus buckets are upper-inclusive: an observation exactly on
+    a bound counts into that bound's bucket."""
+    reg = MetricsRegistry()
+    h = reg.histogram("b", buckets=(1.0, 2.0))
+    h.observe(1.0)
+    assert 'b_bucket{le="1"} 1' in reg.render_prometheus()
+
+
+def test_render_prometheus_format():
+    reg = MetricsRegistry()
+    c = reg.counter("c_total", 'help with "quotes"')
+    c.inc(3, shard="a\nb")
+    g = reg.gauge("g")
+    g.set(2.5)
+    text = reg.render_prometheus()
+    assert "# TYPE c_total counter\n" in text
+    assert '# HELP c_total help with \\"quotes\\"\n' in text
+    assert 'c_total{shard="a\\nb"} 3\n' in text   # label value escaping
+    assert "# TYPE g gauge\ng 2.5\n" in text
+    reg.reset()
+    assert reg.render_prometheus() == ""
+
+
+def test_counter_multithreaded_race():
+    """The lost-update race: N threads x M increments must land exactly
+    N*M — an unlocked read-modify-write would drop some under the GIL's
+    preemption points."""
+    reg = MetricsRegistry()
+    c = reg.counter("raced_total")
+    n_threads, n_incs = 8, 2000
+
+    def work():
+        for _ in range(n_incs):
+            c.inc(thread="shared")
+
+    threads = [threading.Thread(target=work) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value(thread="shared") == n_threads * n_incs
+
+
+# -------------------------------------------------------------- tracing --
+
+def test_span_nesting_and_attrs():
+    tr = SpanTracer()
+    with tr.span("outer", sweep=1):
+        with tr.span("inner"):
+            pass
+    evs = tr.events()
+    assert [e["name"] for e in evs] == ["inner", "outer"]  # close order
+    outer = evs[1]
+    assert outer["ph"] == "X" and outer["args"] == {"sweep": 1}
+    inner = evs[0]
+    # containment: inner lies within outer on the same track
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-3
+    assert inner["tid"] == outer["tid"]
+
+
+def test_tracer_instant_and_complete():
+    import time
+    tr = SpanTracer()
+    tr.instant("guard_violation", guard="objective_monotone")
+    t0 = time.perf_counter_ns()
+    t1 = t0 + 2_000_000                           # a 2 ms span, post-hoc
+    tr.complete("sweep", t0, t1, sweep=3)
+    inst, comp = tr.events()
+    assert inst["ph"] == "i"
+    assert comp["ph"] == "X" and comp["dur"] == pytest.approx(2000.0)
+    assert comp["args"] == {"sweep": 3}
+
+
+def test_tracer_ring_drops_oldest_and_counts():
+    tr = SpanTracer(max_events=4)
+    for i in range(10):
+        tr.instant(f"e{i}")
+    evs = tr.events()
+    assert len(evs) == 4
+    assert [e["name"] for e in evs] == ["e6", "e7", "e8", "e9"]
+    assert tr.dropped == 6
+    with pytest.raises(ValueError):
+        SpanTracer(max_events=0)
+
+
+def test_chrome_trace_export_is_valid_and_atomic(tmp_path):
+    import os
+    tr = SpanTracer(max_events=8)
+    with tr.span("solve", n=100):
+        tr.instant("checkpoint")
+    path = str(tmp_path / "traces" / "trace.json")
+    assert tr.write_chrome_trace(path) == path
+    doc = json.load(open(path))                   # valid JSON, loadable
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert {"solve", "checkpoint"} <= names
+    assert doc["otherData"]["dropped_events"] == 0
+    assert not os.path.exists(path + ".tmp")      # atomic: no tmp left
+    # re-export overwrites atomically
+    tr.instant("more")
+    tr.write_chrome_trace(path)
+    assert len(json.load(open(path))["traceEvents"]) == 3
+
+
+def test_tracer_jsonl_event_log(tmp_path):
+    path = str(tmp_path / "events.jsonl")
+    tr = SpanTracer(jsonl_path=path, fsync_every=1)
+    with tr.span("a"):
+        pass
+    tr.instant("b")
+    # readable BEFORE close: flushed (and fsync'd) per event
+    lines = [json.loads(ln) for ln in open(path)]
+    assert [e["name"] for e in lines] == ["a", "b"]
+    tr.close()
+    tr.close()                                    # idempotent
+    # a new tracer APPENDS to the same durable log
+    tr2 = SpanTracer(jsonl_path=path)
+    tr2.instant("c")
+    tr2.close()
+    assert len(open(path).readlines()) == 3
+
+
+# ---------------------------------------------------- facade + resolve --
+
+def test_resolve_knob():
+    for off in ("off", None, False):
+        assert telemetry_mod.resolve(off) is None
+    on = telemetry_mod.resolve("on")
+    assert isinstance(on, Telemetry)
+    assert telemetry_mod.resolve(True) is on      # same process handle
+    assert on.registry is telemetry_mod.REGISTRY
+    mine = Telemetry(MetricsRegistry(), SpanTracer())
+    assert telemetry_mod.resolve(mine) is mine
+    with pytest.raises(ValueError):
+        telemetry_mod.resolve("loud")
+
+
+def test_facade_passthrough_and_profiler_noops():
+    tel = Telemetry(MetricsRegistry(), SpanTracer())
+    tel.counter("c_total").inc()
+    tel.gauge("g").set(1.0)
+    tel.histogram("h").observe(0.2)
+    with tel.span("s"):
+        tel.instant("i")
+    assert len(tel.tracer.events()) == 2
+    assert "c_total 1" in tel.render_prometheus()
+    # profile_dir=None: annotate is a free nullcontext, fence is identity
+    with tel.annotate("hot"):
+        pass
+    sentinel = object()
+    assert tel.fence(sentinel) is sentinel
+    with pytest.raises(ValueError):
+        tel.start_profile()                       # needs profile_dir=
+    tel.close()                                   # stop_profile no-op path
+
+
+def test_metrics_server_scrape():
+    reg = MetricsRegistry()
+    reg.counter("scraped_total", "a counter").inc(7)
+    srv = start_metrics_server(reg)
+    try:
+        with urllib.request.urlopen(srv.url, timeout=5) as resp:
+            assert resp.status == 200
+            assert "0.0.4" in resp.headers["Content-Type"]
+            body = resp.read().decode()
+        assert "scraped_total 7" in body
+        assert "# TYPE scraped_total counter" in body
+        # non-metrics path 404s
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(
+                f"http://{srv.host}:{srv.port}/nope", timeout=5)
+    finally:
+        srv.close()
+
+
+def test_solve_report_metrics_are_registry_views():
+    """``SolveReport.metrics`` must be the per-solve registry deltas —
+    equal to the report's own counts, with the trajectory bitwise
+    identical to telemetry-off (telemetry observes, never steers)."""
+    import jax
+    import numpy as np
+
+    from repro.core import runtime, solver
+
+    tel = Telemetry(MetricsRegistry(), SpanTracer())
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((256, 8)).astype(np.float32)
+    key = jax.random.PRNGKey(0)
+    res_on, _, report = runtime.solve_fault_tolerant(
+        key, x, 4, m=32, backend="ref", telemetry=tel)
+    res_off = solver.one_batch_pam(key, x, 4, m=32, backend="ref")[0]
+    assert np.array_equal(np.asarray(res_on.medoid_idx),
+                          np.asarray(res_off.medoid_idx))
+    m = report.metrics
+    assert m is not None
+    assert m["sweeps"] == report.sweeps
+    assert m["swaps"] == report.swaps
+    assert m["fallbacks"] == len(report.fallbacks)
+    assert m["guard_violations"] == len(report.violations)
+    assert m["checkpoint_writes"] == len(report.checkpoint_writes)
+    # registry totals carry the same counts (strategy-labelled)
+    reg = tel.registry
+    assert reg.counter("solve_sweeps_total").value(
+        strategy="batched") == report.sweeps
+    # a second solve accumulates in the registry but the report deltas
+    # stay per-solve
+    _, _, report2 = runtime.solve_fault_tolerant(
+        key, x, 4, m=32, backend="ref", telemetry=tel)
+    assert report2.metrics["sweeps"] == report2.sweeps
+    assert reg.counter("solve_sweeps_total").value(
+        strategy="batched") == report.sweeps + report2.sweeps
+    # the solve emitted its span tree
+    names = {e["name"] for e in tel.tracer.events()}
+    assert {"solve", "solve/sweep"} <= names
+
+
+def test_isolated_instances_do_not_touch_global_registry():
+    """Benches and tests hand the solve their own Telemetry; the
+    process-wide REGISTRY must stay untouched."""
+    before = set(telemetry_mod.REGISTRY.metrics())
+    tel = Telemetry(MetricsRegistry(), SpanTracer())
+    tel.counter("private_total").inc()
+    assert set(telemetry_mod.REGISTRY.metrics()) == before

@@ -1,0 +1,110 @@
+"""End-to-end telemetry smoke (PR 10, CI lane): one checkpointed solve
+plus one serving session with the full telemetry stack on, then check
+every observability artifact the stack promises:
+
+  * the Chrome trace file is valid JSON and carries the solve/sweep,
+    solve/checkpoint_write, and serve/micro_batch spans;
+  * the Prometheus scrape — fetched over HTTP from the engine's
+    ``serve_metrics()`` endpoint, not just rendered in-process —
+    contains the sweep, checkpoint, quarantine, and refit series the
+    acceptance criteria name;
+  * solve trajectory and serving labels are bitwise identical to the
+    telemetry-off paths (telemetry observes, never steers).
+
+Run:  PYTHONPATH=src python tools/telemetry_smoke.py
+Exits non-zero on any failed check (assert), so CI can gate on it.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import tempfile
+import urllib.request
+
+import jax
+import numpy as np
+
+
+def main() -> int:
+    from repro.core import MedoidSelector, solver
+    from repro.monitoring import (MetricsRegistry, SpanTracer, Telemetry)
+    from repro.serving import AssignmentEngine
+
+    tel = Telemetry(MetricsRegistry(), SpanTracer())
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((512, 16)).astype(np.float32)
+    key = jax.random.PRNGKey(0)
+
+    # -- solve: checkpointed, telemetry on, trajectory bitwise-pinned --
+    with tempfile.TemporaryDirectory() as ckdir:
+        res_on, _, report = solver.one_batch_pam(
+            key, x, 4, m=64, backend="ref", telemetry=tel,
+            checkpoint_dir=ckdir, ckpt_every=1, return_report=True)
+    res_off = solver.one_batch_pam(key, x, 4, m=64, backend="ref")[0]
+    assert np.array_equal(np.asarray(res_on.medoid_idx),
+                          np.asarray(res_off.medoid_idx)), \
+        "telemetry='on' steered the solve trajectory"
+    assert report.metrics is not None and report.metrics["sweeps"] > 0
+    assert report.metrics["checkpoint_writes"] > 0
+    print(f"solve OK: {report.metrics['sweeps']} sweeps, "
+          f"{report.metrics['checkpoint_writes']} checkpoint writes")
+
+    # -- serve: quarantine + refit + scrape endpoint ------------------
+    sel = MedoidSelector(k=4, metric="l1", backend="ref")
+    sel.fit(x)
+    eng = AssignmentEngine.from_selector(
+        sel, micro_batch=128, auto_refit=False, validate="cheap",
+        telemetry=tel)
+    eng_off = AssignmentEngine.from_selector(
+        sel, micro_batch=128, auto_refit=False, validate="cheap")
+    q = x[:256].copy()
+    q[7] = np.nan                              # one quarantined row
+    labels, d1 = eng.assign(q)
+    l_off, d_off = eng_off.assign(q)
+    assert np.array_equal(labels, l_off) and np.array_equal(
+        d1, d_off, equal_nan=True), \
+        "telemetry='on' steered the serving labels"
+    assert eng.refit_now(x[256:], wait=True), "smoke refit did not run"
+    print(f"serve OK: {labels.shape[0]} rows served, refit done "
+          f"(medoid v{eng.medoid_version})")
+
+    # -- the HTTP scrape ----------------------------------------------
+    srv = eng.serve_metrics()
+    try:
+        with urllib.request.urlopen(srv.url, timeout=10) as resp:
+            assert resp.status == 200
+            scrape = resp.read().decode()
+    finally:
+        eng.close()
+        eng_off.close()
+    for series in ("solve_sweeps_total", "solve_sweep_seconds",
+                   "solve_checkpoint_writes_total",
+                   "solve_checkpoint_write_seconds",
+                   "serving_quarantined_rows_total",
+                   "serving_refit_attempts_total",
+                   "serving_micro_batch_seconds", "serving_queries_total"):
+        assert series in scrape, f"scrape is missing the {series} series"
+    qline = [ln for ln in scrape.splitlines()
+             if ln.startswith("serving_quarantined_rows_total")][0]
+    assert qline.endswith(" 1"), f"expected 1 quarantined row: {qline!r}"
+    assert 'serving_refit_attempts_total{outcome="success"} 1' in scrape
+    print(f"scrape OK: {len(scrape.splitlines())} exposition lines "
+          f"from {srv.url}")
+
+    # -- the Chrome trace ---------------------------------------------
+    with tempfile.TemporaryDirectory() as td:
+        path = tel.write_chrome_trace(f"{td}/trace.json")
+        doc = json.load(open(path))            # valid, loadable JSON
+    names = {e["name"] for e in doc["traceEvents"]}
+    for span in ("solve", "solve/sweep", "solve/checkpoint_write",
+                 "serve/micro_batch", "serve/refit"):
+        assert span in names, f"trace is missing the {span} span"
+    assert all(e["ph"] in ("X", "i") for e in doc["traceEvents"])
+    print(f"trace OK: {len(doc['traceEvents'])} events, "
+          f"{len(names)} distinct spans")
+    print("telemetry smoke: ALL OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
